@@ -1,0 +1,119 @@
+"""Depthwise-separable conv stack — the paper's §3.3 setting, in miniature.
+
+A MobileNet-style cell chain: [conv1x1 -> BN -> ReLU6 -> DWS3x3 -> BN ->
+ReLU6 -> conv1x1] with planted per-channel weight outliers that reproduce
+the paper's Figure 1 pathology: a handful of filters carry ~20x the weight
+scale of the rest, so a *scalar* (per-tensor) int8 threshold destroys most
+channels' resolution (the paper's MobileNet-v2 collapse to 1.6-8.1% top-1),
+while vector thresholds / cross-layer rescaling recover it.
+
+This model exists for benchmarks only (the LM framework covers the
+production path); it exercises fold_batchnorm (§3.1.2 eqs. 10-11) and
+dws_relu6_rescale (§3.3.1 steps 1-6) end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as Q
+from repro.core.equalization import dws_relu6_rescale
+from repro.core.folding import fold_batchnorm
+
+
+@dataclasses.dataclass
+class DWSNet:
+    """Fig.-1-style pathology: ~3% of filters carry ~100x weight scale —
+    a per-tensor threshold then leaves <2 int8 levels for the other 97%."""
+
+    channels: int = 64
+    depth: int = 3
+    classes: int = 64
+    outlier_frac: float = 0.03
+    outlier_scale: float = 100.0
+
+    def init(self, key):
+        rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 1 << 30)))
+        params = {"cells": []}
+        c = self.channels
+        for i in range(self.depth):
+            dws = rng.normal(size=(3, c)).astype(np.float32) * 0.3
+            # plant outliers: a few channels dominate the weight range
+            n_out = max(1, int(c * self.outlier_frac))
+            idx = rng.choice(c, n_out, replace=False)
+            dws[:, idx] *= self.outlier_scale
+            cell = {
+                "dws_w": jnp.asarray(dws),            # (K=3, C) depthwise 1D
+                "dws_bn": {
+                    "gamma": jnp.asarray(rng.uniform(0.5, 1.5, c), jnp.float32),
+                    "beta": jnp.asarray(rng.normal(size=c) * 0.1, jnp.float32),
+                    "mu": jnp.asarray(rng.normal(size=c) * 0.1, jnp.float32),
+                    "var": jnp.asarray(rng.uniform(0.5, 2.0, c), jnp.float32),
+                },
+                "pw_w": jnp.asarray(
+                    rng.normal(size=(c, c)).astype(np.float32) / np.sqrt(c)),
+            }
+            params["cells"].append(cell)
+        params["head"] = jnp.asarray(
+            rng.normal(size=(c, self.classes)).astype(np.float32) / np.sqrt(c))
+        return params
+
+    # -- building blocks ----------------------------------------------------
+    @staticmethod
+    def dws_conv(x, w):
+        """Causal depthwise 1D conv; x: (B, T, C), w: (K, C)."""
+        k = w.shape[0]
+        xp = jnp.pad(x, [(0, 0), (k - 1, 0), (0, 0)])
+        return sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(k))
+
+    @staticmethod
+    def fold_cell(cell):
+        """BN-fold the depthwise conv (paper §3.1.2)."""
+        bn = cell["dws_bn"]
+        w_f, b_f = fold_batchnorm(cell["dws_w"], bn["gamma"], bn["beta"],
+                                  bn["mu"], bn["var"])
+        return {"dws_w": w_f, "dws_b": b_f, "pw_w": cell["pw_w"]}
+
+    def forward_folded(self, folded_cells, head, x, quant=None):
+        """quant: None (fp32) or dict(mode='scalar'|'vector', acts=...)."""
+        for cell in folded_cells:
+            h = self.dws_conv(x, self._maybe_q(cell["dws_w"], quant))
+            h = h + cell["dws_b"]
+            h = jnp.clip(h, 0.0, 6.0)  # ReLU6
+            if quant is not None:
+                h = self._act_q(h, quant)
+            x = h @ self._maybe_q(cell["pw_w"], quant)
+        return x.mean(axis=1) @ head
+
+    @staticmethod
+    def _maybe_q(w, quant):
+        if quant is None:
+            return w
+        spec = Q.QuantSpec(bits=8, symmetric=True,
+                           per_channel=(quant["mode"] == "vector"),
+                           channel_axis=-1)
+        t = Q.max_abs_threshold(w, spec)
+        return Q.fake_quant_symmetric(w, t, jnp.ones_like(t), spec)
+
+    @staticmethod
+    def _act_q(h, quant):
+        spec = Q.QuantSpec(bits=8, symmetric=True, unsigned=True)
+        return Q.fake_quant_symmetric(h, jnp.asarray(6.0), jnp.ones(()), spec)
+
+    # -- §3.3 rescaling -------------------------------------------------------
+    def rescale_cells(self, folded_cells, calib_x):
+        """Apply the paper's DWS->ReLU6->Conv rescale using calibration
+        activations to find per-channel output maxima (steps 2-3)."""
+        out = []
+        x = calib_x
+        for cell in folded_cells:
+            pre = self.dws_conv(x, cell["dws_w"]) + cell["dws_b"]
+            act_max = jnp.max(jnp.abs(pre), axis=(0, 1))
+            w_d, b_d, w_p, _ = dws_relu6_rescale(
+                cell["dws_w"], cell["dws_b"], cell["pw_w"], act_max)
+            out.append({"dws_w": w_d, "dws_b": b_d, "pw_w": w_p})
+            x = jnp.clip(pre, 0, 6) @ cell["pw_w"]
+        return out

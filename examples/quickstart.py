@@ -1,0 +1,58 @@
+"""Quickstart: quantize a model with FAT in ~40 lines.
+
+Covers the paper's full §3 pipeline on a CPU-sized model:
+  1. calibrate activation thresholds on unlabeled data      (§2)
+  2. fine-tune threshold scale factors by distillation      (§3.1.3, §3.2)
+  3. convert to int8 and compare against the FP32 teacher   (§2, eq. 20)
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import api as A
+from repro.core.distill import rmse_distill_loss
+from repro.data import pipeline as DP
+from repro.configs.shapes import ShapeSpec
+from repro.launch import steps as ST
+from repro.models import build_model
+from repro.optim.adam import adam_init
+
+# 1. a model (any of the 10 archs; smoke = reduced size)
+cfg = get_config("smollm-135m", smoke=True)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+# 2. unlabeled data stream (the paper needs no labels anywhere)
+spec = DP.spec_for(cfg, ShapeSpec("qs", "train", seq_len=64, global_batch=8))
+
+# 3. calibrate (paper: ~100 samples)
+policy = A.QuantPolicy(weight_per_channel=True)   # vector mode, §3.1.5
+qparams = A.init_qparams(model, params, policy)
+calibrate = jax.jit(ST.make_calibrate_step(model, cfg, policy))
+for batch in DP.calibration_batches(spec, n=4):
+    qparams = calibrate(params, qparams, batch)
+qparams = A.finalize_calibration(qparams, policy)
+print(f"calibrated {len(qparams)} quantization points")
+
+# 4. FAT fine-tune: train ONLY threshold scales against the FP teacher
+train_step = jax.jit(ST.make_fat_train_step(model, cfg, policy))
+opt = adam_init(qparams)
+for step in range(20):
+    batch = DP.make_batch(spec, step)
+    qparams, opt, m = train_step(params, qparams, opt, batch)
+    if step % 5 == 0:
+        print(f"  step {step:3d}  distill RMSE {float(m['loss']):.4f}")
+
+# 5. int8 conversion + fidelity check
+serve_params = A.convert_to_int8(model, params, qparams, policy)
+batch = DP.make_batch(spec, 999)
+teacher, _ = model(params, batch)
+student, _ = model(serve_params, batch, A.make_ctx("int8", policy, qparams))
+agree = jnp.mean((jnp.argmax(teacher, -1) == jnp.argmax(student, -1))
+                 .astype(jnp.float32))
+print(f"int8 vs fp top-1 agreement: {float(agree):.3f}")
+print(f"int8 logit RMSE: {float(rmse_distill_loss(teacher, student)):.4f}")
+assert float(agree) > 0.9
+print("OK")

@@ -1,0 +1,39 @@
+"""FAT quantization core — the paper's contribution as a composable module.
+
+Public API:
+  QuantSpec / fake_quant_* / quantize_*_int8   (quant.py  — §2, §3.1)
+  init_observer / update_observer / ...        (calibration.py — §2)
+  QuantPolicy / QuantCtx / init_qparams / ...  (api.py    — integration)
+  fold_batchnorm / fold_model_norms            (folding.py — §3.1.2)
+  dws_relu6_rescale / pair_rescale / ...       (equalization.py — §3.3)
+  rmse_distill_loss / chunked_rmse_distill     (distill.py — §3.2)
+"""
+from repro.core.quant import (
+    QuantSpec,
+    ste_round,
+    fake_quant_symmetric,
+    fake_quant_asymmetric,
+    quantize_weights_int8,
+    quantize_acts_int8,
+    quantize_bias_int32,
+    apply_pointwise_scale,
+    max_abs_threshold,
+    adjusted_threshold,
+)
+from repro.core.calibration import init_observer, update_observer, observer_thresholds
+from repro.core.api import (
+    QuantPolicy,
+    QuantCtx,
+    make_ctx,
+    init_qparams,
+    finalize_calibration,
+    trainable_mask,
+    convert_to_int8,
+)
+from repro.core.folding import fold_batchnorm, fold_model_norms
+from repro.core.equalization import dws_relu6_rescale, pair_rescale, equalize_model
+from repro.core.distill import (
+    rmse_distill_loss,
+    chunked_rmse_distill,
+    chunked_ce_loss,
+)

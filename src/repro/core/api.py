@@ -1,0 +1,404 @@
+"""FAT quantization context — the integration point between the paper's
+technique (repro.core.quant) and the model substrate (repro.models).
+
+Modes
+-----
+  none       full-precision forward (the distillation *teacher*, §3.2)
+  calibrate  full-precision forward that also feeds activation observers
+             (paper §2 "calibration procedure"; 100 unlabeled samples)
+  fake       fake-quantized forward with trained threshold scales — the
+             distillation *student* (§3.1.3-3.1.5); differentiable via STE
+  int8       real integer serving path: int8 weights resident in memory,
+             int8 activations with static calibrated thresholds, int32
+             accumulation (§2, eq. 20), dequant fused into the epilogue
+
+State layout
+------------
+``qparams``   flat dict  path -> {"act": {...}, "w": {...}} of threshold
+              states.  Trainable leaves are exactly the alpha scales
+              (alpha / alpha_t / alpha_r) and optional pointwise scales —
+              everything else (t_max, t_l, t_r, observers) is frozen
+              calibration data.  This is what makes FAT *fast*: the
+              optimizer state is a few scalars per layer.
+``params``    the model pytree; in int8 mode quantized Dense leaves hold
+              {"w_q": int8, "w_scale": f32[C]} instead of {"w": bf16}.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import calibration as calib
+from repro.core import quant as Q
+
+Mode = str  # 'none' | 'calibrate' | 'fake' | 'int8'
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Which FAT variant to run (the paper's experiment grid, Tables 1-2)."""
+
+    bits: int = 8
+    act_symmetric: bool = True          # Table 1/2: symmetric vs asymmetric
+    weight_per_channel: bool = True     # §3.1.5: vector vs scalar mode
+    act_per_channel: bool = False       # activations stay per-tensor (paper)
+    pointwise_scales: bool = False      # §4.2 trainable [0.75, 1.25] scales
+    observer: str = "max_abs"           # 'max_abs' (paper) | 'percentile'
+    percentile: float = 99.99
+    skip_patterns: tuple[str, ...] = () # layer paths excluded (e.g. routers)
+    use_pallas: bool = False            # Pallas kernels on real TPU hot path
+
+    def skips(self, path: str) -> bool:
+        return any(re.search(p, path) for p in self.skip_patterns)
+
+    def weight_spec(self, channel_axis: int = -1) -> Q.QuantSpec:
+        return Q.QuantSpec(
+            bits=self.bits,
+            symmetric=True,  # weights are symmetric in the paper (eq. 1-4)
+            per_channel=self.weight_per_channel,
+            channel_axis=channel_axis,
+        )
+
+    def act_spec(self, unsigned: bool = False) -> Q.QuantSpec:
+        return Q.QuantSpec(
+            bits=self.bits,
+            symmetric=self.act_symmetric,
+            unsigned=unsigned,
+            per_channel=self.act_per_channel,
+        )
+
+
+@dataclasses.dataclass
+class QuantCtx:
+    """Threaded through every forward; mutable only during tracing.
+
+    ``updates`` collects observer states during a 'calibrate' trace; the
+    step function merges them back into qparams functionally, so
+    calibration jits/pjits cleanly.
+    """
+
+    mode: Mode
+    policy: QuantPolicy
+    qparams: dict
+    updates: dict = dataclasses.field(default_factory=dict)
+
+    def enabled(self, layer) -> bool:
+        return (
+            self.mode != "none"
+            and getattr(layer, "quantize", False)
+            and not self.policy.skips(layer.path)
+        )
+
+
+def make_ctx(mode: Mode, policy: QuantPolicy, qparams: dict | None = None) -> QuantCtx:
+    return QuantCtx(mode=mode, policy=policy, qparams=qparams or {})
+
+
+# ---------------------------------------------------------------------------
+# qparams construction
+# ---------------------------------------------------------------------------
+
+
+def init_qparams(model, params: dict, policy: QuantPolicy) -> dict:
+    """Build threshold state for every quantizable layer.
+
+    Weight thresholds come straight from the weights (T_w = max|W|, eq. 2);
+    activation thresholds start as empty observers to be filled by
+    calibration.  Weight alpha starts at 1.0 (threshold == T_max, §3.1.3).
+    """
+    from repro.models.module import ExpertDense
+
+    qparams: dict = {}
+    for layer, lp in _quant_layers_with_params(model, params, policy):
+        w = lp["w"]
+        wspec = policy.weight_spec()
+        # scanned stacks store weights with a leading (L,) axis; thresholds
+        # get the same leading axis so lax.scan slices them per layer
+        base_ndim = 3 if isinstance(layer, ExpertDense) else 2
+        lead = w.shape[: w.ndim - base_ndim]
+        if wspec.per_channel:
+            # per output channel: (out,) / (E, out), + leading stack dims
+            t_w = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2)
+        else:
+            axes = tuple(range(w.ndim - base_ndim, w.ndim))
+            t_w = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axes)
+        entry = {
+            "w": {
+                "t_max": t_w,
+                "alpha": jnp.ones_like(t_w),
+            },
+            "act": calib.init_observer(policy.act_spec(), lead_shape=lead),
+        }
+        if policy.pointwise_scales:
+            entry["w"]["pointwise"] = jnp.ones(w.shape, jnp.float32)
+        qparams[layer.path] = entry
+    return qparams
+
+
+def _quant_layers_with_params(model, params, policy: QuantPolicy | None = None):
+    """(quantizable leaf layer, its params subtree) pairs, skip-filtered.
+
+    Walks the module tree in parallel with the param pytree so the stable
+    layer *path* (quantization-state key) pairs with the structural param
+    location — the two need not share naming.
+    """
+    from repro.models.module import Dense, ExpertDense  # avoid cycle
+
+    for module, sub in model.walk_with_params(params):
+        if isinstance(module, (Dense, ExpertDense)) and module.quantize:
+            if policy is not None and policy.skips(module.path):
+                continue
+            yield module, sub
+
+
+def finalize_calibration(qparams: dict, policy: QuantPolicy) -> dict:
+    """Convert observer stats into threshold params (paper §3.1.3 init)."""
+    out = {}
+    for path, entry in qparams.items():
+        e = dict(entry)
+        e["act"] = calib.observer_thresholds(entry["act"], policy.act_spec())
+        out[path] = e
+    return out
+
+
+def trainable_mask(qparams: dict) -> dict:
+    """Pytree of bools: True only on the trained FAT parameters —
+    threshold scale factors (and pointwise scales if enabled)."""
+    trainable_keys = {"alpha", "alpha_t", "alpha_r", "pointwise"}
+
+    def mask_entry(d):
+        return {
+            k: (mask_entry(v) if isinstance(v, dict) else k in trainable_keys)
+            for k, v in d.items()
+        }
+
+    return {p: mask_entry(e) for p, e in qparams.items()}
+
+
+def _flatten(params: dict, prefix: str = "") -> dict:
+    flat = {}
+    for k, v in params.items():
+        kk = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            flat.update(_flatten(v, kk))
+        else:
+            flat[kk] = v
+    return flat
+
+
+# ---------------------------------------------------------------------------
+# Forward implementations (called by Dense / ExpertDense)
+# ---------------------------------------------------------------------------
+
+
+def _fq_act(x, astate, spec: Q.QuantSpec):
+    if spec.symmetric:
+        return Q.fake_quant_symmetric_fused(
+            x, astate["t_max"], astate["alpha"], spec
+        )
+    return Q.fake_quant_asymmetric(
+        x, astate["t_l"], astate["t_r"], astate["alpha_t"],
+        astate["alpha_r"], spec,
+    )
+
+
+def _weight_threshold_shape(w: jax.Array) -> tuple[int, ...]:
+    """Broadcast shape of per-out-channel thresholds against w.
+
+    Dense w: (in, out) -> (1, out).  ExpertDense w: (E, in, out) ->
+    (E, 1, out) — per-(expert, filter) thresholds, the vector mode of
+    §3.1.5 generalized to batched expert weights.  Scanned stacks prepend
+    (L,) to either form; the rule is uniform: every axis except the
+    contraction (-2) keeps its own threshold.
+    """
+    return tuple(w.shape[:-2]) + (1, w.shape[-1])
+
+
+def _fq_weight(w, wstate, spec: Q.QuantSpec):
+    if "pointwise" in wstate:
+        w = Q.apply_pointwise_scale(w, wstate["pointwise"].astype(w.dtype))
+    if spec.per_channel:
+        shape = _weight_threshold_shape(w)
+        t = wstate["t_max"].reshape(shape)
+        alpha = wstate["alpha"].reshape(shape)
+        t_adj = jnp.maximum(Q.adjusted_threshold(t, alpha, spec), 1e-8)
+        s = (spec.levels / t_adj).astype(jnp.float32)
+        wq = Q.clip_grad_passthrough(
+            Q.ste_round(w.astype(jnp.float32) * s), spec.qmin, spec.qmax
+        )
+        return (wq / s).astype(w.dtype)
+    return Q.fake_quant_symmetric(
+        w.astype(jnp.float32), wstate["t_max"], wstate["alpha"], spec
+    ).astype(w.dtype)
+
+
+def dense_forward(layer, params: dict, x: jax.Array, ctx: Optional[QuantCtx]):
+    """All four modes for a Dense layer."""
+    b = params.get("b")
+    if ctx is None or not ctx.enabled(layer):
+        y = x @ params["w"]
+    elif ctx.mode == "calibrate":
+        ctx.updates[layer.path] = calib.update_observer(
+            ctx.qparams[layer.path]["act"],
+            x,
+            ctx.policy.act_spec(layer.act_unsigned),
+            kind=ctx.policy.observer,
+            percentile=ctx.policy.percentile,
+        )
+        y = x @ params["w"]
+    elif ctx.mode == "fake":
+        qs = ctx.qparams[layer.path]
+        xq = _fq_act(x, qs["act"], ctx.policy.act_spec(layer.act_unsigned)).astype(
+            x.dtype
+        )
+        wq = _fq_weight(params["w"], qs["w"], ctx.policy.weight_spec())
+        y = xq @ wq
+    elif ctx.mode == "int8":
+        y = _int8_matmul(
+            x,
+            params["w_q"],
+            params["w_scale"],
+            ctx.qparams[layer.path]["act"],
+            ctx.policy.act_spec(layer.act_unsigned),
+            use_pallas=ctx.policy.use_pallas,
+        )
+        b = params.get("b_q")
+        if b is not None:
+            # int32 bias folded at the dequantized output scale (eq. 20)
+            b = b.astype(jnp.float32) * params["b_scale"]
+            y = y + b.astype(y.dtype)
+            b = None
+    else:
+        raise ValueError(f"unknown quant mode {ctx.mode}")
+    if b is not None:
+        y = y + b
+    return y
+
+
+def expert_dense_forward(layer, params: dict, x: jax.Array, ctx: Optional[QuantCtx]):
+    """x: (..., E, C, in) @ w: (E, in, out) -> (..., E, C, out)."""
+    if ctx is None or not ctx.enabled(layer):
+        return jnp.einsum("...ecd,edf->...ecf", x, params["w"])
+    if ctx.mode == "calibrate":
+        ctx.updates[layer.path] = calib.update_observer(
+            ctx.qparams[layer.path]["act"],
+            x,
+            ctx.policy.act_spec(),
+            kind=ctx.policy.observer,
+            percentile=ctx.policy.percentile,
+        )
+        return jnp.einsum("...ecd,edf->...ecf", x, params["w"])
+    if ctx.mode == "fake":
+        qs = ctx.qparams[layer.path]
+        xq = _fq_act(x, qs["act"], ctx.policy.act_spec()).astype(x.dtype)
+        wq = _fq_weight(params["w"], qs["w"], ctx.policy.weight_spec())
+        return jnp.einsum("...ecd,edf->...ecf", xq, wq)
+    if ctx.mode == "int8":
+        astate = ctx.qparams[layer.path]["act"]
+        spec = ctx.policy.act_spec()
+        t_adj = jnp.maximum(
+            Q.adjusted_threshold(astate["t_max"], astate["alpha"], spec), 1e-8
+        )
+        s_x = spec.levels / t_adj
+        x_int = jnp.clip(jnp.round(x * s_x), spec.qmin, spec.qmax).astype(jnp.int8)
+        # (..., E, C, in) @ (E, in, out) with int32 accumulation
+        acc = jnp.einsum(
+            "...ecd,edf->...ecf", x_int, params["w_q"],
+            preferred_element_type=jnp.int32,
+        )
+        scale = (params["w_scale"] / s_x).astype(jnp.float32)  # (E, out)
+        return (acc.astype(jnp.float32) * scale[:, None, :]).astype(x.dtype)
+    raise ValueError(ctx.mode)
+
+
+def _int8_matmul(x, w_q, w_scale, astate, aspec, *, use_pallas=False):
+    """int8 x int8 -> int32 -> dequant.  Static activation threshold.
+
+    The XLA path (dot_general with int32 accumulation) maps onto the MXU's
+    native int8 pipeline on TPU; the Pallas kernel (kernels/quant_matmul)
+    additionally fuses the per-channel dequant epilogue and is selected on
+    real hardware via policy.use_pallas.
+    """
+    t_adj = jnp.maximum(
+        Q.adjusted_threshold(astate["t_max"], astate["alpha"], aspec), 1e-8
+    )
+    s_x = aspec.levels / t_adj
+    x_int = jnp.clip(jnp.round(x * s_x), aspec.qmin, aspec.qmax).astype(jnp.int8)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        lead = x_int.shape[:-1]
+        y = kops.quant_matmul(
+            x_int.reshape(-1, x_int.shape[-1]),
+            w_q,
+            (w_scale / s_x).astype(jnp.float32),
+        )
+        return y.reshape(*lead, -1).astype(x.dtype)
+    acc = jax.lax.dot_general(
+        x_int,
+        w_q,
+        (((x_int.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    scale = (w_scale / s_x).astype(jnp.float32)
+    return (acc.astype(jnp.float32) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 model conversion (serving path)
+# ---------------------------------------------------------------------------
+
+
+def convert_to_int8(model, params: dict, qparams: dict, policy: QuantPolicy) -> dict:
+    """Replace every quantized Dense/ExpertDense 'w' with int8 + scales.
+
+    Produces the *serving* parameter pytree: quantized weights live in
+    memory as int8 (half/quarter the HBM bytes — the inference speedup the
+    paper targets), biases as int32 at the combined scale (eq. 20).
+    """
+    out = jax.tree.map(lambda x: x, params)  # structural copy
+    for layer, lp in _quant_layers_with_params(model, out, policy):
+        if layer.path not in qparams:
+            continue
+        wstate = qparams[layer.path]["w"]
+        w = lp.pop("w").astype(jnp.float32)
+        if "pointwise" in wstate:
+            w = Q.apply_pointwise_scale(w, wstate["pointwise"])
+        spec = policy.weight_spec()
+        t = wstate["t_max"]
+        alpha = wstate["alpha"]
+        if spec.per_channel:
+            shape = _weight_threshold_shape(w)
+            t = t.reshape(shape)
+            alpha = alpha.reshape(shape)
+        t_adj = jnp.maximum(Q.adjusted_threshold(t, alpha, spec), 1e-8)
+        s = spec.levels / t_adj
+        lp["w_q"] = jnp.clip(jnp.round(w * s), spec.qmin, spec.qmax).astype(jnp.int8)
+        w_scale = 1.0 / s
+        if spec.per_channel:
+            w_scale = jnp.squeeze(w_scale, axis=-2)
+        lp["w_scale"] = w_scale.astype(jnp.float32)
+        if "b" in lp:
+            astate = qparams[layer.path]["act"]
+            aspec = policy.act_spec(layer.act_unsigned)
+            t_a = jnp.maximum(
+                Q.adjusted_threshold(astate["t_max"], astate["alpha"], aspec),
+                1e-8,
+            )
+            act_scale = t_a / aspec.levels
+            # stacked layers: (L,) act scale broadcasts against (L, C)
+            # per-channel weight scales
+            if act_scale.ndim < lp["w_scale"].ndim:
+                act_scale = act_scale.reshape(
+                    act_scale.shape
+                    + (1,) * (lp["w_scale"].ndim - act_scale.ndim))
+            b = lp.pop("b")
+            lp["b_q"] = Q.quantize_bias_int32(
+                b.astype(jnp.float32), act_scale, lp["w_scale"]
+            )
+            lp["b_scale"] = (act_scale * lp["w_scale"]).astype(jnp.float32)
+    return out

@@ -1,0 +1,107 @@
+"""Unlabeled distillation loss (paper §3.2, eqs. 24-25).
+
+The paper's total loss L = alpha*H(y, z_T) + beta*H(y, z_A) + gamma*H(z_T, z_A)
+with alpha = beta = 0 — i.e. *only* the teacher/student term survives, and
+it is the RMSE between pre-softmax outputs:
+
+    H(z_T, z_A) = sqrt( sum_i ||z_i^T - z_i^A||^2 / N )         (eq. 25)
+
+with N the batch size.  No labels are used anywhere, which is what lets FAT
+train on ~10% of unlabeled data in hours.
+
+For LM backbones the "output before softmax" is the logits tensor
+(B, S, V); materializing it replicated is infeasible at vocab 256k, so
+``chunked_rmse_distill`` folds the lm_head matmuls and the squared-error
+reduction into one scan over sequence chunks — logits only ever exist for
+one chunk, sharded over the model axis.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def rmse_distill_loss(z_teacher: jax.Array, z_student: jax.Array) -> jax.Array:
+    """Eq. 25 verbatim: sqrt(sum of squared logit error / batch size).
+
+    Batch size N = product of all leading (non-logit) dims.
+    """
+    zt = z_teacher.astype(jnp.float32)
+    za = z_student.astype(jnp.float32)
+    n = 1
+    for d in zt.shape[:-1]:
+        n *= d
+    sq = jnp.sum((zt - za) ** 2)
+    return jnp.sqrt(sq / jnp.maximum(n, 1))
+
+
+def chunked_sq_err(
+    h_teacher: jax.Array,   # (B, S, d) final hidden, teacher
+    h_student: jax.Array,   # (B, S, d) final hidden, student
+    readout: Callable[[jax.Array], jax.Array],  # (B, c, d) -> (B, c, V)
+    readout_student: Callable | None = None,    # student's (quantized) head
+    *,
+    chunk: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Sum of squared logit error, computed chunk-by-chunk over sequence.
+
+    Returns (sum_sq, count_examples) so the caller applies eq. 25's
+    sqrt(. / N).  The scan keeps peak logits memory at (B, chunk, V_shard).
+    ``readout_student`` lets the student use its fake-quantized lm_head
+    while the teacher reads out in full precision.
+    """
+    b, s, _ = h_teacher.shape
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    ro_s = readout_student or readout
+
+    # checkpoint: without it the scan's backward saves every chunk's
+    # (B, chunk, V) logits — at vocab 256k that re-materializes the full
+    # logits tensor the chunking exists to avoid
+    @jax.checkpoint
+    def body(acc, idx):
+        sl = jax.lax.dynamic_slice_in_dim(h_teacher, idx * chunk, chunk, axis=1)
+        zt = readout(sl).astype(jnp.float32)
+        sl_s = jax.lax.dynamic_slice_in_dim(h_student, idx * chunk, chunk, axis=1)
+        za = ro_s(sl_s).astype(jnp.float32)
+        return acc + jnp.sum((zt - za) ** 2), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), jnp.arange(n_chunks))
+    return acc, jnp.asarray(b * s, jnp.float32)
+
+
+def chunked_rmse_distill(h_teacher, h_student, readout, readout_student=None,
+                         *, chunk: int = 256):
+    """Eq. 25 over sequence-chunked logits (N = batch*seq positions)."""
+    sq, n = chunked_sq_err(h_teacher, h_student, readout, readout_student,
+                           chunk=chunk)
+    return jnp.sqrt(sq / n)
+
+
+def chunked_ce_loss(
+    h: jax.Array,            # (B, S, d) final hidden
+    labels: jax.Array,       # (B, S) int32
+    readout: Callable,       # (B, c, d) -> (B, c, V)
+    *,
+    chunk: int = 256,
+) -> jax.Array:
+    """Standard next-token CE, sequence-chunked (pretrain mode)."""
+    b, s, _ = h.shape
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    assert s % chunk == 0
+
+    @jax.checkpoint
+    def body(acc, idx):
+        hs = jax.lax.dynamic_slice_in_dim(h, idx * chunk, chunk, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+        logits = readout(hs).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), jnp.arange(n_chunks))
+    return acc / (b * s)

@@ -1,0 +1,164 @@
+"""Cross-layer equalization — the paper's §3.3 DWS-rescaling, generalized.
+
+Paper's core identity: if a per-channel positive scale S is applied to the
+output channels of layer k and 1/S to the matching input rows of layer k+1,
+the composite function is unchanged *provided the op in between commutes
+with positive diagonal scaling* (eq. 26-27 proves this for ReLU6 on channels
+that never saturate).  Choosing S so per-channel thresholds equalize makes
+scalar (per-tensor) quantization as good as vector (per-channel) — the
+paper's fix for MobileNet-v2's scalar-mode collapse (1.6% -> 67% top-1).
+
+This module implements:
+  * the paper's exact DWS -> ReLU6 -> Conv algorithm (steps 1-6 of §3.3.1),
+    including the "locked channel" rule for outputs near the 6.0 saturation;
+  * the transformer analogs:
+      - SwiGLU: up-projection output channels scale through the elementwise
+        product (the silu(gate) path is untouched => always commutes);
+      - attention v -> o: value head-channels scale through the
+        attention-weighted sum (linear in v => always commutes).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class EqualizationResult:
+    scales: jax.Array          # per-channel S_W applied
+    locked: jax.Array          # bool mask of locked channels
+    t_before: jax.Array        # per-channel thresholds before
+    t_after: jax.Array         # after rescaling
+
+
+def _per_channel_t(w: jax.Array, axis: int) -> jax.Array:
+    axes = tuple(i for i in range(w.ndim) if i != axis % w.ndim)
+    return jnp.max(jnp.abs(w), axis=axes)
+
+
+def dws_relu6_rescale(
+    w_dws: jax.Array,        # (..., C) depthwise weights, channels last
+    b_dws: jax.Array | None, # (C,) bias
+    w_conv: jax.Array,       # (C, F) following 1x1 conv / projection
+    act_max: jax.Array,      # (C,) calibrated max of DWS output pre-ReLU6
+    *,
+    relu_cap: float = 6.0,
+    lock_limit: float = 5.9,
+) -> tuple[jax.Array, jax.Array | None, jax.Array, EqualizationResult]:
+    """The paper's §3.3.1 algorithm, steps 1-6.
+
+    1. T_c = max|w_dws[..., c]| per filter.
+    2. act_max from calibration (max of each output channel, pre-ReLU6).
+    3. lock channels with act_max >= lock_limit (5.9 in the paper).
+    4. T0 = mean of locked channels' thresholds (fallback: mean of all).
+    5. S_c = T0 / T_c for non-locked channels (1 for locked).
+    6. cap S_c so act_max * S_c <= relu_cap.
+
+    Returns (w_dws', b_dws', w_conv', result) with w_conv rows divided by S.
+    """
+    t_w = _per_channel_t(w_dws, -1)
+    locked = act_max >= lock_limit
+    any_locked = jnp.any(locked)
+    t0_locked = jnp.sum(jnp.where(locked, t_w, 0.0)) / jnp.maximum(
+        jnp.sum(locked.astype(jnp.float32)), 1.0
+    )
+    t0 = jnp.where(any_locked, t0_locked, jnp.mean(t_w))
+    s = t0 / jnp.maximum(t_w, _EPS)
+    # step 6: never push an output past the ReLU6 saturation knee
+    s_cap = relu_cap / jnp.maximum(act_max, _EPS)
+    s = jnp.minimum(s, s_cap)
+    # never scale a locked channel
+    s = jnp.where(locked, 1.0, s)
+    s = jnp.maximum(s, _EPS)
+
+    w_dws2 = (w_dws.astype(jnp.float32) * s).astype(w_dws.dtype)
+    b_dws2 = None if b_dws is None else (b_dws.astype(jnp.float32) * s).astype(
+        b_dws.dtype
+    )
+    w_conv2 = (w_conv.astype(jnp.float32) / s[:, None]).astype(w_conv.dtype)
+    res = EqualizationResult(
+        scales=s,
+        locked=locked,
+        t_before=t_w,
+        t_after=_per_channel_t(w_dws2, -1),
+    )
+    return w_dws2, b_dws2, w_conv2, res
+
+
+def pair_rescale(
+    w_up: jax.Array,   # (d, h): producer, channels on last axis
+    w_down: jax.Array, # (h, d): consumer, channels on first axis
+    *,
+    target: str = "mean",
+) -> tuple[jax.Array, jax.Array, EqualizationResult]:
+    """Equalize per-channel thresholds across a *linear* producer/consumer
+    pair (SwiGLU up->down through the gate product; attention v->o).
+
+    No activation cap applies (silu/attention are unbounded on the scaled
+    path and the scaling commutes exactly), so this is the paper's step 4-5
+    with no locking — the analog of its 'all channels below 5.9' case.
+
+    target='mean'  -> paper's T0 = mean threshold.
+    target='joint' -> sqrt(T_up / T_down) geometric balance (equalizes the
+    product pair, Nagel-style; kept as a beyond-paper option).
+    """
+    t_up = _per_channel_t(w_up, -1)
+    if target == "joint":
+        t_down = _per_channel_t(w_down, 0)
+        s = jnp.sqrt(t_down / jnp.maximum(t_up, _EPS))
+    else:
+        t0 = jnp.mean(t_up)
+        s = t0 / jnp.maximum(t_up, _EPS)
+    s = jnp.maximum(s, _EPS)
+    w_up2 = (w_up.astype(jnp.float32) * s).astype(w_up.dtype)
+    w_down2 = (w_down.astype(jnp.float32) / s[:, None]).astype(w_down.dtype)
+    res = EqualizationResult(
+        scales=s,
+        locked=jnp.zeros_like(s, dtype=bool),
+        t_before=t_up,
+        t_after=_per_channel_t(w_up2, -1),
+    )
+    return w_up2, w_down2, res
+
+
+def equalize_model(model, params: dict) -> tuple[dict, dict]:
+    """Apply the architecture's declared equalization plan.
+
+    ``model.equalization_plan()`` yields (up_path, down_path) Dense pairs
+    whose in-between op commutes with positive channel scaling.  Pairs in
+    nonlinear/stateful positions (e.g. through an SSM recursion) must NOT
+    be declared — the paper's own restriction ("any non-linear operations
+    on the scaled data ... are not allowed").
+    """
+    from repro.core.folding import _flatten_ref
+
+    plan = getattr(model, "equalization_plan", lambda: [])()
+    flat = _flatten_ref(params)
+    report = {}
+    for up_path, down_path in plan:
+        uk, dk = up_path + "/w", down_path + "/w"
+        if uk not in flat or dk not in flat:
+            continue
+        up_parent, up_leaf = flat[uk]
+        dn_parent, dn_leaf = flat[dk]
+        w_up, w_down = up_parent[up_leaf], dn_parent[dn_leaf]
+        if w_up.ndim == 3:  # expert weights: vmap the rescale over experts
+            ws = []
+            sds = []
+            for e in range(w_up.shape[0]):
+                wu, wd, res = pair_rescale(w_up[e], w_down[e])
+                ws.append(wu)
+                sds.append(wd)
+            up_parent[up_leaf] = jnp.stack(ws)
+            dn_parent[dn_leaf] = jnp.stack(sds)
+            report[up_path] = res
+        else:
+            wu, wd, res = pair_rescale(w_up, w_down)
+            up_parent[up_leaf] = wu
+            dn_parent[dn_leaf] = wd
+            report[up_path] = res
+    return params, report

@@ -1,0 +1,113 @@
+"""Normalization folding (paper §3.1.2, eqs. 10-11).
+
+The paper folds batch-norm into the preceding conv before quantization:
+
+    W_fold = gamma * W / sqrt(sigma^2 + eps)                    (eq. 10)
+    b_fold = beta - gamma * mu / sqrt(sigma^2 + eps)            (eq. 11)
+
+For pre-norm transformer blocks the analogous transform folds the norm's
+diagonal scale *forward* into every projection that consumes the normed
+activations:  y = Norm(x) * gamma;  q = y @ W  ==  Norm(x) @ (diag(gamma) W).
+After folding, the norm's scale is the identity and quantization sees a
+single fused weight — exactly the simplification the paper wants
+("it simplifies discretization and speeds up the neural network inference").
+
+LayerNorm additionally has a bias beta, which folds into the projection
+bias: b' = b + beta @ W (mirrors eq. 11's additive term).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fold_batchnorm(w, gamma, beta, mu, sigma2, eps: float = 1e-5):
+    """Eqs. 10-11 verbatim, for the DWS/conv benchmark models.
+
+    w: (..., C_out) conv weights with output channels last.
+    Returns (w_fold, b_fold).
+    """
+    inv = gamma / jnp.sqrt(sigma2 + eps)
+    w_fold = w * inv  # broadcast over output channels (last axis)
+    b_fold = beta - mu * inv
+    return w_fold, b_fold
+
+
+def fold_norm_into_projections(norm_scale, proj_weights: list, norm_bias=None,
+                               proj_biases: list | None = None):
+    """Fold a pre-norm gamma (and beta) into the consuming projections.
+
+    norm_scale: (d,). proj_weights: list of (d, out) matrices that all
+    consume the same normed activation (q/k/v, or gate/up).
+
+    Returns (new_scale, new_weights, new_biases): new_scale is all-ones.
+    """
+    g = norm_scale.astype(jnp.float32)
+    new_ws = [ (w.astype(jnp.float32) * g[:, None]).astype(w.dtype) for w in proj_weights ]
+    new_bs = None
+    if norm_bias is not None:
+        b_extra = [
+            (norm_bias.astype(jnp.float32) @ w.astype(jnp.float32)) for w in proj_weights
+        ]
+        if proj_biases is None:
+            new_bs = [e.astype(w.dtype) for e, w in zip(b_extra, proj_weights)]
+        else:
+            new_bs = [
+                ((b.astype(jnp.float32) if b is not None else 0.0) + e).astype(w.dtype)
+                for b, e, w in zip(proj_biases, b_extra, proj_weights)
+            ]
+    return jnp.ones_like(norm_scale), new_ws, new_bs
+
+
+def fold_model_norms(model, params: dict) -> dict:
+    """Walk a transformer param tree and fold every pre-norm scale into its
+    consuming projections.  Uses the model's declared fold plan
+    (``model.fold_plan()`` -> list of (norm_path, [proj_paths])) so each
+    architecture states exactly which algebraic folds are valid.
+    """
+    plan = getattr(model, "fold_plan", lambda: [])()
+    flat = _flatten_ref(params)
+    for norm_path, proj_paths in plan:
+        scale_key = norm_path + "/scale"
+        bias_key = norm_path + "/bias"
+        if scale_key not in flat:
+            continue
+        gamma = flat[scale_key][0][flat[scale_key][1]]
+        beta = None
+        if bias_key in flat:
+            beta = flat[bias_key][0][flat[bias_key][1]]
+        ws, parents = [], []
+        for pp in proj_paths:
+            wk = pp + "/w"
+            if wk not in flat:
+                ws = None
+                break
+            parent, leaf = flat[wk]
+            ws.append(parent[leaf])
+            parents.append((parent, leaf))
+        if ws is None:
+            continue
+        new_scale, new_ws, new_bs = fold_norm_into_projections(gamma, ws, beta)
+        sp, sl = flat[scale_key]
+        sp[sl] = new_scale
+        if beta is not None:
+            bp, bl = flat[bias_key]
+            bp[bl] = jnp.zeros_like(beta)
+        for (parent, leaf), nw in zip(parents, new_ws):
+            parent[leaf] = nw
+        if new_bs is not None:
+            for (parent, leaf), nb in zip(parents, new_bs):
+                parent["b"] = parent.get("b", 0) + nb if "b" in parent else nb
+    return params
+
+
+def _flatten_ref(params: dict, prefix: str = "") -> dict:
+    """path -> (parent_dict, leaf_key) so we can rewrite in place."""
+    out = {}
+    for k, v in params.items():
+        kk = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(_flatten_ref(v, kk))
+        else:
+            out[kk] = (params, k)
+    return out

@@ -1,0 +1,355 @@
+"""FAT uniform quantization primitives (paper §2, §3.1).
+
+Implements the paper's quantization scheme:
+
+  * symmetric thresholds with a trained scale factor
+        T_adj = clip(alpha, a_min, a_max) * T_max               (eq. 12-13)
+        S     = levels / T_adj                                  (eq. 14)
+        x_q   = clip(round(x * S), qmin, qmax)                  (eq. 15, 4, 8-9)
+  * asymmetric thresholds parametrised as (left limit, width)
+        R     = T_r - T_l                                       (eq. 21)
+        T_adj = T_l + clip(alpha_T, aT_min, aT_max) * R         (eq. 22)
+        R_adj = clip(alpha_R, aR_min, aR_max) * R               (eq. 23)
+  * STE derivatives for round (eq. 16-17) and clip (eq. 18-19).
+
+A note on eq. (1): the paper writes ``S_w = (2^n - 1) / T_w`` while clipping
+signed values to ``±(2^{n-1}-1)``; taken literally this saturates everything
+above ``T/2``.  The released reference code (and eqs. 5-9 for the unsigned
+case) resolve the ambiguity as: *signed* tensors use ``(2^{n-1}-1)/T`` with
+clip ``±(2^{n-1}-1)`` and *unsigned* tensors use ``(2^n-1)/T`` with clip
+``[0, 2^n-1]``.  We implement that resolution.
+
+Everything here is shape-polymorphic and works per-tensor (the paper's
+"scalar" mode) or per-channel (the paper's "vector" mode, §3.1.5) by passing
+threshold arrays that broadcast against ``x``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Quantization specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of one quantization point.
+
+    Attributes:
+      bits: bit width (the paper targets 8).
+      symmetric: symmetric (§3.1.3) vs asymmetric (§3.1.4) thresholds.
+      unsigned: unsigned integer range (activations after ReLU-family);
+        only meaningful for symmetric quantization — the asymmetric scheme
+        is affine and always maps onto the unsigned range like Ref. [12].
+      per_channel: the paper's "vector" mode (§3.1.5) — one threshold per
+        channel along ``channel_axis``.
+      channel_axis: axis of ``x`` holding the channels (output filters for
+        weights).
+      alpha_min/alpha_max: clip range of the trained threshold scale
+        (paper: 0.5 / 1.0).
+      alpha_t_min/alpha_t_max: clip range for the asymmetric left-limit
+        shift (paper: -0.2 / 0.4 signed, 0 / 0.4 unsigned).
+      alpha_r_min/alpha_r_max: clip range for the asymmetric width scale
+        (paper: 0.5 / 1.0).
+    """
+
+    bits: int = 8
+    symmetric: bool = True
+    unsigned: bool = False
+    per_channel: bool = False
+    channel_axis: int = -1
+    alpha_min: float = 0.5
+    alpha_max: float = 1.0
+    alpha_t_min: float = -0.2
+    alpha_t_max: float = 0.4
+    alpha_r_min: float = 0.5
+    alpha_r_max: float = 1.0
+
+    # -- derived integer ranges ------------------------------------------
+    @property
+    def levels(self) -> float:
+        """Positive scale numerator (see module docstring on eq. 1)."""
+        if self.symmetric and not self.unsigned:
+            return float(2 ** (self.bits - 1) - 1)  # 127 for int8
+        return float(2**self.bits - 1)  # 255 for uint8 / affine
+
+    @property
+    def qmin(self) -> float:
+        if self.symmetric and not self.unsigned:
+            return -float(2 ** (self.bits - 1) - 1)  # -127 (eq. 4)
+        return 0.0
+
+    @property
+    def qmax(self) -> float:
+        if self.symmetric and not self.unsigned:
+            return float(2 ** (self.bits - 1) - 1)  # 127
+        return float(2**self.bits - 1)  # 255
+
+    def signed_alpha_t_range(self) -> tuple[float, float]:
+        """§3.1.4: the left-limit shift range depends on signedness."""
+        if self.unsigned:
+            return (0.0, self.alpha_t_max)
+        return (self.alpha_t_min, self.alpha_t_max)
+
+
+# ---------------------------------------------------------------------------
+# STE primitives (paper eqs. 16-19)
+# ---------------------------------------------------------------------------
+
+
+def ste_round(x: jax.Array) -> jax.Array:
+    """Round-to-nearest with a straight-through gradient (eq. 16-17)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def ste_floor(x: jax.Array) -> jax.Array:
+    """Floor with a straight-through gradient (used by integer repack)."""
+    return x + jax.lax.stop_gradient(jnp.floor(x) - x)
+
+
+def clip_grad_passthrough(x: jax.Array, lo, hi) -> jax.Array:
+    """clip with the paper's eq. 18-19 gradient (1 inside, 0 outside).
+
+    ``jnp.clip``'s VJP already matches eq. 19, so this is an alias kept for
+    symmetry with the paper's notation.
+    """
+    return jnp.clip(x, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# Threshold computation
+# ---------------------------------------------------------------------------
+
+
+def max_abs_threshold(x: jax.Array, spec: QuantSpec) -> jax.Array:
+    """T = max|x| (eq. 2/6) — per tensor, or per channel in vector mode."""
+    if spec.per_channel:
+        axes = tuple(
+            i for i in range(x.ndim) if i != (spec.channel_axis % x.ndim)
+        )
+        return jnp.max(jnp.abs(x), axis=axes)
+    return jnp.max(jnp.abs(x))
+
+
+def min_max_threshold(x: jax.Array, spec: QuantSpec) -> tuple[jax.Array, jax.Array]:
+    """(T_l, T_r) for asymmetric quantization (§3.1.4)."""
+    if spec.per_channel:
+        axes = tuple(
+            i for i in range(x.ndim) if i != (spec.channel_axis % x.ndim)
+        )
+        return jnp.min(x, axis=axes), jnp.max(x, axis=axes)
+    return jnp.min(x), jnp.max(x)
+
+
+def _bcast(t: jax.Array, x: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Broadcast per-channel threshold against x along channel_axis."""
+    if not spec.per_channel or t.ndim == 0:
+        return t
+    shape = [1] * x.ndim
+    shape[spec.channel_axis % x.ndim] = t.shape[0]
+    return t.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Fake quantization (quantize-dequantize) with trained thresholds
+# ---------------------------------------------------------------------------
+
+
+def adjusted_threshold(t_max: jax.Array, alpha: jax.Array, spec: QuantSpec) -> jax.Array:
+    """T_adj = clip(alpha, a_min, a_max) * T_max  (eq. 12-13)."""
+    a = clip_grad_passthrough(alpha, spec.alpha_min, spec.alpha_max)
+    return a * t_max
+
+
+def fake_quant_symmetric(
+    x: jax.Array,
+    t_max: jax.Array,
+    alpha: jax.Array,
+    spec: QuantSpec,
+) -> jax.Array:
+    """Symmetric fake-quant with trained threshold scale (§3.1.3).
+
+    Gradients flow to ``alpha`` through both the scale multiply and the
+    dequantize divide; the round/clip use STE (eqs. 16-19).
+    """
+    t_adj = adjusted_threshold(_bcast(t_max, x, spec), alpha, spec)
+    t_adj = jnp.maximum(t_adj, _EPS)
+    scale = spec.levels / t_adj  # eq. 14
+    x_int = ste_round(x * scale)  # eq. 15
+    x_q = clip_grad_passthrough(x_int, spec.qmin, spec.qmax)  # eq. 4/8/9
+    return x_q / scale
+
+
+def asymmetric_limits(
+    t_l: jax.Array,
+    t_r: jax.Array,
+    alpha_t: jax.Array,
+    alpha_r: jax.Array,
+    spec: QuantSpec,
+) -> tuple[jax.Array, jax.Array]:
+    """Adjusted (left, width) for asymmetric thresholds (eqs. 21-23)."""
+    r = t_r - t_l  # eq. 21
+    at_min, at_max = spec.signed_alpha_t_range()
+    left = t_l + clip_grad_passthrough(alpha_t, at_min, at_max) * r  # eq. 22
+    width = clip_grad_passthrough(alpha_r, spec.alpha_r_min, spec.alpha_r_max) * r  # eq. 23
+    width = jnp.maximum(width, _EPS)
+    return left, width
+
+
+def fake_quant_asymmetric(
+    x: jax.Array,
+    t_l: jax.Array,
+    t_r: jax.Array,
+    alpha_t: jax.Array,
+    alpha_r: jax.Array,
+    spec: QuantSpec,
+) -> jax.Array:
+    """Asymmetric (affine) fake-quant with trained limits (§3.1.4).
+
+    Maps [left, left+width] onto [0, 2^n - 1] with an integer zero point
+    (Ref. [12] style, which the paper adapts).
+    """
+    left, width = asymmetric_limits(
+        _bcast(t_l, x, spec), _bcast(t_r, x, spec), alpha_t, alpha_r, spec
+    )
+    n_levels = float(2**spec.bits - 1)
+    scale = n_levels / width
+    # Integer zero-point (rounded so quantized values stay on the integer
+    # grid; STE'd so alpha_t still receives gradient).  NOT clamped to the
+    # level range: for one-sided ranges (e.g. [2.6, 3.4]) the affine
+    # zero-point legitimately falls far outside [0, n_levels].
+    zp = ste_round(-left * scale)
+    x_int = ste_round(x * scale) + zp
+    x_q = clip_grad_passthrough(x_int, 0.0, n_levels)
+    return (x_q - zp) / scale
+
+
+def _fq_sym_fwd_math(x, t_max, alpha, spec: QuantSpec):
+    t_adj = adjusted_threshold(_bcast(t_max, x, spec), alpha, spec)
+    t_adj = jnp.maximum(t_adj, _EPS)
+    scale = spec.levels / t_adj
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) * scale), spec.qmin, spec.qmax)
+    return (xq / scale).astype(x.dtype), t_adj
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fake_quant_symmetric_fused(x, t_max, alpha, spec: QuantSpec):
+    """Same math as fake_quant_symmetric but with an analytic STE VJP.
+
+    The stop_gradient formulation keeps several same-shape f32 temporaries
+    alive through autodiff; this version's forward is one fusable
+    elementwise chain, the backward another, and the only residual is x
+    (plus the tiny threshold vectors) — the memory-lean path used by the
+    QAT student at production shapes.
+    """
+    y, _ = _fq_sym_fwd_math(x, t_max, alpha, spec)
+    return y
+
+
+def _fq_sym_fwd(x, t_max, alpha, spec):
+    y, _ = _fq_sym_fwd_math(x, t_max, alpha, spec)
+    return y, (x, t_max, alpha)
+
+
+def _fq_sym_bwd(spec, res, g):
+    x, t_max, alpha = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    t_b = _bcast(t_max, x, spec)
+    a_b = _bcast(alpha, x, spec) if alpha.ndim else alpha
+    a_c = jnp.clip(a_b, spec.alpha_min, spec.alpha_max)
+    t_adj = jnp.maximum(a_c * t_b, _EPS)
+    inside = jnp.abs(xf) <= t_adj
+    # dx: straight-through inside the clip range (eqs. 17, 19)
+    dx = jnp.where(inside, gf, 0.0).astype(x.dtype)
+    # dy/dT: inside -> (y - x)/T (rounding residual), outside -> sign(x)
+    scale = spec.levels / t_adj
+    y = jnp.clip(jnp.round(xf * scale), spec.qmin, spec.qmax) / scale
+    dy_dt = jnp.where(inside, (y - xf) / t_adj, jnp.sign(xf))
+    # alpha passthrough band (eq. 19 on clip(alpha))
+    band = (a_b >= spec.alpha_min) & (a_b <= spec.alpha_max)
+    dalpha_full = gf * dy_dt * t_b * band.astype(jnp.float32)
+    if alpha.ndim == 0:
+        dalpha = jnp.sum(dalpha_full)
+        dt = jnp.zeros_like(t_max)
+    else:
+        axes = tuple(
+            i for i in range(x.ndim) if i != (spec.channel_axis % x.ndim)
+        )
+        dalpha = jnp.sum(dalpha_full, axis=axes).reshape(alpha.shape)
+        dt = jnp.zeros_like(t_max)
+    return dx, dt, dalpha.astype(alpha.dtype)
+
+
+fake_quant_symmetric_fused.defvjp(_fq_sym_fwd, _fq_sym_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Real integer quantization (serving path)
+# ---------------------------------------------------------------------------
+
+
+def quantize_weights_int8(
+    w: jax.Array, t_max: jax.Array, alpha: jax.Array, spec: QuantSpec
+) -> tuple[jax.Array, jax.Array]:
+    """Produce (w_int8, per-channel float scale) for the int8 serving path.
+
+    Returns ``w_q`` int8 and ``scale`` such that ``w ≈ w_q * scale`` with
+    ``scale = T_adj / levels``.
+    """
+    t_adj = jnp.maximum(adjusted_threshold(t_max, alpha, spec), _EPS)
+    s = spec.levels / t_adj
+    w_int = jnp.clip(jnp.round(w * _bcast(s, w, spec)), spec.qmin, spec.qmax)
+    return w_int.astype(jnp.int8), (1.0 / s).astype(jnp.float32)
+
+
+def quantize_acts_int8(
+    x: jax.Array, t_max: jax.Array, alpha: jax.Array, spec: QuantSpec
+) -> tuple[jax.Array, jax.Array]:
+    """Quantize activations with a *static* calibrated threshold.
+
+    Symmetric signed int8; the threshold is frozen after calibration +
+    fine-tuning, which is what makes on-device inference fast (§2: thresholds
+    "are usually calculated beforehand in calibration procedure").
+    """
+    t_adj = jnp.maximum(adjusted_threshold(t_max, alpha, spec), _EPS)
+    s = spec.levels / t_adj
+    x_int = jnp.clip(jnp.round(x * _bcast(s, x, spec)), spec.qmin, spec.qmax)
+    return x_int.astype(jnp.int8), (1.0 / s).astype(jnp.float32)
+
+
+def quantize_bias_int32(
+    b: jax.Array, act_scale: jax.Array, w_scale: jax.Array
+) -> jax.Array:
+    """Bias to int32 with the combined input/weight scale (eq. 20).
+
+    b_q = clip(round(S_i * S_w * b), ±(2^31 - 1)); here ``act_scale`` and
+    ``w_scale`` are *dequantization* scales (T/levels), so S = 1/scale.
+    """
+    s = 1.0 / jnp.maximum(act_scale * w_scale, _EPS)
+    lim = float(2**31 - 1)
+    return jnp.clip(jnp.round(b * s), -lim, lim).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pointwise weight fine-tuning scales (§4.2)
+# ---------------------------------------------------------------------------
+
+
+def apply_pointwise_scale(
+    w: jax.Array, p: jax.Array, lo: float = 0.75, hi: float = 1.25
+) -> jax.Array:
+    """W_eff = W * clip(p, 0.75, 1.25) — the paper's per-value trainable
+    scale that lets individual weights switch quantization bins (§4.2)."""
+    return w * clip_grad_passthrough(p, lo, hi)

@@ -1,0 +1,102 @@
+"""Deterministic, resumable synthetic data pipeline.
+
+Serves three roles the paper's setup needs:
+  * an *unlabeled* training stream for FAT distillation (§3.2 — labels are
+    deliberately discarded; ~10% of the full corpus suffices),
+  * a small *calibration* set (§2 — the paper uses 100 images),
+  * a labeled stream for the pretrain substrate mode.
+
+Tokens follow a Zipf marginal with a 2-gram mixing process so quantized /
+full-precision outputs diverge in realistic, non-uniform ways (uniform
+random tokens would under-exercise activation outliers — the paper's whole
+motivation, Fig. 1).
+
+Determinism/resumability: a batch is a pure function of (seed, step) via
+``jax.random.fold_in``; pipeline state is just the integer step, which the
+checkpoint carries — restart resumes the exact stream (fault-tolerance
+requirement).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    modality: str = "text"   # text | vlm | audio
+    mm_patches: int = 0
+    mm_dim: int = 0
+    frame_dim: int = 0
+    dec_ratio: int = 8
+    dtype: jnp.dtype = jnp.bfloat16
+
+
+def _zipf_tokens(key, shape, vocab: int, a: float):
+    """Inverse-CDF Zipf sampling (vectorized, jit-safe)."""
+    u = jax.random.uniform(key, shape, jnp.float32, 1e-6, 1.0)
+    # ranks ~ u^(-1/(a-1)) truncated to vocab (approximate Zipf tail)
+    r = jnp.floor(u ** (-1.0 / (a - 1.0))) % vocab
+    return r.astype(jnp.int32)
+
+
+def make_batch(spec: PipelineSpec, step) -> dict:
+    """Pure function of (seed, step) -> batch dict (jit-able)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(spec.seed), step)
+    k_tok, k_mix, k_mm = jax.random.split(key, 3)
+    b = spec.global_batch
+    s = spec.seq_len
+    if spec.modality == "vlm":
+        s_text = s - spec.mm_patches
+    elif spec.modality == "audio":
+        s_text = max(s // spec.dec_ratio, 4)
+    else:
+        s_text = s
+    toks = _zipf_tokens(k_tok, (b, s_text), spec.vocab, spec.zipf_a)
+    # 2-gram structure: with p=0.3 repeat the previous token + 1 (mod V)
+    rep = jax.random.bernoulli(k_mix, 0.3, (b, s_text))
+    shifted = jnp.roll(toks, 1, axis=1)
+    toks = jnp.where(rep, (shifted + 1) % spec.vocab, toks)
+    batch = {"tokens": toks}
+    if spec.modality == "vlm":
+        batch["patches"] = jax.random.normal(
+            k_mm, (b, spec.mm_patches, spec.mm_dim)
+        ).astype(spec.dtype)
+    elif spec.modality == "audio":
+        batch["frames"] = jax.random.normal(
+            k_mm, (b, s, spec.frame_dim)
+        ).astype(spec.dtype)
+    # labels for the pretrain substrate mode; FAT distillation ignores them
+    batch["labels"] = jnp.roll(toks, -1, axis=1)
+    return batch
+
+
+def spec_for(cfg, shape, seed: int = 0) -> PipelineSpec:
+    """PipelineSpec from a ModelConfig + ShapeSpec."""
+    return PipelineSpec(
+        vocab=cfg.vocab,
+        seq_len=shape.seq_len,
+        global_batch=shape.global_batch,
+        seed=seed,
+        modality=cfg.modality if cfg.family != "encdec" else "audio",
+        mm_patches=cfg.mm_patches,
+        mm_dim=cfg.mm_dim,
+        frame_dim=cfg.frame_dim,
+        dec_ratio=cfg.dec_ratio,
+        dtype=cfg.dtype,
+    )
+
+
+def calibration_batches(spec: PipelineSpec, n: int = 4, offset: int = 1 << 20):
+    """The paper's calibration set (§4.1.2 uses 100 images ≈ a few batches);
+    drawn from a disjoint region of the stream (offset) so calibration data
+    is 'the most typical data' rather than training batches."""
+    return [make_batch(spec, offset + i) for i in range(n)]

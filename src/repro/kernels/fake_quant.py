@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused fake-quantize (quantize-dequantize) — the QAT
+student's elementwise hot op (§3.1.3).
+
+One VMEM pass computes  clip(round(x * s), qmin, qmax) / s  with
+s = levels / (clip(alpha) * t_max) per output channel (vector mode) or per
+tensor (scalar mode).  Saves two HBM round-trips versus the unfused
+mul/round/clip/div chain on big activation tensors.
+
+The backward (STE, eqs. 16-19) is provided by ops.fake_quant's custom_vjp;
+this file is forward-only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, t_ref, o_ref, *, levels: float, qmin: float, qmax: float,
+            alpha_min: float, alpha_max: float):
+    # t_ref rows: [0] = t_max, [1] = alpha  (stacked so one (2, bn) block
+    # streams both per-channel vectors)
+    t_max = t_ref[0, :]
+    alpha = jnp.clip(t_ref[1, :], alpha_min, alpha_max)
+    t_adj = jnp.maximum(alpha * t_max, 1e-8)
+    s = levels / t_adj  # (bn,)
+    x = x_ref[...].astype(jnp.float32)
+    xq = jnp.clip(jnp.round(x * s[None, :]), qmin, qmax)
+    o_ref[...] = (xq / s[None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("levels", "qmin", "qmax", "alpha_min", "alpha_max",
+                     "block_m", "block_n", "interpret"),
+)
+def fake_quant_fwd(
+    x: jax.Array,       # (M, N)
+    t_max: jax.Array,   # (N,) per-channel or broadcastable scalar->(N,)
+    alpha: jax.Array,   # (N,)
+    *,
+    levels: float = 127.0,
+    qmin: float = -127.0,
+    qmax: float = 127.0,
+    alpha_min: float = 0.5,
+    alpha_max: float = 1.0,
+    block_m: int = 512,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    m, n = x.shape
+    bm, bn = min(block_m, m), min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    t_stack = jnp.stack([
+        jnp.broadcast_to(t_max.astype(jnp.float32), (n,)),
+        jnp.broadcast_to(alpha.astype(jnp.float32), (n,)),
+    ])  # (2, N)
+    kernel = functools.partial(
+        _kernel, levels=levels, qmin=qmin, qmax=qmax,
+        alpha_min=alpha_min, alpha_max=alpha_max,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((2, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, t_stack)

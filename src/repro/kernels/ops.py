@@ -1,0 +1,96 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode
+(Python emulation of the kernel body) — correctness-identical to the TPU
+path, validated against the pure-jnp oracles in ref.py.  On a real TPU set
+``REPRO_PALLAS_INTERPRET=0`` (default when a TPU backend is detected).
+
+``fake_quant`` carries the STE custom_vjp (paper eqs. 16-19): forward runs
+the fused Pallas kernel, backward computes
+  dx     = 1{|x| <= T_adj}                                  (round STE + clip)
+  dalpha = d/dalpha [ q(x; alpha) ]  via the threshold scale
+in plain jnp (the backward is bandwidth-trivial relative to the matmuls
+around it).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fake_quant as _fq
+from repro.kernels import quant_matmul as _qm
+from repro.kernels import ref as _ref
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def quant_matmul(x, w_q, w_scale, act_scale=None, **kw):
+    """Fused quantize -> int8 matmul -> dequant (serving hot path).
+
+    x: (M, K) bf16/f32; w_q: (K, N) int8; w_scale: (N,) combined dequant
+    scale.  If act_scale is None, w_scale is assumed to already fold the
+    activation dequant (s_w / s_a) and quantization uses scale 1 — callers
+    normally pass both explicitly.
+    """
+    if act_scale is None:
+        act_scale = jnp.float32(1.0)
+    return _qm.quant_matmul(x, w_q, w_scale, act_scale,
+                            interpret=_interpret(), **kw)
+
+
+quant_matmul_ref = _ref.quant_matmul_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def fake_quant(x, t_max, alpha, levels=127.0, alpha_min=0.5, alpha_max=1.0):
+    """Fused per-channel fake-quant with STE backward.
+
+    x: (M, N); t_max/alpha: (N,) per-out-channel (paper vector mode).
+    """
+    return _fq.fake_quant_fwd(
+        x, t_max, alpha, levels=levels, qmin=-levels, qmax=levels,
+        alpha_min=alpha_min, alpha_max=alpha_max, interpret=_interpret(),
+    )
+
+
+def _fq_fwd(x, t_max, alpha, levels, alpha_min, alpha_max):
+    y = fake_quant(x, t_max, alpha, levels, alpha_min, alpha_max)
+    return y, (x, t_max, alpha)
+
+
+def _fq_bwd(levels, alpha_min, alpha_max, res, g):
+    x, t_max, alpha = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    a = jnp.clip(alpha.astype(jnp.float32), alpha_min, alpha_max)
+    t_adj = jnp.maximum(a * t_max.astype(jnp.float32), 1e-8)
+    s = levels / t_adj  # (N,)
+    inside = (jnp.abs(xf) <= t_adj[None, :]).astype(jnp.float32)
+    # STE: straight-through inside the clip range (eqs. 17, 19)
+    dx = (gf * inside).astype(x.dtype)
+    # d y / d t_adj:
+    #   inside:  y = round(x s)/s -> dy/dt = (round(xs) - xs)/ (s t) * ...
+    #            == (y - x)/t_adj   (rounding residual shrinks/grows with T)
+    #   outside: y = sign(x) * levels / s = sign(x) * t_adj -> dy/dt = sign(x)
+    y = _ref.fake_quant_ref(x, t_max, alpha, levels=levels, qmin=-levels,
+                            qmax=levels, alpha_min=alpha_min,
+                            alpha_max=alpha_max).astype(jnp.float32)
+    dy_dt = jnp.where(inside > 0, (y - xf) / t_adj[None, :], jnp.sign(xf))
+    # alpha gradient only inside the clip(alpha) passthrough band (eq. 19)
+    pass_band = ((alpha >= alpha_min) & (alpha <= alpha_max)).astype(jnp.float32)
+    dalpha = jnp.sum(gf * dy_dt, axis=0) * t_max.astype(jnp.float32) * pass_band
+    # t_max is calibration data, not trained — zero cotangent
+    return dx, jnp.zeros_like(t_max), dalpha.astype(alpha.dtype)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+fake_quant_ref = _ref.fake_quant_ref

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x, w_q, w_scale, act_scale, out_dtype=jnp.bfloat16):
+    """Oracle for kernels.quant_matmul: quantize -> int8 matmul -> dequant."""
+    x_q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) * act_scale), -127, 127
+    ).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        x_q, w_q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    return (acc.astype(jnp.float32) * w_scale[None, :]).astype(out_dtype)
+
+
+def fake_quant_ref(x, t_max, alpha, *, levels=127.0, qmin=-127.0, qmax=127.0,
+                   alpha_min=0.5, alpha_max=1.0):
+    """Oracle for kernels.fake_quant_fwd (per-out-channel thresholds)."""
+    a = jnp.clip(alpha.astype(jnp.float32), alpha_min, alpha_max)
+    t_adj = jnp.maximum(a * t_max.astype(jnp.float32), 1e-8)
+    s = levels / t_adj
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) * s[None, :]), qmin, qmax)
+    return (xq / s[None, :]).astype(x.dtype)

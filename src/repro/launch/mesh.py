@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax init; tests see 1 CPU).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e-256 pod: (data=16, model=16); two pods add a leading 'pod' axis
+    (pure DP across DCN).
+
+    Under the dry-run's 512 placeholder devices the single-pod mesh takes
+    the first 256 — `devices=` keeps both variants constructible in one
+    process."""
+    import numpy as np
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devs)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_"
+            "count=512 before any jax import"
+        )
+    return jax.make_mesh(
+        shape, axes,
+        devices=devs[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU examples/tests (same axis names)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run contract.
+
+Everything here is abstract: no device allocation ever happens.  The same
+spec builders feed ``jax.jit(...).lower()`` for all three step kinds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.core import api as A
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs_abstract(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Training/prefill batch structure (matches data.pipeline.make_batch)."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        s_text = max(s // cfg.dec_ratio, 4)
+        batch = {
+            "frames": sds((b, s, cfg.frame_dim), cfg.dtype),
+            "tokens": sds((b, s_text), jnp.int32),
+            "labels": sds((b, s_text), jnp.int32),
+        }
+    elif cfg.modality == "vlm":
+        s_text = s - cfg.mm_patches
+        batch = {
+            "patches": sds((b, cfg.mm_patches, cfg.mm_dim), cfg.dtype),
+            "tokens": sds((b, s_text), jnp.int32),
+            "labels": sds((b, s_text), jnp.int32),
+        }
+    else:
+        batch = {
+            "tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32),
+        }
+    return batch
+
+
+def model_state_abstract(model, cfg: ModelConfig, policy: A.QuantPolicy):
+    """(params, qparams) ShapeDtypeStructs via eval_shape (no allocation)."""
+
+    def build(key):
+        params = model.init(key)
+        qparams = A.init_qparams(model, params, policy)
+        # training consumes *post-calibration* threshold state (floats
+        # only): §3.1.3 — thresholds init from calibration, then trained
+        qparams = A.finalize_calibration(qparams, policy)
+        return params, qparams
+
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def serve_state_abstract(model, cfg: ModelConfig, policy: A.QuantPolicy):
+    """(serve_params int8, qparams) ShapeDtypeStructs."""
+
+    def build(key):
+        params = model.init(key)
+        qparams = A.init_qparams(model, params, policy)
+        qparams = A.finalize_calibration(qparams, policy)
+        serve_params = A.convert_to_int8(model, params, qparams, policy)
+        return serve_params, qparams
+
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def cache_abstract(model, cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_len, cfg.dtype)
+    )
+
+
+def opt_state_abstract(qparams_abstract):
+    from repro.optim.adam import adam_init
+
+    return jax.eval_shape(adam_init, qparams_abstract)

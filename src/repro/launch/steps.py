@@ -1,0 +1,152 @@
+"""Step functions — the units the launcher jits/lowers/compiles.
+
+  * fat_train_step   — the paper's contribution: distillation training of
+                       quantization thresholds on unlabeled data (§3.2):
+                       FP teacher forward + fake-quant student forward,
+                       RMSE on pre-softmax logits (eq. 24-25 with
+                       alpha=beta=0), Adam masked to the threshold scales,
+                       cosine-annealed LR (§4.1.2).
+  * calibrate_step   — observer pass (§2 calibration).
+  * pretrain_step    — standard next-token CE on all params (substrate
+                       proof: the framework trains, not just fine-tunes).
+  * prefill_step / serve_step — int8 serving paths (weights int8-resident).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api as A
+from repro.core.distill import chunked_ce_loss, chunked_sq_err
+from repro.optim.adam import AdamState, adam_init, adam_update, cosine_restarts
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    base_lr: float = 1e-3
+    anneal_period: int = 100   # cosine restart period (steps)
+    weight_decay: float = 0.0
+    aux_weight: float = 0.01   # MoE load-balance weight (pretrain mode)
+
+
+def make_calibrate_step(model, cfg, policy: A.QuantPolicy):
+    def calibrate_step(params, qparams, batch):
+        ctx = A.make_ctx("calibrate", policy, qparams)
+        model.hidden(params, batch, ctx, remat=False)
+        merged = dict(qparams)
+        for path, obs in ctx.updates.items():
+            entry = dict(merged[path])
+            entry["act"] = obs
+            merged[path] = entry
+        return merged
+
+    return calibrate_step
+
+
+def make_fat_train_step(model, cfg, policy: A.QuantPolicy,
+                        hp: TrainHParams = TrainHParams(),
+                        n_micro: int = 1):
+    """The FAT QAT step.  Gradients are taken w.r.t. the full qparams tree
+    but the Adam update is masked to the trained leaves (alpha scales and
+    optional pointwise scales) — §3.1.3: "All network parameters except
+    quantization thresholds are fixed".
+
+    ``n_micro`` > 1 runs microbatched gradient accumulation: activations
+    peak at one microbatch's footprint while the accumulated state is just
+    the qparams-shaped gradient (a few KB of alphas + thresholds) — the
+    cheapest gradient-accumulation in existence, courtesy of FAT's tiny
+    trainable set.
+    """
+
+    def loss_for(qp, params, batch):
+        # weights are frozen in FAT (§3.1.3) — without this stop_gradient
+        # the layer-scan VJP materializes a stacked (L, ...) f32 cotangent
+        # for every weight tensor it scans over (GBs that are immediately
+        # discarded)
+        params = jax.lax.stop_gradient(params)
+        # teacher: full precision, frozen
+        h_t, _ = model.hidden(params, batch, None, remat=cfg.remat)
+        h_t = jax.lax.stop_gradient(h_t)
+        # student: fake-quantized with trained thresholds
+        ctx = A.make_ctx("fake", policy, qp)
+        h_s, _ = model.hidden(params, batch, ctx, remat=cfg.remat)
+        ro_t = model.readout_fn(params, None)
+        ro_s = model.readout_fn(params, ctx)
+        sq, n = chunked_sq_err(h_t, h_s, ro_t, ro_s, chunk=cfg.loss_chunk)
+        return jnp.sqrt(sq / n)  # eq. 25
+
+    def train_step(params, qparams, opt_state: AdamState, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_for)(qparams, params, batch)
+        else:
+            from repro.dist.constraints import constrain_activation
+
+            micro = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            def body(acc, mb):
+                mb = jax.tree.map(constrain_activation, mb)
+                l, g = jax.value_and_grad(loss_for)(qparams, params, mb)
+                acc_l, acc_g = acc
+                return (acc_l + l,
+                        jax.tree.map(jnp.add, acc_g, g)), None
+
+            zero_g = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), qparams)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero_g), micro)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+        lr = cosine_restarts(opt_state.step, hp.base_lr, hp.anneal_period)
+        mask = A.trainable_mask(qparams)
+        new_qp, new_opt = adam_update(grads, opt_state, qparams, lr, mask=mask)
+        return new_qp, new_opt, {"loss": loss, "lr": lr}
+
+    return train_step
+
+
+def make_pretrain_step(model, cfg, hp: TrainHParams = TrainHParams()):
+    def pretrain_step(params, opt_state: AdamState, batch):
+        def loss_fn(params):
+            h, aux = model.hidden(params, batch, None, remat=cfg.remat)
+            if cfg.modality == "vlm":
+                h = h[:, cfg.mm_patches:, :]
+            ce = chunked_ce_loss(h, batch["labels"], model.readout_fn(params),
+                                 chunk=cfg.loss_chunk)
+            return ce + hp.aux_weight * aux
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        lr = cosine_restarts(opt_state.step, hp.base_lr, hp.anneal_period)
+        new_params, new_opt = adam_update(grads, opt_state, params, lr,
+                                          weight_decay=hp.weight_decay)
+        return new_params, new_opt, {"loss": loss, "lr": lr}
+
+    return pretrain_step
+
+
+def make_prefill_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8"):
+    def prefill_step(serve_params, qparams, batch, cache):
+        ctx = A.make_ctx(mode, policy, qparams) if mode != "none" else None
+        logits, new_cache = model.prefill(serve_params, batch, cache, ctx)
+        return logits, new_cache
+
+    return prefill_step
+
+
+def make_serve_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8"):
+    def serve_step(serve_params, qparams, tokens, cache, cur_pos):
+        ctx = A.make_ctx(mode, policy, qparams) if mode != "none" else None
+        logits, new_cache = model.decode_step(serve_params, tokens, cache,
+                                              cur_pos, ctx)
+        # greedy next token (sampled serving wires a temperature here)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+    return serve_step

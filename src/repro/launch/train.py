@@ -1,0 +1,118 @@
+"""Training driver: FAT QAT (paper mode) or pretrain (substrate mode).
+
+Runs on anything from 1 CPU to the production mesh; fault-tolerant:
+checkpoints atomically every N steps (threshold state + optimizer +
+data-pipeline position) and auto-resumes from the newest complete
+checkpoint on restart — kill it mid-run and rerun the same command to
+verify.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
+      --steps 200 --mode fat_qat --ckpt-dir /tmp/fat_ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import SHAPES, get_config
+from repro.configs.shapes import ShapeSpec
+from repro.core import api as A
+from repro.data import pipeline as DP
+from repro.launch import steps as ST
+from repro.models import build_model
+from repro.optim.adam import adam_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--mode", default="fat_qat",
+                    choices=["fat_qat", "pretrain"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--calib-batches", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    policy = A.QuantPolicy()
+    shape = ShapeSpec("cli", "train", args.seq, args.batch)
+    spec = DP.spec_for(cfg, shape)
+    hp = ST.TrainHParams(base_lr=args.lr)
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start_step = 0
+    params = qparams = opt = None
+    if mgr:
+        tree, meta = mgr.restore_latest()
+        if tree is not None:
+            print(f"[train] resuming from step {meta['step']}")
+            start_step = meta["step"]
+            params = tree["params"]
+            qparams = tree.get("qparams")
+            opt = jax.tree.map(jnp.asarray, tree.get("opt"))
+
+    if params is None:
+        params = model.init(jax.random.PRNGKey(0))
+
+    if args.mode == "fat_qat":
+        if qparams is None:
+            qparams = A.init_qparams(model, params, policy)
+            calib = jax.jit(ST.make_calibrate_step(model, cfg, policy))
+            for i, b in enumerate(
+                DP.calibration_batches(spec, args.calib_batches)
+            ):
+                qparams = calib(params, qparams, b)
+            qparams = A.finalize_calibration(qparams, policy)
+            print(f"[train] calibrated {len(qparams)} quant points on "
+                  f"{args.calib_batches} unlabeled batches")
+        if opt is None:
+            opt = adam_init(qparams)
+        else:
+            from repro.optim.adam import AdamState
+            opt = AdamState(step=opt["step"], mu=opt["mu"], nu=opt["nu"])
+        step_fn = jax.jit(ST.make_fat_train_step(model, cfg, policy, hp))
+    else:
+        if opt is None:
+            opt = adam_init(params)
+        else:
+            from repro.optim.adam import AdamState
+            opt = AdamState(step=opt["step"], mu=opt["mu"], nu=opt["nu"])
+        step_fn = jax.jit(ST.make_pretrain_step(model, cfg, hp))
+
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = DP.make_batch(spec, step)
+        if args.mode == "fat_qat":
+            qparams, opt, metrics = step_fn(params, qparams, opt, batch)
+        else:
+            params, opt, metrics = step_fn(params, opt, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.5f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0):.1f}s)")
+        if mgr and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, {
+                "params": params,
+                "qparams": qparams if args.mode == "fat_qat" else {},
+                "opt": {"step": opt.step, "mu": opt.mu, "nu": opt.nu},
+            })
+            print(f"[train] checkpointed step {step + 1}")
+    print("[train] done")
+    return params, qparams
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.module import Module, Dense, ExpertDense
+from repro.models.layers import RMSNorm, LayerNorm, Embedding
+from repro.models.model import CausalLM, EncDecLM, build_model

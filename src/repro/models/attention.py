@@ -1,0 +1,417 @@
+"""Attention: GQA/MQA with full, chunked-flash and sliding-window paths,
+plus KV-cache decode (the int8 serving hot path).
+
+Memory discipline matters at the assigned shapes (32k prefill, 512k
+decode):
+
+  * ``flash_attention`` — double-scan (query chunks x kv chunks) online
+    softmax; peak score tensor is (B, Hq, q_chunk, kv_chunk).
+  * ``sliding_window_attention`` — per-query-chunk dynamic slice of the
+    last ``window`` keys: O(S * window) compute, which is what makes the
+    gemma3/mixtral local layers sub-quadratic.
+  * ``decode_attention`` — one-token query against the cache; with a
+    sequence-sharded cache GSPMD turns the softmax reductions into the
+    flash-decode partial-max/partial-sum combine automatically.
+
+All paths share GQA head grouping: Hq = KV * G, computed as einsum over a
+(B, S, KV, G, D) view so no materialized head replication occurs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rotary, rotary_angles
+from repro.models.module import Dense, Module
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,KV,G,D)  k: (B,Sk,KV,D) -> (B,KV,G,Sq,Sk)."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k)
+
+
+def _gqa_out(p, v):
+    """p: (B,KV,G,Sq,Sk)  v: (B,Sk,KV,D) -> (B,Sq,KV,G,D)."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+
+
+def full_attention(q, k, v, *, causal: bool, q_pos=None, k_pos=None,
+                   window: int | None = None):
+    """Reference full-materialization attention (small shapes / oracle)."""
+    b, sq, kvh, g, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = _gqa_scores(q.astype(jnp.float32) * scale, k.astype(jnp.float32))
+    if q_pos is None:
+        q_pos = jnp.arange(sq)
+    if k_pos is None:
+        k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_chunk: int = 512,
+                    kv_chunk: int = 512, q_offset: int = 0,
+                    window: int | None = None):
+    """Online-softmax attention, scanned over query and kv chunks.
+
+    q: (B, Sq, KV, G, D); k/v: (B, Sk, KV, D).  ``q_offset`` shifts query
+    positions (decode / continued prefill).  Pure JAX (lax.scan) so it
+    lowers on any backend and GSPMD shards it; the Pallas TPU kernel in
+    kernels/ is the hardware hot path for the same contraction.
+    """
+    b, sq0, kvh, g, d = q.shape
+    sk0 = k.shape[1]
+    q_chunk = min(q_chunk, sq0)
+    kv_chunk = min(kv_chunk, sk0)
+    # pad ragged sequence lengths up to a chunk multiple; padded keys are
+    # masked by position (k_pos < sk0), padded query rows are sliced off.
+    sq = -(-sq0 // q_chunk) * q_chunk
+    sk = -(-sk0 // kv_chunk) * kv_chunk
+    if sq != sq0:
+        q = jnp.pad(q, [(0, 0), (0, sq - sq0), (0, 0), (0, 0), (0, 0)])
+    if sk != sk0:
+        k = jnp.pad(k, [(0, 0), (0, sk - sk0), (0, 0), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, sk - sk0), (0, 0), (0, 0)])
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    def q_body(_, qi):
+        # slice in the storage dtype, upcast per chunk — a full-tensor f32
+        # copy of q/k/v would cost 2x HBM for the whole sequence
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        qc = qc.astype(jnp.float32) * scale
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        # checkpoint: the (cq, ck) score/prob tiles must be recomputed in
+        # the backward, not saved — saving them stacks (nq*nk) f32 tiles
+        # and destroys flash attention's O(S) memory property
+        @jax.checkpoint
+        def kv_body(carry, ki):
+            o, m, l = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, axis=1)
+            kc = kc.astype(jnp.float32)
+            vc = vc.astype(jnp.float32)
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = _gqa_scores(qc, kc)  # (B,KV,G,cq,ck)
+            mask = (k_pos < sk0)[None, :]  # mask padded keys
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            o_new = o * corr[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, vc)
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((b, kvh, g, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, kvh, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(kv_body, (o0, m0, l0), jnp.arange(nk))
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        # emit in storage dtype: the stacked output is (Sq, ...)-sized
+        return None, jnp.moveaxis(o, 3, 1).astype(v.dtype)  # (B,cq,KV,G,D)
+
+    _, chunks = jax.lax.scan(q_body, None, jnp.arange(nq))
+    # chunks: (nq, B, cq, KV, G, D) -> (B, Sq, KV, G, D)
+    out = jnp.moveaxis(chunks, 0, 1).reshape(b, sq, kvh, g, d)
+    return out[:, :sq0].astype(v.dtype)
+
+
+def sliding_window_attention(q, k, v, *, window: int, q_chunk: int = 512,
+                             q_offset: int = 0):
+    """Banded causal attention in O(S * (window + q_chunk)) compute.
+
+    Pads KV on the left by ``window`` then, per query chunk, slices the
+    (window + q_chunk) keys that can possibly be visible.  All shapes are
+    static so this lowers/shards cleanly.
+    """
+    b, sq0, kvh, g, d = q.shape
+    sk0 = k.shape[1]
+    q_chunk = min(q_chunk, sq0)
+    sq = -(-sq0 // q_chunk) * q_chunk
+    if sq != sq0:
+        q = jnp.pad(q, [(0, 0), (0, sq - sq0), (0, 0), (0, 0), (0, 0)])
+        k = jnp.pad(k, [(0, 0), (0, sq - sk0), (0, 0), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, sq - sk0), (0, 0), (0, 0)])
+    nq = sq // q_chunk
+    span = window + q_chunk  # kv visible to one query chunk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    # left-pad keys/values by `window` so slices never underflow; stay in
+    # storage dtype and upcast per chunk (full-tensor f32 doubles HBM)
+    pad = [(0, 0), (window, 0), (0, 0), (0, 0)]
+    kp = jnp.pad(k, pad)
+    vp = jnp.pad(v, pad)
+
+    @jax.checkpoint
+    def q_body(_, qi):
+        q_start = qi * q_chunk
+        qc = jax.lax.dynamic_slice_in_dim(q, q_start, q_chunk, axis=1)
+        qc = qc.astype(jnp.float32) * scale
+        kc = jax.lax.dynamic_slice_in_dim(kp, q_start, span, axis=1).astype(
+            jnp.float32)
+        vc = jax.lax.dynamic_slice_in_dim(vp, q_start, span, axis=1).astype(
+            jnp.float32)
+        # absolute positions: queries q_start..q_start+cq-1 (+offset);
+        # keys (q_start - window)..(q_start + cq - 1); padding keys have
+        # negative positions and are masked out.
+        q_pos = q_offset + q_start + jnp.arange(q_chunk)
+        k_pos = q_offset + q_start - window + jnp.arange(span)
+        s = _gqa_scores(qc, kc)
+        mask = (
+            (q_pos[:, None] >= k_pos[None, :])
+            & ((q_pos[:, None] - k_pos[None, :]) < window)
+            & (k_pos[None, :] >= 0)
+            & (k_pos[None, :] < q_offset + sk0)
+        )
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return None, _gqa_out(p, vc).astype(v.dtype)
+
+    _, chunks = jax.lax.scan(q_body, None, jnp.arange(nq))
+    out = jnp.moveaxis(chunks, 0, 1).reshape(b, sq, kvh, g, d)
+    return out[:, :sq0]
+
+
+def decode_attention(q, k_cache, v_cache, cur_pos, *, window: int | None = None):
+    """One-step decode: q (B,1,KV,G,D) against cache (B,Smax,KV,D).
+
+    ``cur_pos`` is the number of valid cache entries (scalar).  Positions
+    beyond it (and outside the sliding window, if any) are masked.  With a
+    sequence-sharded cache, GSPMD lowers the masked softmax into partial
+    reductions + a tiny cross-shard combine (flash-decode).
+    """
+    b, _, kvh, g, d = q.shape
+    smax = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = _gqa_scores(q.astype(jnp.float32) * scale, k_cache.astype(jnp.float32))
+    k_pos = jnp.arange(smax)
+    mask = k_pos < cur_pos
+    if window is not None:
+        mask &= k_pos >= (cur_pos - window)
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+class Attention(Module):
+    """GQA attention block with rotary embedding and optional SWA."""
+
+    def __init__(
+        self,
+        d_model: int,
+        n_heads: int,
+        n_kv_heads: int,
+        head_dim: int,
+        *,
+        path: str,
+        window: int | None = None,
+        rope_base: float = 10000.0,
+        causal: bool = True,
+        cross: bool = False,
+        dtype=jnp.bfloat16,
+        q_chunk: int = 512,
+        kv_chunk: int = 512,
+    ):
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.n_kv = n_kv_heads
+        self.head_dim = head_dim
+        self.groups = n_heads // n_kv_heads
+        self.window = window
+        self.rope_base = rope_base
+        self.causal = causal
+        self.cross = cross
+        self.path = path
+        self.q_chunk = q_chunk
+        self.kv_chunk = kv_chunk
+        dd = dict(dtype=dtype)
+        self.wq = Dense(d_model, n_heads * head_dim, path=f"{path}/wq",
+                        logical_axes=("embed", "heads"), **dd)
+        self.wk = Dense(d_model, n_kv_heads * head_dim, path=f"{path}/wk",
+                        logical_axes=("embed", "kv_heads"), **dd)
+        self.wv = Dense(d_model, n_kv_heads * head_dim, path=f"{path}/wv",
+                        logical_axes=("embed", "kv_heads"), **dd)
+        self.wo = Dense(n_heads * head_dim, d_model, path=f"{path}/wo",
+                        logical_axes=("heads", "embed"), **dd)
+
+    def init(self, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "wq": self.wq.init(k1),
+            "wk": self.wk.init(k2),
+            "wv": self.wv.init(k3),
+            "wo": self.wo.init(k4),
+        }
+
+    # -- cache ------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        cache_len = min(max_len, self.window) if self.window else max_len
+        return {
+            "k": jnp.zeros((batch, cache_len, self.n_kv, self.head_dim), dtype),
+            "v": jnp.zeros((batch, cache_len, self.n_kv, self.head_dim), dtype),
+        }
+
+    def _qkv(self, params, x, ctx, kv_src=None):
+        b, s, _ = x.shape
+        q = self.wq(params["wq"], x, ctx).reshape(
+            b, s, self.n_kv, self.groups, self.head_dim
+        )
+        src = x if kv_src is None else kv_src
+        sk = src.shape[1]
+        k = self.wk(params["wk"], src, ctx).reshape(b, sk, self.n_kv, self.head_dim)
+        v = self.wv(params["wv"], src, ctx).reshape(b, sk, self.n_kv, self.head_dim)
+        return q, k, v
+
+    def _rope(self, q, k, q_positions, k_positions):
+        cos_q, sin_q = rotary_angles(q_positions, self.head_dim, self.rope_base)
+        b, s, kvh, g, d = q.shape
+        qf = q.reshape(b, s, kvh * g, d)
+        qf = apply_rotary(qf, cos_q, sin_q)
+        cos_k, sin_k = rotary_angles(k_positions, self.head_dim, self.rope_base)
+        k = apply_rotary(k, cos_k, sin_k)
+        return qf.reshape(b, s, kvh, g, d), k
+
+    def __call__(self, params, x, ctx=None, *, memory=None, q_offset: int = 0,
+                 force_full=None):
+        """Full-sequence forward (training / prefill without cache return).
+
+        memory: encoder states for cross-attention.
+        force_full: per-layer global-attention selector for scanned stacks
+          (gemma3 5:1, hymba's 3 global layers).  None/False -> this
+          layer's static behavior; True -> full attention; a traced bool ->
+          lax.cond between the two (both branches share the same params).
+        """
+        b, s, _ = x.shape
+        q, k, v = self._qkv(params, x, ctx, kv_src=memory)
+        if not self.cross:
+            q_pos = q_offset + jnp.arange(s)
+            k_pos = q_offset + jnp.arange(k.shape[1])
+            q, k = self._rope(q, k, q_pos, k_pos)
+
+            def windowed(q, k, v):
+                if self.window is not None and s > self.window:
+                    return sliding_window_attention(
+                        q, k, v, window=self.window, q_chunk=self.q_chunk,
+                        q_offset=q_offset,
+                    )
+                return flash_attention(
+                    q, k, v, causal=self.causal, q_chunk=self.q_chunk,
+                    kv_chunk=self.kv_chunk, q_offset=q_offset,
+                    window=self.window,
+                )
+
+            def full(q, k, v):
+                return flash_attention(
+                    q, k, v, causal=self.causal, q_chunk=self.q_chunk,
+                    kv_chunk=self.kv_chunk, q_offset=q_offset,
+                )
+
+            if force_full is None or force_full is False or self.window is None:
+                o = windowed(q, k, v)
+            elif force_full is True:
+                o = full(q, k, v)
+            else:
+                o = jax.lax.cond(force_full, full, windowed, q, k, v)
+        else:
+            o = flash_attention(
+                q, k, v, causal=False, q_chunk=self.q_chunk,
+                kv_chunk=self.kv_chunk,
+            )
+        o = o.reshape(b, s, self.n_heads * self.head_dim)
+        return self.wo(params["wo"], o, ctx)
+
+    def prefill(self, params, x, cache, ctx=None, *, memory=None):
+        """Forward + populate the KV cache (returns (y, cache))."""
+        b, s, _ = x.shape
+        q, k, v = self._qkv(params, x, ctx, kv_src=memory)
+        if not self.cross:
+            pos = jnp.arange(s)
+            q, k = self._rope(q, k, pos, pos)
+        cache_len = cache["k"].shape[1]
+        if self.cross:
+            new_cache = {"k": k[:, :cache_len], "v": v[:, :cache_len]}
+            o = flash_attention(q, k, v, causal=False, q_chunk=self.q_chunk,
+                                kv_chunk=self.kv_chunk)
+        else:
+            # keep the last cache_len entries; ring invariant: position p
+            # lives at slot p % cache_len (decode relies on this)
+            keep = min(s, cache_len)
+            kk = k[:, s - keep:]
+            vv = v[:, s - keep:]
+            if keep == cache_len:
+                shift = (s - keep) % cache_len
+                kk = jnp.roll(kk, shift, axis=1)
+                vv = jnp.roll(vv, shift, axis=1)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kk, 0, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vv, 0, axis=1),
+            }
+            if self.window is not None and s > self.window:
+                o = sliding_window_attention(q, k, v, window=self.window,
+                                             q_chunk=self.q_chunk)
+            else:
+                o = flash_attention(q, k, v, causal=self.causal,
+                                    q_chunk=self.q_chunk, kv_chunk=self.kv_chunk,
+                                    window=self.window)
+        o = o.reshape(b, s, self.n_heads * self.head_dim)
+        return self.wo(params["wo"], o, ctx), new_cache
+
+    def decode(self, params, x, cache, cur_pos, ctx=None, *, memory=None):
+        """Single-token decode. x: (B,1,d); cur_pos: tokens already cached.
+
+        For SWA layers the cache is a ring buffer of size ``window``; the
+        write index wraps and masking uses absolute positions.
+        """
+        b, s, _ = x.shape
+        q, k, v = self._qkv(params, x, ctx, kv_src=None if not self.cross else memory)
+        if self.cross:
+            o = decode_attention(q, cache["k"], cache["v"],
+                                 cache["k"].shape[1])
+            o = o.reshape(b, s, self.n_heads * self.head_dim)
+            return self.wo(params["wo"], o, ctx), cache
+        pos = jnp.full((s,), 0) + cur_pos
+        q, k = self._rope(q, k, pos, pos)
+        cache_len = cache["k"].shape[1]
+        if self.window is not None and cache_len == self.window:
+            # ring buffer: absolute decode against rotated positions
+            idx = cur_pos % cache_len
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, 1)
+            # absolute position of ring slot i given cur_pos
+            slot = jnp.arange(cache_len)
+            abs_pos = jnp.where(
+                slot <= idx, cur_pos - (idx - slot), cur_pos - (idx + cache_len - slot)
+            )
+            sc = _gqa_scores(
+                q.astype(jnp.float32) / jnp.sqrt(jnp.asarray(self.head_dim, jnp.float32)),
+                k_cache.astype(jnp.float32),
+            )
+            mask = (abs_pos >= 0) & (abs_pos >= cur_pos - self.window + 1)
+            sc = jnp.where(mask[None, None, None, None, :], sc, NEG_INF)
+            p = jax.nn.softmax(sc, axis=-1)
+            o = _gqa_out(p, v_cache.astype(jnp.float32)).astype(x.dtype)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cur_pos, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cur_pos, 1)
+            o = decode_attention(q, k_cache, v_cache, cur_pos + 1,
+                                 window=self.window)
+        o = o.reshape(b, s, self.n_heads * self.head_dim)
+        return self.wo(params["wo"], o, ctx), {"k": k_cache, "v": v_cache}

@@ -1,0 +1,80 @@
+"""Feed-forward blocks: SwiGLU (llama family) and classic GELU MLP.
+
+The SwiGLU block declares the paper's §3.3 cross-layer equalization pair:
+``up -> down`` is linear through the elementwise gate product (the
+silu(gate) path is untouched by an up-channel rescale), so per-channel
+scales migrate between w_up's output channels and w_down's input rows with
+zero functional change — the transformer analog of the paper's
+DWS -> ReLU -> Conv rescaling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ACTIVATIONS
+from repro.models.module import Dense, Module
+
+
+class SwiGLU(Module):
+    def __init__(self, d_model: int, d_ff: int, *, path: str, dtype=jnp.bfloat16,
+                 activation: str = "silu"):
+        self.d_model = d_model
+        self.d_ff = d_ff
+        self.path = path
+        self.act = ACTIVATIONS[activation]
+        self.gate = Dense(d_model, d_ff, path=f"{path}/gate",
+                          logical_axes=("embed", "mlp"), dtype=dtype)
+        self.up = Dense(d_model, d_ff, path=f"{path}/up",
+                        logical_axes=("embed", "mlp"), dtype=dtype)
+        self.down = Dense(d_ff, d_model, path=f"{path}/down",
+                          logical_axes=("mlp", "embed"), dtype=dtype)
+
+    def init(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"gate": self.gate.init(k1), "up": self.up.init(k2),
+                "down": self.down.init(k3)}
+
+    def __call__(self, params, x, ctx=None):
+        g = self.act(self.gate(params["gate"], x, ctx))
+        u = self.up(params["up"], x, ctx)
+        return self.down(params["down"], g * u, ctx)
+
+    def equalization_pairs(self):
+        """§3.3 analog: the up->down pair is linear through the gate.
+
+        The gate projection is 'locked' (nonlinearity in its path) —
+        mirrors the paper's locked DWS channels.
+        """
+        return [(self.up.path, self.down.path)]
+
+
+class GeluMLP(Module):
+    """Classic 2-layer MLP (seamless/enc-dec style).
+
+    fc1 -> gelu -> fc2 is NOT an equalization pair (gelu is nonlinear and
+    unbounded-below; scaling does not commute) — the paper's restriction
+    applies, so this block declares no pairs.
+    """
+
+    def __init__(self, d_model: int, d_ff: int, *, path: str, dtype=jnp.bfloat16,
+                 activation: str = "gelu"):
+        self.d_model = d_model
+        self.d_ff = d_ff
+        self.path = path
+        self.act = ACTIVATIONS[activation]
+        self.fc1 = Dense(d_model, d_ff, path=f"{path}/fc1", bias=True,
+                         logical_axes=("embed", "mlp"), dtype=dtype)
+        self.fc2 = Dense(d_ff, d_model, path=f"{path}/fc2", bias=True,
+                         logical_axes=("mlp", "embed"), dtype=dtype,
+                         act_unsigned=(activation == "relu"))
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"fc1": self.fc1.init(k1), "fc2": self.fc2.init(k2)}
+
+    def __call__(self, params, x, ctx=None):
+        return self.fc2(params["fc2"], self.act(self.fc1(params["fc1"], x, ctx)), ctx)
+
+    def equalization_pairs(self):
+        return []

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts with sort-based dispatch (MaxText-style).
+
+Dispatch happens independently per *group* (one group == one sequence in
+training/prefill, the whole batch in decode), so the token->slot cumsum
+stays local to a data shard — no global prefix scan crosses the mesh.
+
+Expert FFN weights are ``ExpertDense`` (E, d, f) tensors sharded over the
+model axis on the hidden dim (TP-experts): every data shard holds all
+experts (model-sharded), so dispatch needs **zero all-to-all**.  A true
+expert-parallel layout (experts sharded over 'model', all-to-all dispatch)
+is available as ``layout='ep'`` for the perf hillclimb.
+
+Quantization: expert weights quantize in vector mode with per-(expert,
+out-channel) thresholds — the paper's per-filter thresholds, one level up.
+The router stays unquantized (tiny, accuracy-critical — same spirit as the
+paper keeping accumulators in int32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ACTIVATIONS
+from repro.models.module import Dense, ExpertDense, Module
+
+
+def _dispatch(x, logits, top_k: int, capacity: int, num_experts: int):
+    """Batched sort-based dispatch: one independent dispatch per group.
+
+    x: (G, T, d); logits: (G, T, E).
+    Returns (x_dispatched (G, E, C, d), combine info for the return path).
+
+    Implementation note: the wide (.., d) tensors move ONLY through
+    gathers — GSPMD partitions gather batch dims cleanly, while a scatter
+    on a (G, slots, d) buffer falls back to full replication (+ giant u32
+    index broadcasts).  Scatters touch only small (G, T*K) int32 maps.
+    """
+    g, t, d = x.shape
+    e = num_experts
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, top_k)  # (G, T, K)
+    top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)
+
+    e_flat = top_idx.reshape(g, t * top_k)                      # (G, T*K)
+    t_flat = jnp.tile(jnp.repeat(jnp.arange(t), top_k), (g, 1))  # (G, T*K)
+    w_flat = top_vals.reshape(g, t * top_k)
+
+    order = jnp.argsort(e_flat, axis=-1)             # stable: ties by index
+    se = jnp.take_along_axis(e_flat, order, axis=-1)
+    st = jnp.take_along_axis(t_flat, order, axis=-1)
+
+    counts = jnp.sum(jax.nn.one_hot(e_flat, e, dtype=jnp.int32), axis=1)  # (G, E)
+    starts = jnp.cumsum(counts, axis=-1) - counts    # exclusive cumsum
+    rank = jnp.arange(t * top_k)[None, :] - jnp.take_along_axis(starts, se, axis=-1)
+    valid = rank < capacity
+    slot = jnp.where(valid, se * capacity + rank, e * capacity)  # trash slot
+
+    gi = jnp.arange(g)[:, None]
+    # slot -> source token (small int32 scatter); unfilled slots read the
+    # zero sentinel row of x_pad
+    src_tok = jnp.full((g, e * capacity + 1), t, jnp.int32)
+    src_tok = src_tok.at[gi, slot].set(st, mode="drop")
+    x_pad = jnp.concatenate([x, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+    x_disp = jnp.take_along_axis(x_pad, src_tok[:, :-1, None], axis=1)
+    x_disp = x_disp.reshape(g, e, capacity, d)
+    # (token, k) -> slot in original order (small int32 scatter)
+    slot_unsorted = jnp.full((g, t * top_k), e * capacity, jnp.int32)
+    slot_unsorted = slot_unsorted.at[gi, order].set(slot, mode="drop")
+    return x_disp, (slot_unsorted, w_flat)
+
+
+def _combine(y_exp, info, t: int):
+    """Return path: gather expert outputs back to token order and
+    weight-sum over the K assignments.  y_exp: (G, E, C, d) -> (G, T, d).
+    Dropped assignments point at the zero sentinel row — no masking pass
+    over the wide tensor needed."""
+    slot_unsorted, w_flat = info  # (G, T*K)
+    g, e, c, d = y_exp.shape
+    k = (slot_unsorted.shape[1]) // t
+    flat = y_exp.reshape(g, e * c, d)
+    flat_pad = jnp.concatenate([flat, jnp.zeros((g, 1, d), flat.dtype)], axis=1)
+    contrib = jnp.take_along_axis(flat_pad, slot_unsorted[..., None], axis=1)
+    contrib = contrib * w_flat[..., None].astype(flat.dtype)
+    return contrib.reshape(g, t, k, d).sum(axis=2)
+
+
+class MoE(Module):
+    def __init__(
+        self,
+        d_model: int,
+        d_ff: int,
+        num_experts: int,
+        top_k: int,
+        *,
+        path: str,
+        capacity_factor: float = 1.25,
+        activation: str = "silu",
+        dtype=jnp.bfloat16,
+        layout: str = "tp",  # 'tp' (no all-to-all) | 'ep' (hillclimb)
+    ):
+        self.d_model = d_model
+        self.d_ff = d_ff
+        self.num_experts = num_experts
+        self.top_k = top_k
+        self.capacity_factor = capacity_factor
+        self.act = ACTIVATIONS[activation]
+        self.path = path
+        self.layout = layout
+        self.router = Dense(d_model, num_experts, path=f"{path}/router",
+                            quantize=False, dtype=jnp.float32,
+                            logical_axes=("embed", "expert"))
+        ea = ("expert", "embed", "mlp")
+        self.gate = ExpertDense(num_experts, d_model, d_ff,
+                                path=f"{path}/gate", dtype=dtype, logical_axes=ea)
+        self.up = ExpertDense(num_experts, d_model, d_ff,
+                              path=f"{path}/up", dtype=dtype, logical_axes=ea)
+        self.down = ExpertDense(num_experts, d_ff, d_model,
+                                path=f"{path}/down", dtype=dtype,
+                                logical_axes=("expert", "mlp", "embed"))
+
+    def init(self, key):
+        ks = jax.random.split(key, 4)
+        return {
+            "router": self.router.init(ks[0]),
+            "gate": self.gate.init(ks[1]),
+            "up": self.up.init(ks[2]),
+            "down": self.down.init(ks[3]),
+        }
+
+    def capacity(self, tokens_per_group: int) -> int:
+        c = int(np.ceil(tokens_per_group * self.top_k / self.num_experts
+                        * self.capacity_factor))
+        return max(8, int(np.ceil(c / 8)) * 8)  # pad to sublane multiple
+
+    def __call__(self, params, x, ctx=None):
+        """x: (B, S, d) -> (y (B, S, d), aux load-balance loss)."""
+        from repro.dist.constraints import constrain_activation
+
+        b, s, d = x.shape
+        logits = self.router(params["router"], x.astype(jnp.float32), ctx)
+        cap = self.capacity(s)
+
+        xd, info = _dispatch(x, logits, self.top_k, cap, self.num_experts)
+        # scatter output defeats GSPMD propagation: anchor the dispatch
+        # buffer's group dim on the batch axes or it replicates (G,E,C,d)
+        # on every device
+        xd = constrain_activation(xd)
+        g = self.act(self.gate(params["gate"], xd, ctx))
+        u = self.up(params["up"], xd, ctx)
+        yd = self.down(params["down"], g * u, ctx)
+        yd = constrain_activation(yd)
+        y = constrain_activation(_combine(yd, info, s))
+
+        # standard load-balance auxiliary (Switch-style): E * sum(f_e * p_e)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        top1 = jnp.argmax(probs, axis=-1)
+        f = jnp.mean(jax.nn.one_hot(top1, self.num_experts), axis=(0, 1))
+        p = jnp.mean(probs, axis=(0, 1))
+        aux = self.num_experts * jnp.sum(f * p)
+        return y, aux
+
+    def equalization_pairs(self):
+        """Per-expert up->down rescale (§3.3 through the gate product)."""
+        return [(self.up.path, self.down.path)]

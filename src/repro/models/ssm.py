@@ -1,0 +1,303 @@
+"""Mamba2 (state-space duality) block — chunked SSD train/prefill path and
+O(1)-state recurrent decode path.
+
+Faithful to the SSD formulation (arXiv:2405.21060): within a chunk the
+output is an attention-like quadratic form with a decay mask; across chunks
+a (B, H, N, P) state is carried by a linear scan.  ``long_500k`` decode is
+feasible precisely because the decode state is O(1) in sequence length.
+
+Projections are separate quantizable Dense layers (z/x/B/C/dt) rather than
+one fused in_proj: each piece then has a clean logical sharding (heads over
+the model axis) and its own FAT thresholds — mixing them in one matmul
+would force a resharding slice *and* a shared quantization threshold over
+statistically different distributions (exactly what the paper's per-filter
+thresholds are designed to avoid).
+
+Equalization note (DESIGN.md §Arch-applicability): every path into the SSD
+recursion crosses a nonlinearity (silu on the conv stream and the z gate,
+softplus on dt) — per-channel rescaling does NOT commute (paper §3.3's own
+restriction), so this block declares NO equalization pairs; FAT thresholds
+still quantize all six projections.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import RMSNorm, silu
+from repro.models.module import Dense, Module
+
+
+def ssd_chunked(x, dt, a_log, b, c, *, chunk: int = 128):
+    """Chunked SSD scan.
+
+    x:  (B, L, H, P) inputs per head
+    dt: (B, L, H)    post-softplus timesteps
+    a_log: (H,)      A = -exp(a_log)
+    b:  (B, L, G, N) input projections (G groups broadcast over heads)
+    c:  (B, L, G, N) output projections
+    Returns y: (B, L, H, P)
+    """
+    bsz, l0, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    hpg = h // g  # heads per group
+    chunk = min(chunk, l0)
+    # pad ragged lengths: dt=0 at padded steps makes them exact no-ops in
+    # the recursion (dA=0, B.x=0); padded outputs are sliced off
+    l = -(-l0 // chunk) * chunk
+    if l != l0:
+        pad = l - l0
+        x = jnp.pad(x, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        dt = jnp.pad(dt, [(0, 0), (0, pad), (0, 0)])
+        b = jnp.pad(b, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        c = jnp.pad(c, [(0, 0), (0, pad), (0, 0), (0, 0)])
+    nc = l // chunk
+
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,) negative
+    dta = dt.astype(jnp.float32) * a  # (B, L, H) decay log-increments
+
+    # chunked views
+    xc = x.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    dac = dta.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, g, n).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, chunk, g, n).astype(jnp.float32)
+
+    cum = jnp.cumsum(dac, axis=2)  # (B, nc, Q, H) inclusive
+    total = cum[:, :, -1, :]  # (B, nc, H) chunk decay total
+
+    # ---- intra-chunk (quadratic attention-like form) ---------------------
+    # decay[i, j] = exp(cum_i - cum_j) for i >= j.  The exponent is clamped
+    # to 0 at masked (i < j) entries BEFORE exp: exp(diff) overflows there
+    # (diff > 0 grows with chunk length) and inf * 0 in the VJP poisons
+    # every gradient upstream (classic where/exp NaN trap).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q_i,Q_j,H)
+    idx = jnp.arange(chunk)
+    causal = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(causal, diff, 0.0)) * causal
+    # scores[i, j] per group: C_i . B_j
+    scores = jnp.einsum("bzign,bzjgn->bzijg", cc, bc)  # (B,nc,Q,Q,G)
+    scores = jnp.repeat(scores, hpg, axis=-1)  # -> (B,nc,Q,Q,H)
+    m = scores * decay * dtc[:, :, None, :, :]  # weight by dt_j
+    y_intra = jnp.einsum("bzijh,bzjhp->bzihp", m, xc)
+
+    # ---- chunk-local states ---------------------------------------------
+    # S_local = sum_j exp(total - cum_j) * dt_j * B_j (x) x_j
+    rdecay = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,Q,H)
+    bh = jnp.repeat(bc, hpg, axis=3)  # (B,nc,Q,H,N)
+    s_local = jnp.einsum(
+        "bzqhn,bzqh,bzqhp->bzhnp", bh, rdecay * dtc, xc
+    )  # (B,nc,H,N,P)
+
+    # ---- inter-chunk linear scan -----------------------------------------
+    def scan_fn(carry, inp):
+        s_loc, tot = inp  # (B,H,N,P), (B,H)
+        s_in = carry
+        s_out = jnp.exp(tot)[:, :, None, None] * s_in + s_loc
+        return s_out, s_in  # emit state *entering* the chunk
+
+    init = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, s_in = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(s_local, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)  # (B, nc, H, N, P)
+
+    # ---- inter-chunk contribution ----------------------------------------
+    ch = jnp.repeat(cc, hpg, axis=3)  # (B,nc,Q,H,N)
+    y_inter = jnp.einsum("bzqhn,bzhnp->bzqhp", ch * jnp.exp(cum)[..., None], s_in)
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    return y[:, :l0].astype(x.dtype)
+
+
+def ssd_decode_step(state, x_t, dt_t, a_log, b_t, c_t):
+    """One recurrent step.
+
+    state: (B, H, N, P); x_t: (B, H, P); dt_t: (B, H);
+    b_t/c_t: (B, G, N) broadcast over heads.
+    Returns (new_state, y_t (B, H, P)).
+    """
+    h = x_t.shape[1]
+    g = b_t.shape[1]
+    hpg = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    da = jnp.exp(dt_t.astype(jnp.float32) * a)  # (B, H)
+    bh = jnp.repeat(b_t.astype(jnp.float32), hpg, axis=1)  # (B,H,N)
+    ch = jnp.repeat(c_t.astype(jnp.float32), hpg, axis=1)
+    outer = jnp.einsum("bhn,bhp->bhnp", bh, x_t.astype(jnp.float32))
+    new_state = da[:, :, None, None] * state + dt_t[:, :, None, None] * outer
+    y = jnp.einsum("bhn,bhnp->bhp", ch, new_state)
+    return new_state, y.astype(x_t.dtype)
+
+
+def causal_conv1d(x, w, b=None):
+    """Depthwise causal conv. x: (B, L, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, [(0, 0), (k - 1, 0), (0, 0)])
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    if b is not None:
+        y = y + b
+    return y
+
+
+def conv1d_decode(conv_state, x_t, w, b=None):
+    """conv_state: (B, K-1, C) previous inputs; x_t: (B, 1, C)."""
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w)[:, None, :]
+    if b is not None:
+        y = y + b
+    return window[:, 1:, :], y
+
+
+class Mamba2Block(Module):
+    def __init__(
+        self,
+        d_model: int,
+        *,
+        path: str,
+        d_state: int = 128,
+        n_heads: int | None = None,
+        head_dim: int = 64,
+        expand: int = 2,
+        n_groups: int = 1,
+        conv_width: int = 4,
+        chunk: int = 128,
+        dtype=jnp.bfloat16,
+    ):
+        self.d_model = d_model
+        self.d_inner = expand * d_model
+        self.head_dim = head_dim
+        self.n_heads = n_heads or self.d_inner // head_dim
+        assert self.n_heads * head_dim == self.d_inner
+        self.d_state = d_state
+        self.n_groups = n_groups
+        self.conv_width = conv_width
+        self.chunk = chunk
+        self.path = path
+        self.dtype = dtype
+        dd = dict(dtype=dtype)
+        self.z_proj = Dense(d_model, self.d_inner, path=f"{path}/z_proj",
+                            logical_axes=("embed", "heads"), **dd)
+        self.x_proj = Dense(d_model, self.d_inner, path=f"{path}/x_proj",
+                            logical_axes=("embed", "heads"), **dd)
+        self.b_proj = Dense(d_model, n_groups * d_state, path=f"{path}/b_proj",
+                            logical_axes=("embed", "state"), **dd)
+        self.c_proj = Dense(d_model, n_groups * d_state, path=f"{path}/c_proj",
+                            logical_axes=("embed", "state"), **dd)
+        self.dt_proj = Dense(d_model, self.n_heads, path=f"{path}/dt_proj",
+                             logical_axes=("embed", "heads"), **dd)
+        self.out_proj = Dense(self.d_inner, d_model, path=f"{path}/out_proj",
+                              logical_axes=("heads", "embed"), **dd)
+        self.norm = RMSNorm(self.d_inner, path=f"{path}/norm", dtype=dtype)
+
+    def init(self, key):
+        ks = jax.random.split(key, 9)
+        h = self.n_heads
+        conv_ch = self.d_inner + 2 * self.n_groups * self.d_state
+        return {
+            "z_proj": self.z_proj.init(ks[0]),
+            "x_proj": self.x_proj.init(ks[1]),
+            "b_proj": self.b_proj.init(ks[2]),
+            "c_proj": self.c_proj.init(ks[3]),
+            "dt_proj": self.dt_proj.init(ks[4]),
+            "out_proj": self.out_proj.init(ks[5]),
+            "norm": self.norm.init(ks[6]),
+            "a_log": jnp.log(
+                jnp.linspace(1.0, 16.0, h).astype(jnp.float32)
+            ),
+            "d_skip": jnp.ones((h,), jnp.float32),
+            "dt_bias": jnp.zeros((h,), jnp.float32),
+            "conv_w": (jax.random.normal(ks[7], (self.conv_width, conv_ch))
+                       * 0.1).astype(jnp.float32),
+            "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        }
+
+    def _project(self, params, u, ctx):
+        z = self.z_proj(params["z_proj"], u, ctx)
+        xi = self.x_proj(params["x_proj"], u, ctx)
+        bi = self.b_proj(params["b_proj"], u, ctx)
+        ci = self.c_proj(params["c_proj"], u, ctx)
+        dt = self.dt_proj(params["dt_proj"], u, ctx)
+        return z, xi, bi, ci, dt
+
+    def __call__(self, params, u, ctx=None):
+        """u: (B, L, d_model) -> (B, L, d_model). Train / prefill path."""
+        bsz, l, _ = u.shape
+        z, xi, bi, ci, dt = self._project(params, u, ctx)
+        # causal depthwise conv over the concatenated (x, B, C) stream
+        xbc = jnp.concatenate(
+            [xi.astype(jnp.float32), bi.astype(jnp.float32),
+             ci.astype(jnp.float32)], axis=-1
+        )
+        xbc = silu(causal_conv1d(xbc, params["conv_w"], params["conv_b"]))
+        di = self.d_inner
+        gn = self.n_groups * self.d_state
+        xi = xbc[..., :di]
+        bi = xbc[..., di : di + gn]
+        ci = xbc[..., di + gn :]
+
+        x_h = xi.reshape(bsz, l, self.n_heads, self.head_dim)
+        b_h = bi.reshape(bsz, l, self.n_groups, self.d_state)
+        c_h = ci.reshape(bsz, l, self.n_groups, self.d_state)
+        dt_s = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+
+        y = ssd_chunked(x_h, dt_s, params["a_log"], b_h, c_h, chunk=self.chunk)
+        y = y + params["d_skip"][None, None, :, None] * x_h.astype(jnp.float32)
+        y = y.reshape(bsz, l, di)
+        # gated RMSNorm (mamba2): norm(y * silu(z))
+        y = self.norm(params["norm"], y.astype(u.dtype) * silu(z))
+        return self.out_proj(params["out_proj"], y, ctx)
+
+    # -- decode -----------------------------------------------------------
+    def init_cache(self, batch: int, dtype=jnp.float32) -> dict:
+        conv_ch = self.d_inner + 2 * self.n_groups * self.d_state
+        return {
+            "ssm": jnp.zeros(
+                (batch, self.n_heads, self.d_state, self.head_dim), jnp.float32
+            ),
+            "conv": jnp.zeros((batch, self.conv_width - 1, conv_ch), jnp.float32),
+        }
+
+    def decode(self, params, u, cache, ctx=None):
+        """u: (B, 1, d_model). Returns (y, new_cache). O(1) in seq len."""
+        bsz = u.shape[0]
+        z, xi, bi, ci, dt = self._project(params, u, ctx)
+        xbc = jnp.concatenate(
+            [xi.astype(jnp.float32), bi.astype(jnp.float32),
+             ci.astype(jnp.float32)], axis=-1
+        )
+        conv_state, xbc = conv1d_decode(
+            cache["conv"], xbc, params["conv_w"], params["conv_b"]
+        )
+        xbc = silu(xbc)
+        di = self.d_inner
+        gn = self.n_groups * self.d_state
+        x_t = xbc[:, 0, :di].reshape(bsz, self.n_heads, self.head_dim)
+        b_t = xbc[:, 0, di : di + gn].reshape(bsz, self.n_groups, self.d_state)
+        c_t = xbc[:, 0, di + gn :].reshape(bsz, self.n_groups, self.d_state)
+        dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+
+        new_state, y_t = ssd_decode_step(
+            cache["ssm"], x_t, dt_t, params["a_log"], b_t, c_t
+        )
+        y_t = y_t + params["d_skip"][None, :, None] * x_t.astype(jnp.float32)
+        y = y_t.reshape(bsz, 1, di).astype(u.dtype)
+        y = self.norm(params["norm"], y * silu(z))
+        y = self.out_proj(params["out_proj"], y, ctx)
+        return y, {"ssm": new_state, "conv": conv_state}
+
+    def equalization_pairs(self):
+        """None: every producer->consumer pair in this block crosses a
+        nonlinearity (silu on z and on the conv stream) or the SSD
+        recursion itself — the paper's §3.3 restriction ("any non-linear
+        operations on the scaled data ... are not allowed") locks the whole
+        block.  FAT per-channel thresholds still apply to every projection;
+        only the *rescaling* trick is inapplicable.  See DESIGN.md
+        §Arch-applicability."""
+        return []

@@ -1,0 +1,124 @@
+"""Adam + cosine annealing with warm restarts — the paper's exact training
+recipe (§4.1.2: "Adam optimizer is used for training, and cosine annealing
+with the reset of optimizer parameters — for learning rate").
+
+Functional (optax-style) but dependency-free.  The restart resets BOTH the
+learning-rate phase and the Adam moments — the "reset of optimizer
+parameters" the paper calls out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AdamState(NamedTuple):
+    step: jax.Array     # global step
+    mu: Any             # first moment pytree
+    nu: Any             # second moment pytree
+
+
+def adam_init(params) -> AdamState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=z,
+                     nu=jax.tree.map(jnp.copy, z))
+
+
+def cosine_restarts(step, base_lr: float, period: int, t_mult: float = 1.0,
+                    min_frac: float = 0.0):
+    """Learning rate at ``step`` under SGDR-style cosine annealing.
+
+    Phase resets every ``period`` steps (period optionally growing by
+    t_mult).  Implemented in jnp so it jits inside the train step.
+    """
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    if t_mult == 1.0:
+        phase = jnp.mod(step, period) / period
+    else:
+        # closed form for geometric periods
+        k = jnp.floor(
+            jnp.log1p((t_mult - 1.0) * step / period) / np.log(t_mult)
+        )
+        start = period * (t_mult**k - 1.0) / (t_mult - 1.0)
+        cur = period * t_mult**k
+        phase = (step - start) / cur
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * phase))
+    return base_lr * (min_frac + (1.0 - min_frac) * cos)
+
+
+def restart_boundary(step: int, period: int, t_mult: float = 1.0) -> bool:
+    """True when ``step`` begins a new annealing cycle (host-side helper)."""
+    if t_mult == 1.0:
+        return step > 0 and step % period == 0
+    acc = 0
+    cur = period
+    while acc < step:
+        acc += cur
+        cur = int(round(cur * t_mult))
+    return acc == step and step > 0
+
+
+def reset_moments(state: AdamState) -> AdamState:
+    """The paper's 'reset of optimizer parameters' at each LR restart."""
+    return AdamState(
+        step=state.step,
+        mu=jax.tree.map(jnp.zeros_like, state.mu),
+        nu=jax.tree.map(jnp.zeros_like, state.nu),
+    )
+
+
+def adam_update(
+    grads,
+    state: AdamState,
+    params,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    mask=None,
+):
+    """One Adam step.  ``mask`` (pytree of bool) freezes leaves where False —
+    how FAT trains *only* the threshold scale factors while every network
+    weight stays fixed (§3.1.3 "All network parameters except quantization
+    thresholds are fixed")."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+
+    def upd(g, m, v, p, trainable=True):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / (1 - b1**t)
+        vhat = v2 / (1 - b2**t)
+        delta = lr * (mhat / (jnp.sqrt(vhat) + eps)
+                      + weight_decay * p.astype(jnp.float32))
+        if isinstance(trainable, bool):
+            keep = trainable
+        else:
+            keep = trainable  # array mask
+        new_p = (p.astype(jnp.float32) - delta).astype(p.dtype)
+        if keep is True:
+            return new_p, m2, v2
+        return (
+            jnp.where(keep, new_p, p).astype(p.dtype),
+            jnp.where(keep, m2, m),
+            jnp.where(keep, v2, v),
+        )
+
+    if mask is None:
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    else:
+        out = jax.tree.map(
+            lambda g, m, v, p, k: upd(g, m, v, p, k),
+            grads, state.mu, state.nu, params, mask,
+        )
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamState(step=step, mu=new_mu, nu=new_nu)

@@ -1,0 +1,27 @@
+"""Shared test fixtures.
+
+NOTE: XLA_FLAGS / host-platform device-count tricks are deliberately NOT
+set here — smoke tests and benches must see the 1 real CPU device; only
+launch/dryrun.py requests 512 placeholder devices (and only when run as a
+script).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def rel_err(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return float(np.linalg.norm(a - b) / (np.linalg.norm(a) + 1e-12))

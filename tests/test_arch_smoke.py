@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward + one FAT train step on CPU, asserting output
+shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.core import api as A
+from repro.core.distill import rmse_distill_loss
+from repro.models import build_model
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key, batch=B, seq=S):
+    toks = jax.random.randint(key, (batch, seq), 0, cfg.vocab)
+    if cfg.family == "encdec":
+        frames = jax.random.normal(key, (batch, seq, cfg.frame_dim)).astype(cfg.dtype)
+        return {"frames": frames, "tokens": toks[:, : max(seq // cfg.dec_ratio, 4)]}
+    if cfg.modality == "vlm":
+        patches = jax.random.normal(
+            key, (batch, cfg.mm_patches, cfg.mm_dim)
+        ).astype(cfg.dtype)
+        return {"patches": patches, "tokens": toks[:, : seq - cfg.mm_patches]}
+    return {"tokens": toks}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nan(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = model(params, batch)
+    n_pos = batch["tokens"].shape[1] + (
+        cfg.mm_patches if cfg.modality == "vlm" else 0
+    )
+    assert logits.shape == (B, n_pos, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_fat_train_step(arch):
+    """One full FAT distillation step: calibrate -> fake-quant student ->
+    RMSE loss -> grads land on threshold alphas and are finite."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    policy = A.QuantPolicy()
+    qp = A.init_qparams(model, params, policy)
+    assert len(qp) > 0
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+
+    # calibration pass
+    ctx = A.make_ctx("calibrate", policy, qp)
+    model(params, batch, ctx)
+    for path, obs in ctx.updates.items():
+        e = dict(qp[path])
+        e["act"] = obs
+        qp[path] = e
+    qp = A.finalize_calibration(qp, policy)
+
+    teacher, _ = model(params, batch)
+
+    def loss_fn(qp):
+        s, _ = model(params, batch, A.make_ctx("fake", policy, qp))
+        return rmse_distill_loss(teacher, s)
+
+    loss, grads = jax.value_and_grad(loss_fn)(qp)
+    assert np.isfinite(float(loss))
+    # gradients reach at least one alpha and are finite everywhere
+    alpha_norms = [
+        float(jnp.sum(jnp.abs(e["w"]["alpha"]))) + float(jnp.sum(jnp.abs(e["act"]["alpha"])))
+        for e in jax.tree.map(jnp.asarray, grads).values()
+    ]
+    assert all(np.isfinite(x) for x in alpha_norms)
+    assert any(x > 0 for x in alpha_norms)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_int8_serving_close_to_teacher(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    policy = A.QuantPolicy()
+    qp = A.init_qparams(model, params, policy)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    ctx = A.make_ctx("calibrate", policy, qp)
+    model(params, batch, ctx)
+    for path, obs in ctx.updates.items():
+        qp[path] = {**qp[path], "act": obs}
+    qp = A.finalize_calibration(qp, policy)
+    teacher, _ = model(params, batch)
+    p8 = A.convert_to_int8(model, params, qp, policy)
+    out8, _ = model(p8, batch, A.make_ctx("int8", policy, qp))
+    rel = float(
+        jnp.linalg.norm((teacher - out8).astype(jnp.float32))
+        / (jnp.linalg.norm(teacher.astype(jnp.float32)) + 1e-9)
+    )
+    assert rel < 0.3, f"{arch}: int8 rel err {rel}"
+    # int8 weights actually stored as int8
+    leaves = jax.tree.leaves(p8)
+    assert any(l.dtype == jnp.int8 for l in leaves)

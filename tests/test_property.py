@@ -1,0 +1,170 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant as Q
+from repro.core.equalization import pair_rescale
+from repro.core.folding import fold_batchnorm
+
+F32 = st.floats(min_value=-50.0, max_value=50.0, allow_nan=False,
+                width=32)
+
+
+@st.composite
+def arrays(draw, max_rows=16, max_cols=8):
+    r = draw(st.integers(2, max_rows))
+    c = draw(st.integers(2, max_cols))
+    vals = draw(st.lists(F32, min_size=r * c, max_size=r * c))
+    return np.asarray(vals, np.float32).reshape(r, c)
+
+
+class TestQuantInvariants:
+    @settings(max_examples=40, deadline=None)
+    @given(arrays(), st.floats(0.5, 1.0))
+    def test_roundtrip_error_bounded(self, x, alpha):
+        """|x - fq(x)| <= step/2 inside the threshold, and fq saturates at
+        exactly alpha*T outside (paper eq. 4/12)."""
+        spec = Q.QuantSpec(bits=8, symmetric=True)
+        x = jnp.asarray(x)
+        t = Q.max_abs_threshold(x, spec)
+        if float(t) == 0.0:
+            return
+        y = Q.fake_quant_symmetric(x, t, jnp.asarray(alpha), spec)
+        t_adj = float(t) * alpha
+        step = t_adj / 127
+        inside = np.abs(np.asarray(x)) <= t_adj
+        err = np.abs(np.asarray(x - y))
+        assert np.all(err[inside] <= step / 2 + 1e-5)
+        # outside the threshold the output saturates at +-t_adj
+        assert np.all(np.abs(np.asarray(y)[~inside]) <= t_adj + 1e-5)
+
+    @settings(max_examples=40, deadline=None)
+    @given(arrays())
+    def test_quantization_idempotent(self, x):
+        """fq(fq(x)) == fq(x) — quantized values are fixed points."""
+        spec = Q.QuantSpec(bits=8, symmetric=True)
+        x = jnp.asarray(x)
+        t = Q.max_abs_threshold(x, spec)
+        if float(t) == 0.0:
+            return
+        y1 = Q.fake_quant_symmetric(x, t, jnp.ones(()), spec)
+        y2 = Q.fake_quant_symmetric(y1, t, jnp.ones(()), spec)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=40, deadline=None)
+    @given(arrays())
+    def test_int8_roundtrip_matches_fake_quant(self, x):
+        """Real int8 (w_q * scale) == fake-quant output (same math)."""
+        spec = Q.QuantSpec(bits=8, symmetric=True, per_channel=True,
+                           channel_axis=-1)
+        x = jnp.asarray(x)
+        t = Q.max_abs_threshold(x, spec)
+        if float(jnp.min(t)) == 0.0:
+            return
+        alpha = jnp.ones_like(t)
+        y_fake = Q.fake_quant_symmetric(x, t, alpha, spec)
+        w_q, scale = Q.quantize_weights_int8(x, t, alpha, spec)
+        y_int = w_q.astype(jnp.float32) * scale
+        np.testing.assert_allclose(np.asarray(y_fake), np.asarray(y_int),
+                                   rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=30, deadline=None)
+    @given(arrays(), st.floats(0.5, 1.0))
+    def test_values_beyond_threshold_saturate(self, x, alpha):
+        """Every |x| > T_adj maps exactly to ±T_adj (clip, eq. 4), and the
+        saturated set grows as alpha shrinks (clipping is monotone)."""
+        spec = Q.QuantSpec(bits=8, symmetric=True)
+        x = jnp.asarray(x)
+        t = Q.max_abs_threshold(x, spec)
+        if float(t) == 0.0:
+            return
+        t_adj = alpha * float(t)
+        y = Q.fake_quant_symmetric(x, t, jnp.asarray(alpha), spec)
+        beyond = np.abs(np.asarray(x)) > t_adj * (1 + 1e-6)
+        np.testing.assert_allclose(
+            np.abs(np.asarray(y)[beyond]), t_adj, rtol=1e-5)
+
+
+class TestEqualizationInvariance:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10000))
+    def test_pair_rescale_preserves_function(self, seed):
+        """§3.3 core identity: rescaled (up, down) pair computes the same
+        function through an elementwise product gate."""
+        rng = np.random.default_rng(seed)
+        d, h = 8, 12
+        w_up = jnp.asarray(rng.normal(size=(d, h)), jnp.float32)
+        w_gate = jnp.asarray(rng.normal(size=(d, h)), jnp.float32)
+        w_down = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(4, d)), jnp.float32)
+
+        def f(wu, wd):
+            g = jax.nn.silu(x @ w_gate)
+            return (g * (x @ wu)) @ wd
+
+        y0 = f(w_up, w_down)
+        wu2, wd2, res = pair_rescale(w_up, w_down)
+        y1 = f(wu2, wd2)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=2e-3, atol=2e-4)
+        # thresholds after rescale are equalized (all equal to the mean)
+        t_after = np.asarray(res.t_after)
+        assert t_after.std() / (t_after.mean() + 1e-9) < 1e-3
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10000))
+    def test_bn_fold_exact(self, seed):
+        """Eqs. 10-11: folded conv == conv + BN."""
+        rng = np.random.default_rng(seed)
+        c = 6
+        w = jnp.asarray(rng.normal(size=(3, c)), jnp.float32)
+        gamma = jnp.asarray(rng.uniform(0.5, 2, c), jnp.float32)
+        beta = jnp.asarray(rng.normal(size=c), jnp.float32)
+        mu = jnp.asarray(rng.normal(size=c), jnp.float32)
+        var = jnp.asarray(rng.uniform(0.5, 2, c), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(4, 10, c)), jnp.float32)
+
+        def dws(x, w):
+            k = w.shape[0]
+            xp = jnp.pad(x, [(0, 0), (k - 1, 0), (0, 0)])
+            return sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+
+        eps = 1e-5
+        y_bn = (dws(x, w) - mu) / jnp.sqrt(var + eps) * gamma + beta
+        w_f, b_f = fold_batchnorm(w, gamma, beta, mu, var, eps)
+        y_fold = dws(x, w_f) + b_f
+        np.testing.assert_allclose(np.asarray(y_bn), np.asarray(y_fold),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestDWSRescaleInvariance:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 10000))
+    def test_relu6_rescale_preserves_unsaturated_outputs(self, seed):
+        """Eq. 26-27: for channels whose activations stay below the cap,
+        DWS rescaling leaves DWS->ReLU6->Conv output unchanged."""
+        from repro.core.equalization import dws_relu6_rescale
+
+        rng = np.random.default_rng(seed)
+        c, f = 8, 5
+        w_dws = jnp.asarray(rng.normal(size=(3, c)) * 0.2, jnp.float32)
+        b_dws = jnp.asarray(rng.normal(size=c) * 0.05, jnp.float32)
+        w_conv = jnp.asarray(rng.normal(size=(c, f)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(4, 6, c)) * 0.5, jnp.float32)
+
+        def net(wd, bd, wc):
+            k = wd.shape[0]
+            xp = jnp.pad(x, [(0, 0), (k - 1, 0), (0, 0)])
+            pre = sum(xp[:, i:i + x.shape[1], :] * wd[i] for i in range(k))
+            pre = pre + bd
+            return jnp.clip(pre, 0, 6) @ wc, pre
+
+        y0, pre = net(w_dws, b_dws, w_conv)
+        act_max = jnp.max(jnp.abs(pre), axis=(0, 1))
+        wd2, bd2, wc2, res = dws_relu6_rescale(w_dws, b_dws, w_conv, act_max)
+        y1, _ = net(wd2, bd2, wc2)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=2e-3, atol=2e-4)

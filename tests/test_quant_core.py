@@ -1,0 +1,190 @@
+"""Unit tests for the paper's quantization math (eqs. 1-23)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant as Q
+from repro.core import calibration as C
+
+
+SPEC_SYM = Q.QuantSpec(bits=8, symmetric=True)
+SPEC_ASYM = Q.QuantSpec(bits=8, symmetric=False)
+
+
+class TestSTE:
+    def test_round_forward(self):
+        x = jnp.array([0.4, 0.6, -1.5, 2.5])
+        np.testing.assert_allclose(Q.ste_round(x), jnp.round(x))
+
+    def test_round_gradient_is_identity(self):
+        # eq. 17: dI_q / dI = 1
+        g = jax.grad(lambda x: jnp.sum(Q.ste_round(x) * 3.0))(jnp.arange(4.0))
+        np.testing.assert_allclose(g, 3.0 * jnp.ones(4))
+
+    def test_clip_gradient(self):
+        # eq. 19: 1 inside [a, b], 0 outside
+        x = jnp.array([-2.0, 0.0, 2.0])
+        g = jax.grad(lambda x: jnp.sum(Q.clip_grad_passthrough(x, -1.0, 1.0)))(x)
+        np.testing.assert_allclose(g, jnp.array([0.0, 1.0, 0.0]))
+
+
+class TestSymmetric:
+    def test_roundtrip_error_bound(self, ):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(128, 64)), jnp.float32)
+        t = Q.max_abs_threshold(x, SPEC_SYM)
+        y = Q.fake_quant_symmetric(x, t, jnp.ones(()), SPEC_SYM)
+        # max error is half a quantization step
+        step = t / SPEC_SYM.levels
+        assert float(jnp.max(jnp.abs(x - y))) <= float(step) / 2 + 1e-6
+
+    def test_alpha_scales_threshold(self):
+        # alpha = 0.5 halves the threshold -> values above T/2 saturate
+        x = jnp.array([1.0, 0.25])
+        t = jnp.array(1.0)
+        y = Q.fake_quant_symmetric(x, t, jnp.asarray(0.5), SPEC_SYM)
+        assert float(y[0]) == pytest.approx(0.5, rel=1e-3)  # clipped
+        assert float(y[1]) == pytest.approx(0.25, abs=0.5 / 127)
+
+    def test_alpha_clip_range(self):
+        # eq. 12: alpha saturates at [0.5, 1.0] -> alpha=0.1 behaves as 0.5
+        x = jnp.linspace(-1, 1, 11)
+        t = jnp.array(1.0)
+        y1 = Q.fake_quant_symmetric(x, t, jnp.asarray(0.1), SPEC_SYM)
+        y2 = Q.fake_quant_symmetric(x, t, jnp.asarray(0.5), SPEC_SYM)
+        np.testing.assert_allclose(y1, y2)
+
+    def test_gradient_flows_to_alpha(self):
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(64,)), jnp.float32)
+        t = Q.max_abs_threshold(x, SPEC_SYM)
+
+        def loss(a):
+            return jnp.sum(Q.fake_quant_symmetric(x, t, a, SPEC_SYM) ** 2)
+
+        g = jax.grad(loss)(jnp.asarray(0.8))
+        assert np.isfinite(g) and g != 0
+
+    def test_per_channel_vector_mode(self):
+        # §3.1.5: per-channel thresholds quantize each filter on its own scale
+        spec = Q.QuantSpec(bits=8, symmetric=True, per_channel=True,
+                           channel_axis=-1)
+        x = jnp.stack([jnp.linspace(-1, 1, 32), 100 * jnp.linspace(-1, 1, 32)],
+                      axis=-1)
+        t = Q.max_abs_threshold(x, spec)
+        assert t.shape == (2,)
+        y = Q.fake_quant_symmetric(x, t, jnp.ones(2), spec)
+        # both channels keep fine resolution despite 100x range difference
+        for c, tc in enumerate(t):
+            err = jnp.max(jnp.abs(x[:, c] - y[:, c]))
+            assert float(err) <= float(tc) / 127 / 2 + 1e-5
+
+    def test_unsigned_range(self):
+        spec = Q.QuantSpec(bits=8, symmetric=True, unsigned=True)
+        assert spec.levels == 255 and spec.qmin == 0 and spec.qmax == 255
+        x = jnp.linspace(0, 6, 100)  # post-relu6 activations
+        y = Q.fake_quant_symmetric(x, jnp.asarray(6.0), jnp.ones(()), spec)
+        assert float(jnp.max(jnp.abs(x - y))) <= 6.0 / 255 / 2 + 1e-6
+
+
+class TestAsymmetric:
+    def test_limits_eq_21_23(self):
+        # alpha_t=0, alpha_r=1 reproduce the calibrated limits exactly
+        spec = SPEC_ASYM
+        left, width = Q.asymmetric_limits(
+            jnp.asarray(-2.0), jnp.asarray(6.0), jnp.asarray(0.0),
+            jnp.asarray(1.0), spec)
+        assert float(left) == -2.0 and float(width) == 8.0
+
+    def test_alpha_t_range_signed_vs_unsigned(self):
+        signed = Q.QuantSpec(bits=8, symmetric=False, unsigned=False)
+        unsigned = Q.QuantSpec(bits=8, symmetric=False, unsigned=True)
+        assert signed.signed_alpha_t_range() == (-0.2, 0.4)
+        assert unsigned.signed_alpha_t_range() == (0.0, 0.4)
+
+    def test_asym_beats_sym_on_shifted_data(self):
+        # the paper's motivation for §3.1.4: one-sided distributions waste
+        # half the symmetric integer range
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=4096) * 0.1 + 3.0, jnp.float32)
+        t_sym = Q.max_abs_threshold(x, SPEC_SYM)
+        y_sym = Q.fake_quant_symmetric(x, t_sym, jnp.ones(()), SPEC_SYM)
+        y_asym = Q.fake_quant_asymmetric(
+            x, jnp.min(x), jnp.max(x), jnp.zeros(()), jnp.ones(()), SPEC_ASYM)
+        e_sym = float(jnp.mean((x - y_sym) ** 2))
+        e_asym = float(jnp.mean((x - y_asym) ** 2))
+        assert e_asym < e_sym
+
+    def test_gradients_flow_to_both_alphas(self):
+        x = jnp.asarray(np.random.default_rng(3).normal(size=(64,)), jnp.float32)
+
+        def loss(at, ar):
+            y = Q.fake_quant_asymmetric(x, jnp.min(x), jnp.max(x), at, ar,
+                                        SPEC_ASYM)
+            return jnp.sum((y - x) ** 2)
+
+        gt, gr = jax.grad(loss, argnums=(0, 1))(jnp.asarray(0.1), jnp.asarray(0.8))
+        assert np.isfinite(gt) and np.isfinite(gr)
+        assert gr != 0
+
+
+class TestIntegerPath:
+    def test_weights_int8_reconstruction(self):
+        w = jnp.asarray(np.random.default_rng(4).normal(size=(64, 32)), jnp.float32)
+        spec = Q.QuantSpec(bits=8, symmetric=True, per_channel=True,
+                           channel_axis=-1)
+        t = Q.max_abs_threshold(w, spec)
+        w_q, scale = Q.quantize_weights_int8(w, t, jnp.ones_like(t), spec)
+        assert w_q.dtype == jnp.int8
+        w_rec = w_q.astype(jnp.float32) * scale
+        step = t / 127
+        assert float(jnp.max(jnp.abs(w - w_rec) / step)) <= 0.51
+
+    def test_bias_int32_eq20(self):
+        b = jnp.asarray([0.5, -0.25, 1e6], jnp.float32)
+        act_scale = jnp.asarray(0.01)
+        w_scale = jnp.asarray([0.002, 0.002, 1e-12], jnp.float32)
+        b_q = Q.quantize_bias_int32(b, act_scale, w_scale)
+        assert b_q.dtype == jnp.int32
+        np.testing.assert_allclose(b_q[0], round(0.5 / (0.01 * 0.002)))
+        assert int(b_q[2]) == 2**31 - 1  # clipped at int32 max (eq. 20)
+
+    def test_pointwise_scale_clip(self):
+        w = jnp.ones((4,))
+        p = jnp.asarray([0.1, 0.9, 1.1, 2.0])
+        y = Q.apply_pointwise_scale(w, p)
+        np.testing.assert_allclose(y, [0.75, 0.9, 1.1, 1.25])
+
+
+class TestCalibration:
+    def test_max_abs_observer(self):
+        spec = SPEC_SYM
+        obs = C.init_observer(spec)
+        for scale in (1.0, 5.0, 2.0):
+            x = jnp.asarray(np.random.default_rng(5).normal(size=64) * scale)
+            obs = C.update_observer(obs, x, spec)
+        th = C.observer_thresholds(obs, spec)
+        assert float(th["t_max"]) > 0
+        assert int(obs["count"]) == 3
+        # running max is monotone >= last batch max
+        assert float(th["t_max"]) >= float(jnp.max(jnp.abs(x)))
+
+    def test_min_max_for_asymmetric(self):
+        spec = SPEC_ASYM
+        obs = C.init_observer(spec)
+        x = jnp.asarray([-1.0, 4.0])
+        obs = C.update_observer(obs, x, spec)
+        th = C.observer_thresholds(obs, spec)
+        assert float(th["t_l"]) == -1.0 and float(th["t_r"]) == 4.0
+        # initial trained scales: alpha_t=0, alpha_r=1 (§3.1.4)
+        assert float(th["alpha_t"]) == 0.0 and float(th["alpha_r"]) == 1.0
+
+    def test_percentile_observer_robust_to_outlier(self):
+        spec = SPEC_SYM
+        rng = np.random.default_rng(6)
+        x = rng.normal(size=100000).astype(np.float32)
+        x[0] = 1000.0  # the paper's Figure 1 outlier scenario
+        obs_max = C.update_observer(C.init_observer(spec), jnp.asarray(x), spec)
+        obs_pct = C.update_observer(C.init_observer(spec), jnp.asarray(x), spec,
+                                    kind="percentile", percentile=99.9)
+        assert float(obs_max["t_max"]) == pytest.approx(1000.0)
+        assert float(obs_pct["t_max"]) < 10.0

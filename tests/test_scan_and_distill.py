@@ -1,0 +1,151 @@
+"""Scanned-stack equivalence, chunked distillation loss, FAT integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import api as A
+from repro.core.distill import (chunked_ce_loss, chunked_rmse_distill,
+                                rmse_distill_loss)
+from repro.models import build_model
+
+
+def _unstack_params(ps, cfg, keys=("stack",)):
+    pu = jax.tree.map(lambda x: x, ps)
+    for k in keys:
+        sub = dict(pu[k])
+        if "layers" in sub:
+            layers = sub.pop("layers")
+            for i in range(cfg.n_layers):
+                sub[f"layer{i}"] = jax.tree.map(lambda a: a[i], layers)
+            pu[k] = sub
+    return pu
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "gemma3-12b", "mixtral-8x7b",
+                                  "hymba-1.5b", "mamba2-780m"])
+def test_scan_matches_unrolled(arch):
+    """cfg.scan_layers=True computes the same function as the unrolled
+    stack (within bf16 fusion noise)."""
+    cfg_u = get_config(arch, smoke=True)
+    cfg_s = cfg_u.replace(scan_layers=True)
+    mu, ms = build_model(cfg_u), build_model(cfg_s)
+    ps = ms.init(jax.random.PRNGKey(0))
+    pu = _unstack_params(ps, cfg_u)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg_u.vocab)}
+    lo_s, _ = ms(ps, batch)
+    lo_u, _ = mu(pu, batch)
+    rel = float(jnp.linalg.norm((lo_s - lo_u).astype(jnp.float32))
+                / (jnp.linalg.norm(lo_u.astype(jnp.float32)) + 1e-9))
+    assert rel < 2e-2, f"{arch}: {rel}"
+
+
+def test_scan_fat_step_trains():
+    """Calibration + fake-quant + grads all work through the scanned
+    stack (stacked per-layer thresholds)."""
+    cfg = get_config("smollm-135m", smoke=True).replace(scan_layers=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    policy = A.QuantPolicy()
+    qp = A.init_qparams(model, params, policy)
+    # stacked thresholds carry the (L,) leading axis
+    stack_entry = [e for p, e in qp.items() if "/layers/" in p][0]
+    assert stack_entry["w"]["t_max"].shape[0] == cfg.n_layers
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab)}
+    ctx = A.make_ctx("calibrate", policy, qp)
+    model(params, batch, ctx)
+    for path, obs in ctx.updates.items():
+        qp[path] = {**qp[path], "act": obs}
+    qp = A.finalize_calibration(qp, policy)
+    act_t = [e for p, e in qp.items() if "/layers/" in p][0]["act"]["t_max"]
+    assert act_t.shape == (cfg.n_layers,)
+    assert float(jnp.min(act_t)) > 0  # every layer saw calibration data
+
+    teacher, _ = model(params, batch)
+
+    def loss(qp):
+        s, _ = model(params, batch, A.make_ctx("fake", policy, qp))
+        return rmse_distill_loss(teacher, s)
+
+    l, g = jax.value_and_grad(loss)(qp)
+    assert np.isfinite(float(l)) and float(l) > 0
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))
+
+
+def test_chunked_rmse_matches_full():
+    """Sequence-chunked eq. 25 == direct eq. 25."""
+    rng = np.random.default_rng(0)
+    b, s, d, v = 2, 32, 16, 64
+    w = jnp.asarray(rng.normal(size=(d, v)), jnp.float32)
+    h_t = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+    h_s = h_t + 0.1 * jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+    ro = lambda h: h @ w
+    full = rmse_distill_loss(ro(h_t), ro(h_s))
+    chunked = chunked_rmse_distill(h_t, h_s, ro, chunk=8)
+    np.testing.assert_allclose(float(full), float(chunked), rtol=1e-5)
+
+
+def test_chunked_ce_matches_direct():
+    rng = np.random.default_rng(1)
+    b, s, d, v = 2, 16, 8, 32
+    w = jnp.asarray(rng.normal(size=(d, v)), jnp.float32)
+    h = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, size=(b, s)), jnp.int32)
+    ro = lambda hh: hh @ w
+    logits = ro(h)
+    direct = float(jnp.mean(
+        jax.nn.logsumexp(logits, -1)
+        - jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]))
+    chunked = float(chunked_ce_loss(h, labels, ro, chunk=4))
+    np.testing.assert_allclose(direct, chunked, rtol=1e-5)
+
+
+def test_rmse_is_paper_eq25():
+    """sqrt(sum ||z_T - z_A||^2 / N) with N = number of examples."""
+    z_t = jnp.asarray([[1.0, 2.0], [3.0, 4.0]])
+    z_a = jnp.asarray([[1.0, 0.0], [0.0, 4.0]])
+    want = np.sqrt((4.0 + 9.0) / 2.0)
+    np.testing.assert_allclose(float(rmse_distill_loss(z_t, z_a)), want,
+                               rtol=1e-6)
+
+
+def test_scan_serve_homogeneous_decode():
+    """Scanned homogeneous serve path (mixtral family) decodes correctly
+    against the unrolled model."""
+    cfg_u = get_config("mixtral-8x7b", smoke=True).replace(
+        capacity_factor=2.0)  # drop-free
+    cfg_s = cfg_u.replace(scan_layers=True)
+    mu, ms = build_model(cfg_u), build_model(cfg_s)
+    ps = ms.init(jax.random.PRNGKey(0))
+    pu = _unstack_params(ps, cfg_u)
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg_u.vocab)
+    assert ms.stack.serve_homogeneous
+    cache = ms.init_cache(B, S)
+    _, cache = ms.prefill(ps, {"tokens": toks[:, :S - 1]}, cache)
+    dec_s, _ = ms.decode_step(ps, toks[:, S - 1:], cache, S - 1)
+    full_u, _ = mu(pu, {"tokens": toks})
+    rel = float(jnp.linalg.norm((dec_s - full_u[:, -1:]).astype(jnp.float32))
+                / (jnp.linalg.norm(full_u[:, -1:].astype(jnp.float32)) + 1e-9))
+    assert rel < 2e-2, rel
+
+
+def test_scan_serve_heterogeneous_decode():
+    """gemma3's mixed local/global layers use the per-layer-sliced serve
+    path in scan mode."""
+    cfg_s = get_config("gemma3-12b", smoke=True).replace(scan_layers=True)
+    ms = build_model(cfg_s)
+    assert not ms.stack.serve_homogeneous
+    ps = ms.init(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg_s.vocab)
+    full, _ = ms(ps, {"tokens": toks})
+    cache = ms.init_cache(B, S)
+    _, cache = ms.prefill(ps, {"tokens": toks[:, :S - 1]}, cache)
+    dec, _ = ms.decode_step(ps, toks[:, S - 1:], cache, S - 1)
+    rel = float(jnp.linalg.norm((dec - full[:, -1:]).astype(jnp.float32))
+                / (jnp.linalg.norm(full[:, -1:].astype(jnp.float32)) + 1e-9))
+    assert rel < 2e-2, rel

@@ -1,0 +1,113 @@
+"""Prefill + decode (KV cache / SSM state) equivalence with full forward.
+
+MoE archs use drop-free capacity (cf = E/K) here: with finite capacity the
+full forward legitimately drops tokens that the one-token decode path does
+not — that's MoE semantics, not a cache bug, so equivalence is only defined
+in the drop-free regime.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import build_model
+
+B, S = 2, 32
+
+
+def _dropfree(cfg):
+    if cfg.ffn == "moe":
+        return cfg.replace(capacity_factor=float(cfg.n_experts) / cfg.top_k)
+    return cfg
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_full_forward(arch):
+    cfg = _dropfree(get_config(arch, smoke=True))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+
+    if cfg.family == "encdec":
+        frames = jax.random.normal(jax.random.PRNGKey(2), (B, 24, cfg.frame_dim)
+                                   ).astype(cfg.dtype)
+        logits, _ = model(params, {"frames": frames, "tokens": toks})
+        # decoder cache sized to the TOKEN length (the encoder memory
+        # length is independent)
+        cache = model.init_cache(B, S)
+        _, cache = model.prefill(params, {"frames": frames,
+                                          "tokens": toks[:, : S - 1]}, cache)
+        dec, _ = model.decode_step(params, toks[:, S - 1 : S], cache, S - 1)
+    elif cfg.modality == "vlm":
+        patches = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.mm_patches, cfg.mm_dim)
+        ).astype(cfg.dtype)
+        logits, _ = model(params, {"patches": patches, "tokens": toks})
+        cache = model.init_cache(B, S + cfg.mm_patches)
+        _, cache = model.prefill(
+            params, {"patches": patches, "tokens": toks[:, : S - 1]}, cache
+        )
+        dec, _ = model.decode_step(
+            params, toks[:, S - 1 : S], cache, cfg.mm_patches + S - 1
+        )
+    else:
+        logits, _ = model(params, {"tokens": toks})
+        cache = model.init_cache(B, S)
+        _, cache = model.prefill(params, {"tokens": toks[:, : S - 1]}, cache)
+        dec, _ = model.decode_step(params, toks[:, S - 1 : S], cache, S - 1)
+
+    ref = logits[:, -1:, :]
+    rel = float(
+        jnp.linalg.norm((ref - dec).astype(jnp.float32))
+        / (jnp.linalg.norm(ref.astype(jnp.float32)) + 1e-9)
+    )
+    assert rel < 2e-2, f"{arch}: decode rel err {rel}"
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "gemma3-12b", "mamba2-780m",
+                                  "hymba-1.5b"])
+def test_multi_step_decode(arch):
+    """Greedy-decode 4 tokens step by step == full forward on the grown
+    sequence (teacher forcing)."""
+    cfg = _dropfree(get_config(arch, smoke=True))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_new = 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+
+    cache = model.init_cache(B, S)
+    _, cache = model.prefill(params, {"tokens": toks[:, : S - n_new]}, cache)
+    outs = []
+    for i in range(n_new):
+        pos = S - n_new + i
+        lg, cache = model.decode_step(params, toks[:, pos : pos + 1], cache, pos)
+        outs.append(lg)
+    dec_logits = jnp.concatenate(outs, axis=1)
+    full_logits, _ = model(params, {"tokens": toks})
+    ref = full_logits[:, S - n_new :, :]
+    rel = float(
+        jnp.linalg.norm((ref - dec_logits).astype(jnp.float32))
+        / (jnp.linalg.norm(ref.astype(jnp.float32)) + 1e-9)
+    )
+    assert rel < 2e-2, f"{arch}: multi-step decode rel err {rel}"
+
+
+def test_swa_ring_buffer_bounded_memory():
+    """SWA cache is window-sized regardless of max_len (what makes
+    long_500k feasible for SWA archs)."""
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    model = build_model(cfg)
+    cache = model.init_cache(2, 4096)
+    k = cache["layer0"]["attn"]["k"]
+    assert k.shape[1] == cfg.window  # ring buffer, not max_len
+
+
+def test_mamba_state_constant_memory():
+    cfg = get_config("mamba2-780m", smoke=True)
+    model = build_model(cfg)
+    cache = model.init_cache(2, 1 << 20)
+    ssm = cache["layer0"]["mamba"]["ssm"]
+    # state size independent of the 1M max_len
+    assert ssm.shape == (2, model.stack.blocks[0].mamba.n_heads,
+                         cfg.ssm_state, model.stack.blocks[0].mamba.head_dim)
