@@ -1,0 +1,156 @@
+"""Serving-path benchmark: prefill / decode timing across the int8 grid.
+
+Measures steady-state (post-compile) wall time for the four serving
+configurations the decode fast path introduces:
+
+  * weights: bf16 vs int8
+  * KV cache: bf16 vs int8
+  * decode driver: per-token Python loop vs single lax.scan
+
+and writes ``BENCH_serve.json`` so the perf trajectory is tracked across
+PRs.  The headline numbers are decode ms/token and tokens/s; the scan/loop
+ratio is the dispatch-overhead win, the int8/bf16 ratios are the bandwidth
+win (visible on real HBM-bound hardware; on this CPU container they mostly
+track correctness, not the 2x byte reduction).
+
+Run: PYTHONPATH=src python -m benchmarks.serve_bench [--quick] [--gen 32]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.shapes import ShapeSpec
+from repro.core import api as A
+from repro.data import pipeline as DP
+from repro.launch import steps as ST
+from repro.models import build_model
+
+
+def _bench(fn, *args, iters=2):
+    out = fn(*args)  # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_config(model, cfg, params, batch, *, requests, prompt_len, gen,
+                 int8_weights, kv_int8, calib_batches):
+    from repro.launch.serve import prepare_int8
+
+    policy = A.QuantPolicy(kv_int8=kv_int8)
+    mode = "int8" if int8_weights else "none"
+    if int8_weights or kv_int8:
+        # same deployment pipeline the serving CLI runs — the bench must
+        # measure the served configuration, not a reimplementation of it
+        serve_params, qparams = prepare_int8(model, cfg, policy, params,
+                                             calib_batches,
+                                             convert=int8_weights)
+    else:
+        # pure-bf16 baseline consumes no thresholds; skip the calibration
+        # forward passes
+        serve_params = params
+        qparams = A.finalize_calibration(
+            A.init_qparams(model, params, policy), policy)
+
+    prefill = jax.jit(ST.make_prefill_step(model, cfg, policy, mode=mode))
+    step = jax.jit(ST.make_serve_step(model, cfg, policy, mode=mode))
+    loop = jax.jit(ST.make_decode_loop(model, cfg, policy, mode=mode,
+                                       n_steps=gen))
+    max_len = prompt_len + gen
+    cache0 = model.init_cache(requests, max_len, cfg.dtype, kv_int8=kv_int8)
+
+    prefill_s = _bench(prefill, serve_params, qparams, batch, cache0)
+    logits, cache = prefill(serve_params, qparams, batch, cache0)
+    tok0 = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+    def python_loop(tok0, cache):
+        tok = tok0
+        for i in range(gen - 1):
+            tok, _, cache = step(serve_params, qparams, tok[:, None], cache,
+                                 prompt_len + i)
+        return tok
+
+    def scan_loop(tok0, cache):
+        toks, _ = loop(serve_params, qparams, tok0, cache, prompt_len)
+        return toks
+
+    loop_s = _bench(python_loop, tok0, cache)
+    scan_s = _bench(scan_loop, tok0, cache)
+    n_tok = max(gen - 1, 1)
+    return {
+        "prefill_ms": prefill_s * 1e3,
+        "decode_loop_ms_per_tok": loop_s / n_tok * 1e3,
+        "decode_scan_ms_per_tok": scan_s / n_tok * 1e3,
+        "decode_scan_tokens_per_s": requests * n_tok / scan_s,
+        "scan_speedup_vs_loop": loop_s / scan_s,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--quick", action="store_true",
+                    help="only the production config (int8 w + int8 kv)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shape = ShapeSpec("cli", "train", args.prompt_len, args.requests)
+    spec = DP.spec_for(cfg, shape)
+    calib_batches = DP.calibration_batches(spec, 2)
+    for b in calib_batches:
+        b.pop("labels", None)
+    batch = DP.make_batch(spec, 12345)
+    batch.pop("labels", None)
+
+    grid = [("int8_w_int8_kv", True, True)]
+    if not args.quick:
+        grid += [
+            ("bf16_w_bf16_kv", False, False),
+            ("bf16_w_int8_kv", False, True),
+            ("int8_w_bf16_kv", True, False),
+        ]
+
+    report = {
+        "arch": args.arch,
+        "requests": args.requests,
+        "prompt_len": args.prompt_len,
+        "gen": args.gen,
+        "backend": jax.default_backend(),
+        "configs": {},
+    }
+    for name, int8_w, kv8 in grid:
+        r = bench_config(
+            model, cfg, params, batch, requests=args.requests,
+            prompt_len=args.prompt_len, gen=args.gen,
+            int8_weights=int8_w, kv_int8=kv8, calib_batches=calib_batches,
+        )
+        report["configs"][name] = r
+        print(f"{name}: prefill {r['prefill_ms']:.1f} ms | "
+              f"loop {r['decode_loop_ms_per_tok']:.2f} ms/tok | "
+              f"scan {r['decode_scan_ms_per_tok']:.2f} ms/tok "
+              f"({r['scan_speedup_vs_loop']:.2f}x, "
+              f"{r['decode_scan_tokens_per_s']:.0f} tok/s)")
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

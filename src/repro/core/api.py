@@ -51,6 +51,7 @@ class QuantPolicy:
     percentile: float = 99.99
     skip_patterns: tuple[str, ...] = () # layer paths excluded (e.g. routers)
     use_pallas: bool = False            # Pallas kernels on real TPU hot path
+    kv_int8: bool = False               # int8 KV cache (per-head static T)
 
     def skips(self, path: str) -> bool:
         return any(re.search(p, path) for p in self.skip_patterns)
@@ -69,6 +70,18 @@ class QuantPolicy:
             symmetric=self.act_symmetric,
             unsigned=unsigned,
             per_channel=self.act_per_channel,
+        )
+
+    def kv_spec(self) -> Q.QuantSpec:
+        """K/V cache entries (B, S, KV, D): symmetric int8 with one static
+        threshold per KV head (channel_axis=-2).  Per-head rather than
+        per-tensor because K magnitudes vary strongly across heads (rope
+        frequencies), and per-head scales stay O(KV) resident floats."""
+        return Q.QuantSpec(
+            bits=self.bits,
+            symmetric=True,
+            per_channel=True,
+            channel_axis=-2,
         )
 
 
@@ -136,7 +149,44 @@ def init_qparams(model, params: dict, policy: QuantPolicy) -> dict:
         if policy.pointwise_scales:
             entry["w"]["pointwise"] = jnp.ones(w.shape, jnp.float32)
         qparams[layer.path] = entry
+    if policy.kv_int8:
+        for attn, lp in _kv_attention_with_params(model, params):
+            # scanned stacks carry (L,) on every weight; observers get the
+            # same leading axis so lax.scan slices them per layer
+            lead = lp["wk"]["w"].shape[:-2]
+            spec = policy.kv_spec()
+            qparams[kv_path(attn.path)] = {
+                "k": calib.init_observer(spec, channels=attn.n_kv,
+                                         lead_shape=lead),
+                "v": calib.init_observer(spec, channels=attn.n_kv,
+                                         lead_shape=lead),
+            }
     return qparams
+
+
+def kv_path(attn_path: str) -> str:
+    """qparams key holding the KV-cache thresholds of one attention layer."""
+    return f"{attn_path}/kv"
+
+
+def is_kv_path(path: str) -> bool:
+    """True for KV-cache threshold entries (structure {'k':…, 'v':…})."""
+    return path.endswith("/kv")
+
+
+def _kv_attention_with_params(model, params):
+    """(decode-caching self-attention layer, its params subtree) pairs.
+
+    Cross-attention caches encoder memory (computed once per request, not
+    the decode bandwidth bottleneck) and bidirectional encoder layers
+    never decode — neither owns a KV cache, so neither gets threshold
+    state (observers on them would burn calibration compute for nothing).
+    """
+    from repro.models.attention import Attention  # avoid cycle
+
+    for module, sub in model.walk_with_params(params):
+        if isinstance(module, Attention) and not module.cross and module.causal:
+            yield module, sub
 
 
 def _quant_layers_with_params(model, params, policy: QuantPolicy | None = None):
@@ -156,9 +206,21 @@ def _quant_layers_with_params(model, params, policy: QuantPolicy | None = None):
 
 
 def finalize_calibration(qparams: dict, policy: QuantPolicy) -> dict:
-    """Convert observer stats into threshold params (paper §3.1.3 init)."""
+    """Convert observer stats into threshold params (paper §3.1.3 init).
+
+    KV-cache entries freeze to bare per-head thresholds — unlike activation
+    thresholds they carry no trainable alpha: the cache is written and read
+    with the same scale, so the FAT fine-tuning objective has no gradient
+    signal through it (§2: everything static at serving time).
+    """
     out = {}
     for path, entry in qparams.items():
+        if is_kv_path(path):  # KV observer entry: {"k": obs, "v": obs}
+            out[path] = {
+                kk: {"t_max": jnp.maximum(obs["t_max"], 1e-8)}
+                for kk, obs in entry.items()
+            }
+            continue
         e = dict(entry)
         e["act"] = calib.observer_thresholds(entry["act"], policy.act_spec())
         out[path] = e
@@ -327,17 +389,21 @@ def _int8_matmul(x, w_q, w_scale, astate, aspec, *, use_pallas=False):
         Q.adjusted_threshold(astate["t_max"], astate["alpha"], aspec), 1e-8
     )
     s_x = aspec.levels / t_adj
-    x_int = jnp.clip(jnp.round(x * s_x), aspec.qmin, aspec.qmax).astype(jnp.int8)
-    if use_pallas:
+    if use_pallas and jnp.ndim(s_x) == 0:
+        # raw activations + act_scale: the kernel's fused VPU quantize does
+        # the round/clip in VMEM (quantizing here first would round twice
+        # and stream an extra tensor through HBM)
         from repro.kernels import ops as kops
 
-        lead = x_int.shape[:-1]
+        lead = x.shape[:-1]
         y = kops.quant_matmul(
-            x_int.reshape(-1, x_int.shape[-1]),
+            x.reshape(-1, x.shape[-1]),
             w_q,
             (w_scale / s_x).astype(jnp.float32),
+            s_x.astype(jnp.float32),
         )
         return y.reshape(*lead, -1).astype(x.dtype)
+    x_int = jnp.clip(jnp.round(x * s_x), aspec.qmin, aspec.qmax).astype(jnp.int8)
     acc = jax.lax.dot_general(
         x_int,
         w_q,

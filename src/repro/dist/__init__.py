@@ -1,0 +1,6 @@
+"""Distribution layer: sharding rules, activation constraints, collectives.
+
+Pure-jax (no hard mesh dependency): every entry point degrades to an
+identity / replicated behavior when no mesh is active, so the same model
+code runs on 1 CPU in tests and on the production mesh in the dry-run.
+"""

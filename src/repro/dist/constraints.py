@@ -1,0 +1,72 @@
+"""Activation sharding constraints.
+
+``constrain_activation`` is called on every residual-stream tensor and
+batch input (see models/model.py, models/transformer.py, launch/steps.py).
+Under an active mesh with installed ShardingRules it pins the activation
+layout so GSPMD doesn't invent resharding chatter inside the layer stack:
+
+  * batch axis  -> the data axis (always)
+  * sequence    -> the model axis, but only for the scan *carry*
+    (``carry=True``): the residual stream rides sequence-sharded between
+    blocks and is gathered at block entry (sequence parallelism)
+
+Outside a mesh (unit tests, CPU smoke runs) every call is an identity —
+the constraint is advisory placement, never semantics.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.dist.sharding import P, ShardingRules
+
+_RULES: Optional[ShardingRules] = None
+
+
+def install(rules: ShardingRules) -> None:
+    """Set process-global rules (the dry-run / launcher call this once)."""
+    global _RULES
+    _RULES = rules
+
+
+def installed() -> Optional[ShardingRules]:
+    return _RULES
+
+
+def _active_mesh():
+    try:
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:
+        return None
+    return None
+
+
+def constrain_activation(x: jax.Array, *, carry: bool = False) -> jax.Array:
+    """Pin an activation's sharding; identity when no mesh/rules are active.
+
+    Only rank-2/3 float batch-major tensors are constrained — anything else
+    (scalars, threshold vectors, integer token ids of other ranks) passes
+    through untouched.
+    """
+    rules = _RULES
+    mesh = _active_mesh()
+    if rules is None or mesh is None or not hasattr(x, "ndim"):
+        return x
+    if x.ndim == 2:  # (B, S) token ids
+        spec = P(rules.act_batch, None)
+    elif x.ndim == 3:  # (B, S, d) activations
+        seq = rules.act_seq if carry else None
+        spec = P(rules.act_batch, seq, None)
+    else:
+        return x
+    try:
+        sharding = jax.sharding.NamedSharding(mesh, spec)
+        return jax.lax.with_sharding_constraint(x, sharding)
+    except Exception:
+        # axis not in this mesh / indivisible dim: placement is best-effort
+        return x

@@ -1,0 +1,130 @@
+"""Sharding rules: logical model axes -> production mesh axes.
+
+The production mesh is (data=16, model=16) per pod (launch/mesh.py).  The
+rules object is a plain dataclass so the dry-run can hillclimb individual
+knobs (sequence-parallel residual, KV-cache layout) via dataclasses.replace
+without touching model code.
+
+Spec builders return pytrees of ``PartitionSpec`` mirroring the abstract
+state trees from launch/specs.py; ``to_shardings`` binds them to a mesh.
+Everything falls back to replication for leaves it doesn't recognize —
+placement is an optimization, never a correctness requirement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+
+P = jax.sharding.PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mesh-axis assignment knobs (hillclimb surface for the dry-run)."""
+
+    act_batch: Union[str, tuple] = "data"   # batch dim of activations/batches
+    act_seq: Optional[str] = "model"        # residual-carry sequence axis (SP)
+    tensor: str = "model"                   # tensor-parallel param axis
+    kv_cache_layout: str = "batch"          # 'batch' | 'seq' cache sharding
+    model_axis_size: int = 16               # divisibility guard for specs
+
+
+def multipod(rules: ShardingRules) -> ShardingRules:
+    """Two-pod variant: pure DP across DCN — batch over ('pod', 'data')."""
+    return dataclasses.replace(rules, act_batch=("pod", "data"))
+
+
+def _divisible(dim: int, rules: ShardingRules) -> bool:
+    return dim % rules.model_axis_size == 0
+
+
+def param_specs(model, params_a, rules: ShardingRules):
+    """PartitionSpec tree for a (possibly int8-converted) param pytree.
+
+    Weight matrices shard their output (last) axis over the tensor axis
+    when divisible; per-channel scale vectors follow their weight; biases,
+    norms and thresholds replicate.  Leading scan-stack axes stay
+    unsharded (lax.scan slices them).
+    """
+
+    def spec(leaf):
+        shp = leaf.shape
+        if len(shp) >= 2 and _divisible(shp[-1], rules):
+            return P(*((None,) * (len(shp) - 1) + (rules.tensor,)))
+        if len(shp) == 1 and _divisible(shp[-1], rules):
+            return P(rules.tensor)
+        return P()
+
+    return jax.tree.map(spec, params_a)
+
+
+def qparam_specs(model, params_a, qparams_a, rules: ShardingRules):
+    """Threshold state is a few floats per layer — replicate it all."""
+    return jax.tree.map(lambda _: P(), qparams_a)
+
+
+def batch_specs(batch_a, rules: ShardingRules):
+    """Batch inputs shard the leading batch dim over the data axis."""
+
+    def spec(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        return P(*((rules.act_batch,) + (None,) * (nd - 1)))
+
+    return jax.tree.map(spec, batch_a)
+
+
+def cache_specs(cache_a, rules: ShardingRules, model_size: int):
+    """KV/SSM cache placement.
+
+    'batch' layout shards the cache batch dim over data (decode batches are
+    large); 'seq' layout shards the KV sequence dim over the model axis,
+    which GSPMD turns into flash-decode partial-softmax combines (see
+    models/attention.py docstring).  Scale vectors replicate; SSM states
+    shard batch over data.  Stacked (L, ...) caches keep the layer axis
+    unsharded.
+
+    Leaves are classified by their tree path ("k"/"v" under attn/cross are
+    KV; "ssm"/"conv" are SSM states) — both are 4-d per layer, so rank
+    alone cannot tell them apart.
+    """
+    from jax.tree_util import tree_map_with_path
+
+    def spec(path, leaf):
+        shp = leaf.shape
+        nd = len(shp)
+        keys = [getattr(p, "key", None) for p in path]
+        is_kv = keys and keys[-1] in ("k", "v")
+        if nd < 3 or not (is_kv or nd >= 4):  # scales, positions
+            return P()
+        if not is_kv:  # SSM states (B, H, N, P) etc. -> batch over data
+            lead = 1 if nd >= 5 else 0  # stacked (L, ...) in scan mode
+            axes = [None] * nd
+            axes[lead] = rules.act_batch
+            return P(*axes)
+        lead = nd - 4  # KV tail is (B, S, KV, D)
+        axes = [None] * nd
+        if rules.kv_cache_layout == "seq" and shp[lead + 1] % model_size == 0:
+            axes[lead + 1] = rules.tensor
+        else:
+            axes[lead] = rules.act_batch
+        return P(*axes)
+
+    return tree_map_with_path(spec, cache_a)
+
+
+def to_shardings(spec_tree, mesh, tree_a=None):
+    """Bind a PartitionSpec tree (or one spec) to NamedShardings on mesh."""
+
+    def mk(p):
+        return jax.sharding.NamedSharding(mesh, p)
+
+    if isinstance(spec_tree, P):
+        if tree_a is None:
+            return mk(spec_tree)
+        return jax.tree.map(lambda _: mk(spec_tree), tree_a)
+    return jax.tree.map(mk, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: fused int8-KV flash-decode attention.
+
+One decode step reads the whole KV cache once — at production shapes the
+step is purely HBM-bandwidth-bound, which is why the cache is stored int8
+(half the bytes of bf16).  This kernel keeps the int8 stream all the way
+into VMEM and runs the one-token flash-decode online softmax in a single
+pass:
+
+    k_tile_int8 --DMA--> VMEM --dequant(per-head static scale)--> f32
+    s   = (q * k_scale / sqrt(D)) @ k_tile^T          (MXU)
+    m,l = running max / normalizer update             (VPU)
+    acc = acc * exp(m_old - m_new) + softmax_tile @ v_tile
+    out = acc * v_scale / l                           (epilogue)
+
+Grid is (B, KV-heads, S/bs) with the sequence dimension innermost
+("arbitrary") so the (G, D) accumulator tile lives in VMEM scratch across
+sequence steps — the partial-max/partial-sum combine of flash-decode.
+Per-head dequant scales fold into q (keys) and the epilogue (values), so
+dequantization costs one scalar multiply per tile element, on the VPU,
+overlapping the MXU contraction.
+
+``cur_pos`` masks the unwritten cache tail; a bf16 cache runs through the
+same kernel with scales == 1.  The pure-jnp oracle is
+kernels/ref.py::decode_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tpu_compat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, n_s: int, block_s: int, dim: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # fold the key dequant scale and 1/sqrt(D) into q: per-head scales are
+    # uniform within the head, so (q*c) @ k_int8 == c * (q @ k)
+    c = ks_ref[0, 0] * jax.lax.rsqrt(jnp.asarray(dim, jnp.float32))
+    q = q_ref[0, 0].astype(jnp.float32) * c          # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bs, D) dequant-free
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                # (G, bs)
+
+    # mask the unwritten tail (cache slots >= cur_pos)
+    k_pos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+    valid = k_pos < pos_ref[0, 0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    # re-mask: an all-masked tile has s == m_new == NEG_INF and exp(0) == 1
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)    # (G, bs)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)        # (bs, D)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _epilogue():
+        # value dequant folds once into the epilogue (linear in v)
+        o = acc_ref[...] * vs_ref[0, 0] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_s", "out_dtype", "interpret"))
+def decode_attention_int8(
+    q: jax.Array,        # (B, KV, G, D) float — one query token, GQA view
+    k_cache: jax.Array,  # (B, S, KV, D) int8 (or float with scales == 1)
+    v_cache: jax.Array,  # (B, S, KV, D) int8 (or float with scales == 1)
+    k_scale: jax.Array,  # (KV,) f32 per-head dequant scale
+    v_scale: jax.Array,  # (KV,) f32 per-head dequant scale
+    cur_pos: jax.Array,  # scalar int32: number of valid cache slots
+    *,
+    block_s: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+):
+    """Fused one-token decode attention over a (possibly int8) KV cache."""
+    b, kvh, g, d = q.shape
+    s = k_cache.shape[1]
+    # prefer a sublane-aligned tile that divides S exactly: a pad here
+    # copies the WHOLE cache every decode step (it cannot be hoisted out
+    # of a scanned decode loop), which would double the HBM traffic the
+    # int8 cache exists to halve.  serve.py rounds the cache length to a
+    # block_s multiple for the kernel path; the pad fallback below only
+    # fires for odd ad-hoc lengths.
+    bs = max(8, min(block_s, s) // 8 * 8)
+    while bs > 8 and s % bs:
+        bs -= 8
+    s_pad = -(-s // bs) * bs
+    if s_pad != s:
+        pad = [(0, 0), (0, s_pad - s), (0, 0), (0, 0)]
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+    n_s = s_pad // bs
+
+    kernel = functools.partial(_kernel, n_s=n_s, block_s=bs, dim=d)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kvh, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, h, si: (bi, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda bi, h, si: (bi, si, h, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda bi, h, si: (bi, si, h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, si: (h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, si: (h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, si: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, h, si: (bi, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), out_dtype),
+        scratch_shapes=_scratch(g, d),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(
+        q,
+        k_cache,
+        v_cache,
+        k_scale.reshape(kvh, 1).astype(jnp.float32),
+        v_scale.reshape(kvh, 1).astype(jnp.float32),
+        jnp.reshape(cur_pos, (1, 1)).astype(jnp.int32),
+    )
+
+
+def _scratch(g, d):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return [
+        pltpu.VMEM((g, d), jnp.float32),  # output accumulator
+        pltpu.VMEM((g, 1), jnp.float32),  # running max
+        pltpu.VMEM((g, 1), jnp.float32),  # running normalizer
+    ]

@@ -20,6 +20,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import decode_attention as _da
 from repro.kernels import fake_quant as _fq
 from repro.kernels import quant_matmul as _qm
 from repro.kernels import ref as _ref
@@ -32,21 +33,34 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def quant_matmul(x, w_q, w_scale, act_scale=None, **kw):
+def quant_matmul(x, w_q, w_scale, act_scale, **kw):
     """Fused quantize -> int8 matmul -> dequant (serving hot path).
 
-    x: (M, K) bf16/f32; w_q: (K, N) int8; w_scale: (N,) combined dequant
-    scale.  If act_scale is None, w_scale is assumed to already fold the
-    activation dequant (s_w / s_a) and quantization uses scale 1 — callers
-    normally pass both explicitly.
+    x: (M, K) raw bf16/f32 activations; w_q: (K, N) int8; w_scale: (N,)
+    combined dequant scale (already folds 1/act_scale); act_scale: scalar
+    quantization scale levels/T_adj applied to x inside the kernel.
+    act_scale is mandatory — quantizing raw activations with an implicit
+    scale of 1 silently clips them to small ints.
     """
-    if act_scale is None:
-        act_scale = jnp.float32(1.0)
     return _qm.quant_matmul(x, w_q, w_scale, act_scale,
                             interpret=_interpret(), **kw)
 
 
 quant_matmul_ref = _ref.quant_matmul_ref
+
+
+def decode_attention(q, k_cache, v_cache, k_scale, v_scale, cur_pos, **kw):
+    """Fused one-token flash-decode over the int8 KV cache.
+
+    q: (B, KV, G, D); k/v_cache: (B, S, KV, D) int8 with per-head dequant
+    scales (KV,) — the serving decode hot path.  A bf16 cache runs through
+    the same kernel with scales of ones.
+    """
+    return _da.decode_attention_int8(q, k_cache, v_cache, k_scale, v_scale,
+                                     cur_pos, interpret=_interpret(), **kw)
+
+
+decode_attention_ref = _ref.decode_attention_ref
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))

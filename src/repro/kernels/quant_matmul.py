@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tpu_compat import tpu_compiler_params
+
 
 def _kernel(x_ref, w_ref, sw_ref, sa_ref, o_ref, acc_ref, *, n_k: int,
             qmin: float, qmax: float):
@@ -69,13 +71,34 @@ def quant_matmul(
     out_dtype=jnp.bfloat16,
     interpret: bool = False,
 ):
-    """Fused quantize -> int8 matmul -> dequant.  Shapes must tile evenly."""
-    m, k = x.shape
+    """Fused quantize -> int8 matmul -> dequant.
+
+    K and N (weight dims) must tile evenly — they are config-sized and
+    chosen MXU-aligned.  M is the token dim and ragged at decode (M = B*1);
+    it is padded up to a sublane-aligned tile and the pad rows sliced off,
+    so the same kernel serves prefill (M large) and decode (M = 1..8).
+    """
+    m0, k = x.shape
     k2, n = w_q.shape
     assert k == k2, (x.shape, w_q.shape)
-    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
-        f"shape ({m},{k})x({k},{n}) not tiled by ({bm},{bn},{bk})"
+    # M tiling: sublane-align (f32 min tile is (8, 128)), then prefer an
+    # exact-divisor tile (zero pad rows) but never shrink below a quarter
+    # of block_m — a tiny bm turns the MXU matmul into a long sequential
+    # grid.  When no acceptable divisor exists, pad to a block_m multiple
+    # (waste < bm rows, amortized at the prefill Ms where this fires).
+    m_aligned = -(-m0 // 8) * 8
+    bm_cap = max(8, min(block_m, m_aligned) // 8 * 8)
+    bm = next(
+        (c for c in range(bm_cap, max(8, bm_cap // 4) - 1, -8)
+         if m_aligned % c == 0),
+        bm_cap,
+    )
+    m = -(-m_aligned // bm) * bm
+    if m != m0:
+        x = jnp.pad(x, [(0, m - m0), (0, 0)])
+    bn, bk = min(block_n, n), min(block_k, k)
+    assert n % bn == 0 and k % bk == 0, (
+        f"weight dims (K={k}, N={n}) not tiled by (bk={bk}, bn={bn})"
     )
     n_k = k // bk
     grid = (m // bm, n // bn, n_k)
@@ -93,26 +116,14 @@ def quant_matmul(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[_vmem_scratch(bm, bn)],
-        compiler_params=_tpu_params(),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_q, w_scale.reshape(1, n).astype(jnp.float32),
-      jnp.reshape(act_scale, (1, 1)).astype(jnp.float32))
+      jnp.reshape(act_scale, (1, 1)).astype(jnp.float32))[:m0]
 
 
 def _vmem_scratch(bm, bn):
     from jax.experimental.pallas import tpu as pltpu
 
     return pltpu.VMEM((bm, bn), jnp.int32)
-
-
-def _tpu_params():
-    from jax.experimental.pallas import tpu as pltpu
-
-    try:
-        return pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        )
-    except Exception:  # older API name
-        return pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        )

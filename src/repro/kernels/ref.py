@@ -16,6 +16,27 @@ def quant_matmul_ref(x, w_q, w_scale, act_scale, out_dtype=jnp.bfloat16):
     return (acc.astype(jnp.float32) * w_scale[None, :]).astype(out_dtype)
 
 
+def decode_attention_ref(q, k_cache, v_cache, k_scale, v_scale, cur_pos,
+                         out_dtype=jnp.float32):
+    """Oracle for kernels.decode_attention_int8: dequantize the cache,
+    masked softmax over valid positions, GQA-grouped output.
+
+    q: (B, KV, G, D); k/v_cache: (B, S, KV, D) int8 (or float);
+    k/v_scale: (KV,) dequant scales; cur_pos: valid cache length.
+    cur_pos == 0 (empty cache) returns zeros, matching the kernel.
+    """
+    d = q.shape[-1]
+    kf = k_cache.astype(jnp.float32) * k_scale.reshape(1, 1, -1, 1)
+    vf = v_cache.astype(jnp.float32) * v_scale.reshape(1, 1, -1, 1)
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, kf)
+    mask = jnp.arange(k_cache.shape[1]) < cur_pos
+    s = jnp.where(mask[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
+    return (out * (jnp.asarray(cur_pos) > 0)).astype(out_dtype)
+
+
 def fake_quant_ref(x, t_max, alpha, *, levels=127.0, qmin=-127.0, qmax=127.0,
                    alpha_min=0.5, alpha_max=1.0):
     """Oracle for kernels.fake_quant_fwd (per-out-channel thresholds)."""

@@ -1,0 +1,13 @@
+"""Shared Pallas-TPU compatibility helpers for the kernel modules."""
+from __future__ import annotations
+
+
+def tpu_compiler_params(dimension_semantics: tuple[str, ...]):
+    """CompilerParams across the jax API rename (TPUCompilerParams before)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    try:
+        return pltpu.CompilerParams(dimension_semantics=dimension_semantics)
+    except Exception:  # older API name
+        return pltpu.TPUCompilerParams(
+            dimension_semantics=dimension_semantics)

@@ -17,6 +17,8 @@ def make_production_mesh(*, multi_pod: bool = False):
     process."""
     import numpy as np
 
+    from repro.dist.compat import make_mesh
+
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
@@ -27,16 +29,11 @@ def make_production_mesh(*, multi_pod: bool = False):
             "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_"
             "count=512 before any jax import"
         )
-    return jax.make_mesh(
-        shape, axes,
-        devices=devs[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(shape, axes, devices=devs[:n])
 
 
 def make_host_mesh():
     """Single-device mesh for CPU examples/tests (same axis names)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.dist.compat import make_mesh
+
+    return make_mesh((1, 1), ("data", "model"))

@@ -1,14 +1,24 @@
 """Serving driver: int8 FAT-quantized model, batched requests.
 
 Pipeline: calibrate -> (optional FAT fine-tune) -> convert_to_int8 ->
-prefill each request batch -> greedy decode N tokens.  Weights live in
-memory as int8 (the paper's "ready to run on mobile phones" artifact, here
-TPU-shaped); activations quantize against the frozen calibrated+trained
-thresholds, so nothing is computed "on the fly" (§2).
+prefill each request batch -> greedy decode N tokens.  The whole resident
+state is int8: weights (the paper's "ready to run on mobile phones"
+artifact, here TPU-shaped) AND the KV cache (per-head static thresholds
+from the same §2 calibration pass, frozen at finalize_calibration) — so
+decode streams half the HBM bytes and nothing is computed "on the fly".
+
+The decode loop is a single compiled ``jax.lax.scan`` over the generation
+(launch/steps.py::make_decode_loop): N tokens cost one dispatch instead of
+N, with (token, cache, position) carried as scan state.  ``--loop`` keeps
+the legacy per-token Python loop for comparison (benchmarks/serve_bench.py
+tracks the ratio).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
       --requests 4 --prompt-len 32 --gen 16
+  Flags: --fp (bf16 weights baseline)  --no-kv-int8 (bf16 KV cache)
+         --loop (per-token dispatch instead of the scanned loop)
+         --pallas (fused kernels; defaults on for TPU backends)
 """
 from __future__ import annotations
 
@@ -26,14 +36,20 @@ from repro.launch import steps as ST
 from repro.models import build_model
 
 
-def prepare_int8(model, cfg, policy, params, calib_batches):
-    """Calibration + int8 conversion (the paper's deployment pipeline)."""
+def prepare_int8(model, cfg, policy, params, calib_batches, *,
+                 convert: bool = True):
+    """Calibration + int8 conversion (the paper's deployment pipeline).
+
+    ``convert=False`` stops after calibration (bf16-weight ablations need
+    the thresholds but not a second, immediately-discarded param pytree).
+    """
     qparams = A.init_qparams(model, params, policy)
     calib = jax.jit(ST.make_calibrate_step(model, cfg, policy))
     for b in calib_batches:
         qparams = calib(params, qparams, b)
     qparams = A.finalize_calibration(qparams, policy)
-    serve_params = A.convert_to_int8(model, params, qparams, policy)
+    serve_params = (A.convert_to_int8(model, params, qparams, policy)
+                    if convert else params)
     return serve_params, qparams
 
 
@@ -46,11 +62,22 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--fp", action="store_true",
                     help="serve in bf16 instead of int8 (baseline)")
+    ap.add_argument("--no-kv-int8", action="store_true",
+                    help="keep the KV cache bf16 (kv ablation)")
+    ap.add_argument("--loop", action="store_true",
+                    help="legacy per-token Python loop (vs lax.scan)")
+    ap.add_argument("--pallas", action="store_true", default=None,
+                    help="fused Pallas kernels (decode attention, int8 "
+                         "matmul); default: on for TPU backends, off on "
+                         "CPU where interpret mode is emulation-slow")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
-    policy = A.QuantPolicy()
+    kv_int8 = not args.no_kv_int8
+    use_pallas = (jax.default_backend() == "tpu" if args.pallas is None
+                  else args.pallas)
+    policy = A.QuantPolicy(kv_int8=kv_int8, use_pallas=use_pallas)
     params = model.init(jax.random.PRNGKey(0))
 
     shape = ShapeSpec("cli", "train", args.prompt_len, args.requests)
@@ -60,42 +87,78 @@ def main():
         b.pop("labels", None)
 
     mode = "none" if args.fp else "int8"
-    if args.fp:
+    if args.fp and not kv_int8:
         serve_params, qparams = params, A.finalize_calibration(
             A.init_qparams(model, params, policy), policy)
     else:
+        # int8 weights and/or int8 KV both need the calibration pass;
+        # bf16-weight ablations skip the weight conversion
         serve_params, qparams = prepare_int8(model, cfg, policy, params,
-                                             calib)
-        n_int8 = sum(1 for l in jax.tree.leaves(serve_params)
-                     if l.dtype == jnp.int8)
-        print(f"[serve] converted: {n_int8} int8 weight tensors resident")
+                                             calib, convert=not args.fp)
+        if not args.fp:
+            n_int8 = sum(1 for l in jax.tree.leaves(serve_params)
+                         if l.dtype == jnp.int8)
+            print(f"[serve] converted: {n_int8} int8 weight tensors resident")
 
-    prefill = jax.jit(ST.make_prefill_step(model, cfg, policy, mode=mode))
-    decode = jax.jit(ST.make_serve_step(model, cfg, policy, mode=mode))
+    # cache (arg 3) is donated: the decode carry reuses the input buffer
+    # instead of keeping two copies of the (possibly huge) cache resident
+    prefill = jax.jit(ST.make_prefill_step(model, cfg, policy, mode=mode),
+                      donate_argnums=(3,))
 
     # batched requests from the pipeline (prompt = first prompt_len tokens)
     batch = DP.make_batch(spec, 12345)
     batch.pop("labels", None)
     max_len = args.prompt_len + args.gen + (
         cfg.mm_patches if cfg.modality == "vlm" else 0)
-    cache = model.init_cache(args.requests, max_len, cfg.dtype)
+    if use_pallas:
+        # tile the cache length for the fused decode kernel — a non-tiling
+        # length forces it to pad-copy the cache every step
+        max_len = -(-max_len // 128) * 128
+    cache = model.init_cache(args.requests, max_len, cfg.dtype,
+                             kv_int8=kv_int8)
+    if kv_int8:
+        n_kv8 = sum(1 for l in jax.tree.leaves(cache)
+                    if l.dtype == jnp.int8)
+        print(f"[serve] kv cache: {n_kv8} int8 KV tensors resident")
 
+    # AOT-compile (lower().compile()) and time the resulting executables:
+    # steady-state numbers with no warm-up execution — lowering never runs
+    # the computation or consumes donated buffers, so the cache is not
+    # copied or doubled during startup
+    prefill_x = prefill.lower(serve_params, qparams, batch, cache).compile()
     t0 = time.time()
-    logits, cache = prefill(serve_params, qparams, batch, cache)
+    logits, cache = prefill_x(serve_params, qparams, batch, cache)
     next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    next_tok.block_until_ready()
     prefill_s = time.time() - t0
 
-    toks = [next_tok]
-    t0 = time.time()
     pos0 = args.prompt_len + (cfg.mm_patches if cfg.modality == "vlm" else 0)
-    for i in range(args.gen - 1):
-        next_tok, logits, cache = decode(
-            serve_params, qparams, toks[-1][:, None], cache, pos0 + i)
-        toks.append(next_tok)
+    if args.loop:
+        decode = jax.jit(ST.make_serve_step(model, cfg, policy, mode=mode),
+                         donate_argnums=(3,))
+        decode_x = decode.lower(serve_params, qparams, next_tok[:, None],
+                                cache, pos0).compile()
+        t0 = time.time()
+        toks = [next_tok]
+        for i in range(args.gen - 1):
+            nxt, logits, cache = decode_x(
+                serve_params, qparams, toks[-1][:, None], cache, pos0 + i)
+            toks.append(nxt)
+        out = jnp.stack(toks, axis=1)
+    else:
+        decode_loop = jax.jit(
+            ST.make_decode_loop(model, cfg, policy, mode=mode,
+                                n_steps=args.gen),
+            donate_argnums=(3,))
+        loop_x = decode_loop.lower(serve_params, qparams, next_tok, cache,
+                                   pos0).compile()
+        t0 = time.time()
+        out, cache = loop_x(serve_params, qparams, next_tok, cache, pos0)
+    out.block_until_ready()
     decode_s = time.time() - t0
-    out = jnp.stack(toks, axis=1)
+    kind = "loop" if args.loop else "scan"
     print(f"[serve] {args.requests} requests | prefill {prefill_s*1e3:.1f} ms "
-          f"| {args.gen} tokens in {decode_s*1e3:.1f} ms "
+          f"| {args.gen} tokens ({kind}) in {decode_s*1e3:.1f} ms "
           f"({decode_s/max(args.gen-1,1)*1e3:.1f} ms/tok)")
     for r in range(min(args.requests, 2)):
         print(f"  req{r}: prompt={batch['tokens'][r, :8].tolist()}... "

@@ -69,9 +69,10 @@ def serve_state_abstract(model, cfg: ModelConfig, policy: A.QuantPolicy):
     return jax.eval_shape(build, jax.random.PRNGKey(0))
 
 
-def cache_abstract(model, cfg: ModelConfig, batch: int, max_len: int):
+def cache_abstract(model, cfg: ModelConfig, batch: int, max_len: int,
+                   kv_int8: bool = False):
     return jax.eval_shape(
-        lambda: model.init_cache(batch, max_len, cfg.dtype)
+        lambda: model.init_cache(batch, max_len, cfg.dtype, kv_int8=kv_int8)
     )
 
 

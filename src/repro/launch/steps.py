@@ -39,9 +39,10 @@ def make_calibrate_step(model, cfg, policy: A.QuantPolicy):
         model.hidden(params, batch, ctx, remat=False)
         merged = dict(qparams)
         for path, obs in ctx.updates.items():
-            entry = dict(merged[path])
-            entry["act"] = obs
-            merged[path] = entry
+            if A.is_kv_path(path):  # KV observer entry: replace wholesale
+                merged[path] = obs
+            else:
+                merged[path] = {**merged[path], "act": obs}
         return merged
 
     return calibrate_step
@@ -131,9 +132,19 @@ def make_pretrain_step(model, cfg, hp: TrainHParams = TrainHParams()):
     return pretrain_step
 
 
+def _serve_ctx(mode: str, policy: A.QuantPolicy, qparams):
+    """Serving ctx.  A ctx is built even for mode='none' when the policy
+    quantizes the KV cache (Dense layers still run full precision —
+    enabled() is False): the int8-KV-over-bf16-weights ablation needs the
+    KV thresholds in qparams to reach attention."""
+    if mode == "none" and not policy.kv_int8:
+        return None
+    return A.make_ctx(mode, policy, qparams)
+
+
 def make_prefill_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8"):
     def prefill_step(serve_params, qparams, batch, cache):
-        ctx = A.make_ctx(mode, policy, qparams) if mode != "none" else None
+        ctx = _serve_ctx(mode, policy, qparams)
         logits, new_cache = model.prefill(serve_params, batch, cache, ctx)
         return logits, new_cache
 
@@ -142,7 +153,7 @@ def make_prefill_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8"):
 
 def make_serve_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8"):
     def serve_step(serve_params, qparams, tokens, cache, cur_pos):
-        ctx = A.make_ctx(mode, policy, qparams) if mode != "none" else None
+        ctx = _serve_ctx(mode, policy, qparams)
         logits, new_cache = model.decode_step(serve_params, tokens, cache,
                                               cur_pos, ctx)
         # greedy next token (sampled serving wires a temperature here)
@@ -150,3 +161,38 @@ def make_serve_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8"):
         return next_tok, logits, new_cache
 
     return serve_step
+
+
+def make_decode_loop(model, cfg, policy: A.QuantPolicy, mode: str = "int8",
+                     n_steps: int = 16):
+    """Whole-generation decode as ONE compiled call (the serving fast path).
+
+    The per-token Python loop re-dispatches the jitted step every token —
+    at decode shapes the dispatch overhead rivals the compute.  Here the
+    greedy-decode body rolls into a single ``jax.lax.scan`` carrying
+    (token, cache, position): N tokens cost one dispatch and XLA keeps the
+    cache resident across steps.  Callers should jit with
+    ``donate_argnums=(3,)`` so the input cache buffer is reused for the
+    scan carry instead of doubling resident cache HBM (serve.py does).
+
+    Returns (tokens (B, n_steps), final cache); tokens[:, 0] is ``tok0``
+    (the prefill argmax), the remaining n_steps-1 come from the scan.
+    """
+
+    step = make_serve_step(model, cfg, policy, mode=mode)
+
+    def decode_loop(serve_params, qparams, tok0, cache, pos0):
+        def body(carry, _):
+            tok, cache, pos = carry
+            nxt, _, cache = step(serve_params, qparams, tok[:, None], cache,
+                                 pos)
+            return (nxt, cache, pos + 1), nxt
+
+        carry0 = (tok0, cache, jnp.asarray(pos0, jnp.int32))
+        (_, cache, _), toks = jax.lax.scan(body, carry0, None,
+                                           length=n_steps - 1)
+        toks = jnp.concatenate([tok0[:, None], jnp.moveaxis(toks, 0, 1)],
+                               axis=1)
+        return toks, cache
+
+    return decode_loop

@@ -30,6 +30,23 @@ from repro.models.module import Dense, Module
 
 NEG_INF = -1e30
 
+# int8 KV cache uses the symmetric signed-8-bit grid (paper eq. 4); the
+# per-head dequant scale T/127 is frozen at finalize_calibration
+KV_LEVELS = 127.0
+
+
+def quantize_kv(x, scale):
+    """(B, S, KV, D) float -> int8 with per-head dequant ``scale`` (KV,)."""
+    s = scale.reshape(1, 1, -1, 1)
+    return jnp.clip(
+        jnp.round(x.astype(jnp.float32) / s), -KV_LEVELS, KV_LEVELS
+    ).astype(jnp.int8)
+
+
+def dequantize_kv(x_q, scale):
+    """int8 cache -> f32 with per-head dequant ``scale`` (KV,)."""
+    return x_q.astype(jnp.float32) * scale.reshape(1, 1, -1, 1)
+
 
 def _gqa_scores(q, k):
     """q: (B,Sq,KV,G,D)  k: (B,Sk,KV,D) -> (B,KV,G,Sq,Sk)."""
@@ -262,12 +279,63 @@ class Attention(Module):
         }
 
     # -- cache ------------------------------------------------------------
-    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   kv_int8: bool = False) -> dict:
+        """KV cache; ``kv_int8`` stores entries as int8 + per-head f32
+        dequant scales (half the bf16 HBM stream — the decode bandwidth
+        win).  Scales start at 1 and are written from the calibrated
+        thresholds during prefill.  Cross-attention memory stays float
+        (computed once per request, not the decode bottleneck)."""
         cache_len = min(max_len, self.window) if self.window else max_len
-        return {
-            "k": jnp.zeros((batch, cache_len, self.n_kv, self.head_dim), dtype),
-            "v": jnp.zeros((batch, cache_len, self.n_kv, self.head_dim), dtype),
+        kd = (batch, cache_len, self.n_kv, self.head_dim)
+        if kv_int8 and not self.cross:
+            return {
+                "k": jnp.zeros(kd, jnp.int8),
+                "v": jnp.zeros(kd, jnp.int8),
+                "k_scale": jnp.ones((self.n_kv,), jnp.float32),
+                "v_scale": jnp.ones((self.n_kv,), jnp.float32),
+            }
+        return {"k": jnp.zeros(kd, dtype), "v": jnp.zeros(kd, dtype)}
+
+    def _observe_kv(self, ctx, k, v):
+        """Feed post-rope K / raw V into the KV calibration observers
+        (same §2 calibration pass that feeds activation observers)."""
+        if ctx is None or ctx.mode != "calibrate":
+            return
+        from repro.core import api as A
+        from repro.core import calibration as calib
+
+        key = A.kv_path(self.path)
+        if key not in ctx.qparams:
+            return
+        ent = ctx.qparams[key]
+        spec = ctx.policy.kv_spec()
+        kw = dict(kind=ctx.policy.observer, percentile=ctx.policy.percentile)
+        ctx.updates[key] = {
+            "k": calib.update_observer(ent["k"], k, spec, **kw),
+            "v": calib.update_observer(ent["v"], v, spec, **kw),
         }
+
+    def _kv_scales(self, ctx) -> tuple[jax.Array, jax.Array]:
+        """Frozen per-head dequant scales T/127 from calibrated qparams."""
+        from repro.core import api as A
+
+        ent = None if ctx is None else ctx.qparams.get(A.kv_path(self.path))
+        # raw observer states also carry 't_max' (as running stats, zeros
+        # before any batch) — only a finalized entry (observer fields
+        # stripped) is a usable threshold
+        finalized = (ent is not None and "t_max" in ent.get("k", {})
+                     and "count" not in ent["k"])
+        if not finalized:
+            raise ValueError(
+                f"{self.path}: int8 KV cache requires calibrated+finalized "
+                "kv thresholds in qparams (QuantPolicy(kv_int8=True) at "
+                "init_qparams, the calibration pass, then "
+                "finalize_calibration)"
+            )
+        k_s = (jnp.maximum(ent["k"]["t_max"], 1e-8) / KV_LEVELS)
+        v_s = (jnp.maximum(ent["v"]["t_max"], 1e-8) / KV_LEVELS)
+        return k_s.astype(jnp.float32), v_s.astype(jnp.float32)
 
     def _qkv(self, params, x, ctx, kv_src=None):
         b, s, _ = x.shape
@@ -305,6 +373,7 @@ class Attention(Module):
             q_pos = q_offset + jnp.arange(s)
             k_pos = q_offset + jnp.arange(k.shape[1])
             q, k = self._rope(q, k, q_pos, k_pos)
+            self._observe_kv(ctx, k, v)
 
             def windowed(q, k, v):
                 if self.window is not None and s > self.window:
@@ -339,12 +408,18 @@ class Attention(Module):
         return self.wo(params["wo"], o, ctx)
 
     def prefill(self, params, x, cache, ctx=None, *, memory=None):
-        """Forward + populate the KV cache (returns (y, cache))."""
+        """Forward + populate the KV cache (returns (y, cache)).
+
+        With an int8 cache ("k_scale" present) the computed K/V quantize on
+        append against the frozen calibrated per-head thresholds; attention
+        over the prompt itself still runs on the exact K/V (quantization
+        error only enters through later decode reads)."""
         b, s, _ = x.shape
         q, k, v = self._qkv(params, x, ctx, kv_src=memory)
         if not self.cross:
             pos = jnp.arange(s)
             q, k = self._rope(q, k, pos, pos)
+            self._observe_kv(ctx, k, v)
         cache_len = cache["k"].shape[1]
         if self.cross:
             new_cache = {"k": k[:, :cache_len], "v": v[:, :cache_len]}
@@ -360,10 +435,17 @@ class Attention(Module):
                 shift = (s - keep) % cache_len
                 kk = jnp.roll(kk, shift, axis=1)
                 vv = jnp.roll(vv, shift, axis=1)
-            new_cache = {
+            new_cache = {}
+            if "k_scale" in cache:
+                k_s, v_s = self._kv_scales(ctx)
+                kk = quantize_kv(kk, k_s)
+                vv = quantize_kv(vv, v_s)
+                new_cache["k_scale"] = k_s
+                new_cache["v_scale"] = v_s
+            new_cache.update({
                 "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kk, 0, axis=1),
                 "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vv, 0, axis=1),
-            }
+            })
             if self.window is not None and s > self.window:
                 o = sliding_window_attention(q, k, v, window=self.window,
                                              q_chunk=self.q_chunk)
@@ -379,6 +461,13 @@ class Attention(Module):
 
         For SWA layers the cache is a ring buffer of size ``window``; the
         write index wraps and masking uses absolute positions.
+
+        With an int8 cache the new K/V quantize on append using the scales
+        stored in the cache (written at prefill), so decode needs no
+        threshold state.  The non-windowed int8 path can run the fused
+        Pallas flash-decode kernel (policy.use_pallas), which streams int8
+        tiles and dequantizes in VMEM; otherwise the cache dequantizes
+        into the jnp reference attention.
         """
         b, s, _ = x.shape
         q, k, v = self._qkv(params, x, ctx, kv_src=None if not self.cross else memory)
@@ -390,11 +479,23 @@ class Attention(Module):
         pos = jnp.full((s,), 0) + cur_pos
         q, k = self._rope(q, k, pos, pos)
         cache_len = cache["k"].shape[1]
+        quantized = "k_scale" in cache
+        if quantized:
+            k = quantize_kv(k, cache["k_scale"])
+            v = quantize_kv(v, cache["v_scale"])
+
+        def dequant(k_cache, v_cache):
+            if not quantized:
+                return k_cache, v_cache
+            return (dequantize_kv(k_cache, cache["k_scale"]),
+                    dequantize_kv(v_cache, cache["v_scale"]))
+
         if self.window is not None and cache_len == self.window:
             # ring buffer: absolute decode against rotated positions
             idx = cur_pos % cache_len
             k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, 1)
             v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, 1)
+            k_eff, v_eff = dequant(k_cache, v_cache)
             # absolute position of ring slot i given cur_pos
             slot = jnp.arange(cache_len)
             abs_pos = jnp.where(
@@ -402,16 +503,34 @@ class Attention(Module):
             )
             sc = _gqa_scores(
                 q.astype(jnp.float32) / jnp.sqrt(jnp.asarray(self.head_dim, jnp.float32)),
-                k_cache.astype(jnp.float32),
+                k_eff.astype(jnp.float32),
             )
             mask = (abs_pos >= 0) & (abs_pos >= cur_pos - self.window + 1)
             sc = jnp.where(mask[None, None, None, None, :], sc, NEG_INF)
             p = jax.nn.softmax(sc, axis=-1)
-            o = _gqa_out(p, v_cache.astype(jnp.float32)).astype(x.dtype)
+            o = _gqa_out(p, v_eff.astype(jnp.float32)).astype(x.dtype)
         else:
             k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cur_pos, 1)
             v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cur_pos, 1)
-            o = decode_attention(q, k_cache, v_cache, cur_pos + 1,
-                                 window=self.window)
+            use_kernel = (
+                quantized
+                and self.window is None
+                and ctx is not None
+                and ctx.policy.use_pallas
+            )
+            if use_kernel:
+                from repro.kernels import ops as kops
+
+                o = kops.decode_attention(
+                    q[:, 0], k_cache, v_cache,
+                    cache["k_scale"], cache["v_scale"], cur_pos + 1,
+                )[:, None].astype(x.dtype)
+            else:
+                k_eff, v_eff = dequant(k_cache, v_cache)
+                o = decode_attention(q, k_eff, v_eff, cur_pos + 1,
+                                     window=self.window)
         o = o.reshape(b, s, self.n_heads * self.head_dim)
-        return self.wo(params["wo"], o, ctx), {"k": k_cache, "v": v_cache}
+        new_cache = dict(cache)
+        new_cache["k"] = k_cache
+        new_cache["v"] = v_cache
+        return self.wo(params["wo"], o, ctx), new_cache

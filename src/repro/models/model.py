@@ -90,8 +90,11 @@ class CausalLM(Module):
         return self.readout_fn(params, ctx)(h), aux
 
     # -- serving --------------------------------------------------------------
-    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
-        return self.stack.init_cache(batch, max_len, dtype)
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   kv_int8: bool = False):
+        """``kv_int8`` allocates the KV cache as int8 + per-head f32 scales
+        (see Attention.init_cache) — pair with QuantPolicy(kv_int8=True)."""
+        return self.stack.init_cache(batch, max_len, dtype, kv_int8=kv_int8)
 
     def prefill(self, params, batch, cache, ctx=None):
         x = self.embed_inputs(params, batch, ctx)
@@ -189,8 +192,10 @@ class EncDecLM(Module):
         h, aux = self.hidden(params, batch, ctx, remat=remat)
         return self.readout_fn(params, ctx)(h), aux
 
-    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
-        return self.decoder.init_cache(batch, max_len, dtype)
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   kv_int8: bool = False):
+        return self.decoder.init_cache(batch, max_len, dtype,
+                                       kv_int8=kv_int8)
 
     def prefill(self, params, batch, cache, ctx=None):
         memory = self.encode(params, batch["frames"], ctx)

@@ -132,13 +132,16 @@ class Block(Module):
         return x, aux
 
     # -- caches -------------------------------------------------------------
-    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   kv_int8: bool = False) -> dict:
         c = {}
         if hasattr(self, "attn"):
-            c["attn"] = self.attn.init_cache(batch, max_len, dtype)
+            c["attn"] = self.attn.init_cache(batch, max_len, dtype,
+                                             kv_int8=kv_int8)
         if hasattr(self, "mamba"):
             c["mamba"] = self.mamba.init_cache(batch)
         if self.cross:
+            # cross memory is prefill-only traffic; stays full precision
             c["cross"] = self.cross_attn.init_cache(batch, max_len, dtype)
         return c
 
@@ -438,15 +441,21 @@ class Stack(Module):
         return lp, lctx
 
     # -- caches -------------------------------------------------------------
-    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   kv_int8: bool = False):
         if self.scanned and self.serve_homogeneous:
-            one = self.template.init_cache(batch, max_len, dtype)
+            one = self.template.init_cache(batch, max_len, dtype,
+                                           kv_int8=kv_int8)
+            # scale leaves init to ones, not zeros: a layer whose prefill
+            # never runs (impossible today, defensive) must still dequant
+            # to finite values
             return jax.tree.map(
-                lambda a: jnp.zeros((self.n_layers,) + a.shape, a.dtype), one
+                lambda a: jnp.broadcast_to(
+                    a, (self.n_layers,) + a.shape).astype(a.dtype), one
             )
         blocks = self._serve_blocks() if self.scanned else self.blocks
         return {
-            f"layer{i}": b.init_cache(batch, max_len, dtype)
+            f"layer{i}": b.init_cache(batch, max_len, dtype, kv_int8=kv_int8)
             for i, b in enumerate(blocks)
         }
 

@@ -6,6 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# full ARCHS sweep x (forward, train, int8) — minutes of compile on CPU;
+# the fast CI lane skips it, the tier-1 lane runs it
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCHS, get_config
 from repro.core import api as A
 from repro.core.distill import rmse_distill_loss

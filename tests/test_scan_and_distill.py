@@ -23,12 +23,21 @@ def _unstack_params(ps, cfg, keys=("stack",)):
     return pu
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["smollm-135m", "gemma3-12b", "mixtral-8x7b",
                                   "hymba-1.5b", "mamba2-780m"])
 def test_scan_matches_unrolled(arch):
     """cfg.scan_layers=True computes the same function as the unrolled
-    stack (within bf16 fusion noise)."""
-    cfg_u = get_config(arch, smoke=True)
+    stack.
+
+    Runs in f32: in bf16 the two lowerings fuse differently, the residual
+    stream drifts by ulps, and a router top-k near-tie can flip a token to
+    a different expert — a legitimate MoE sensitivity, not a scan bug.  In
+    f32 the comparison is a *tight* structural equivalence (~1e-6)."""
+    cfg_u = get_config(arch, smoke=True).replace(dtype=jnp.float32)
+    if cfg_u.ffn == "moe":
+        cfg_u = cfg_u.replace(
+            capacity_factor=float(cfg_u.n_experts) / cfg_u.top_k)
     cfg_s = cfg_u.replace(scan_layers=True)
     mu, ms = build_model(cfg_u), build_model(cfg_s)
     ps = ms.init(jax.random.PRNGKey(0))
@@ -39,7 +48,7 @@ def test_scan_matches_unrolled(arch):
     lo_u, _ = mu(pu, batch)
     rel = float(jnp.linalg.norm((lo_s - lo_u).astype(jnp.float32))
                 / (jnp.linalg.norm(lo_u.astype(jnp.float32)) + 1e-9))
-    assert rel < 2e-2, f"{arch}: {rel}"
+    assert rel < 1e-4, f"{arch}: {rel}"
 
 
 def test_scan_fat_step_trains():

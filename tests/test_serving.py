@@ -22,6 +22,7 @@ def _dropfree(cfg):
     return cfg
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_decode_matches_full_forward(arch):
     cfg = _dropfree(get_config(arch, smoke=True))
@@ -65,6 +66,7 @@ def test_decode_matches_full_forward(arch):
     assert rel < 2e-2, f"{arch}: decode rel err {rel}"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["smollm-135m", "gemma3-12b", "mamba2-780m",
                                   "hymba-1.5b"])
 def test_multi_step_decode(arch):

@@ -155,21 +155,21 @@ class TestCompressedCollective:
     def test_compressed_psum_close_to_exact(self):
         """int8 gradient compression: mean-reduced grads within one
         quantization step of the exact reduction."""
-        from functools import partial
         from repro.dist.collectives import compressed_psum
+        from repro.dist.compat import make_mesh, shard_map
 
         devs = jax.devices()
         if len(devs) < 1:
             pytest.skip("no devices")
-        mesh = jax.make_mesh((1,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("d",))
         x = jnp.asarray(np.random.default_rng(0).normal(size=(16,)),
                         jnp.float32)
 
-        @partial(jax.shard_map, mesh=mesh, in_specs=(jax.sharding.PartitionSpec(),),
-                 out_specs=jax.sharding.PartitionSpec(), check_vma=False)
-        def f(x):
-            return compressed_psum(x, "d")
+        f = shard_map(
+            lambda x: compressed_psum(x, "d"), mesh=mesh,
+            in_specs=(jax.sharding.PartitionSpec(),),
+            out_specs=jax.sharding.PartitionSpec(),
+        )
 
         got = f(x)
         step = float(jnp.max(jnp.abs(x))) / 127
