@@ -1,23 +1,29 @@
 """Serving-path benchmark: prefill / decode timing across the int8 grid.
 
-Measures steady-state (post-compile) wall time for the four serving
-configurations the decode fast path introduces:
+Measures steady-state (post-compile) wall time for the serving
+configurations of the two-kernel engine:
 
   * weights: bf16 vs int8
   * KV cache: bf16 vs int8
+  * prefill: chunked-jnp flash vs fused Pallas flash-prefill
+    (quantize-once int8 attention) vs chunked ragged pipeline
   * decode driver: per-token Python loop vs single lax.scan
 
 and writes ``BENCH_serve.json`` so the perf trajectory is tracked across
-PRs.  The headline numbers are decode ms/token and tokens/s; the scan/loop
-ratio is the dispatch-overhead win, the int8/bf16 ratios are the bandwidth
-win (visible on real HBM-bound hardware; on this CPU container they mostly
-track correctness, not the 2x byte reduction).
+PRs.  The headline numbers are prefill ms / tokens-per-s per config plus
+decode ms/token; the scan/loop ratio is the dispatch-overhead win, the
+int8/bf16 and fused/jnp ratios are the bandwidth win (visible on real
+HBM-bound hardware; on this CPU container the Pallas numbers run the
+interpret lowering, so they track correctness and grid overhead, not the
+2x byte reduction).
 
 Run: PYTHONPATH=src python -m benchmarks.serve_bench [--quick] [--gen 32]
+     [--prompt-len 512] [--prefill-chunk 128]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -43,7 +49,7 @@ def _bench(fn, *args, iters=2):
 
 
 def bench_config(model, cfg, params, batch, *, requests, prompt_len, gen,
-                 int8_weights, kv_int8, calib_batches):
+                 int8_weights, kv_int8, calib_batches, prefill_chunk=None):
     from repro.launch.serve import prepare_int8
 
     policy = A.QuantPolicy(kv_int8=kv_int8)
@@ -69,6 +75,31 @@ def bench_config(model, cfg, params, batch, *, requests, prompt_len, gen,
     cache0 = model.init_cache(requests, max_len, cfg.dtype, kv_int8=kv_int8)
 
     prefill_s = _bench(prefill, serve_params, qparams, batch, cache0)
+    n_prompt = requests * prompt_len
+    extra = {}
+    if int8_weights or kv_int8:
+        # fused flash-prefill: quantize-once attention over the int8 (or
+        # unit-scale bf16) KV tiles via the Pallas kernel
+        pol_f = dataclasses.replace(policy, use_pallas=True)
+        prefill_f = jax.jit(ST.make_prefill_step(model, cfg, pol_f,
+                                                 mode=mode))
+        fused_s = _bench(prefill_f, serve_params, qparams, batch, cache0)
+        extra["prefill_fused_ms"] = fused_s * 1e3
+        extra["prefill_fused_tokens_per_s"] = n_prompt / fused_s
+    if prefill_chunk:
+        ctoks, lengths = ST.pad_for_chunked_prefill(batch["tokens"],
+                                                    prefill_chunk)
+        cbatch = {"tokens": ctoks}
+        # cache sized for the PADDED prompt (whole chunks are written)
+        cache_c = model.init_cache(requests, ctoks.shape[1] + gen, cfg.dtype,
+                                   kv_int8=kv_int8)
+        prefill_c = jax.jit(ST.make_prefill_step(
+            model, cfg, policy, mode=mode, prefill_chunk=prefill_chunk))
+        chunked_s = _bench(prefill_c, serve_params, qparams, cbatch, cache_c,
+                           lengths)
+        extra["prefill_chunked_ms"] = chunked_s * 1e3
+        extra["prefill_chunked_tokens_per_s"] = n_prompt / chunked_s
+
     logits, cache = prefill(serve_params, qparams, batch, cache0)
     tok0 = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
 
@@ -88,6 +119,8 @@ def bench_config(model, cfg, params, batch, *, requests, prompt_len, gen,
     n_tok = max(gen - 1, 1)
     return {
         "prefill_ms": prefill_s * 1e3,
+        "prefill_tokens_per_s": n_prompt / prefill_s,
+        **extra,
         "decode_loop_ms_per_tok": loop_s / n_tok * 1e3,
         "decode_scan_ms_per_tok": scan_s / n_tok * 1e3,
         "decode_scan_tokens_per_s": requests * n_tok / scan_s,
@@ -103,6 +136,8 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--quick", action="store_true",
                     help="only the production config (int8 w + int8 kv)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="also time the chunked ragged prefill pipeline")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
@@ -130,6 +165,7 @@ def main():
         "requests": args.requests,
         "prompt_len": args.prompt_len,
         "gen": args.gen,
+        "prefill_chunk": args.prefill_chunk,
         "backend": jax.default_backend(),
         "configs": {},
     }
@@ -138,13 +174,32 @@ def main():
             model, cfg, params, batch, requests=args.requests,
             prompt_len=args.prompt_len, gen=args.gen,
             int8_weights=int8_w, kv_int8=kv8, calib_batches=calib_batches,
+            prefill_chunk=args.prefill_chunk,
         )
         report["configs"][name] = r
-        print(f"{name}: prefill {r['prefill_ms']:.1f} ms | "
+        fused = (f" | fused {r['prefill_fused_ms']:.1f} ms"
+                 if "prefill_fused_ms" in r else "")
+        chunked = (f" | chunked {r['prefill_chunked_ms']:.1f} ms"
+                   if "prefill_chunked_ms" in r else "")
+        print(f"{name}: prefill {r['prefill_ms']:.1f} ms "
+              f"({r['prefill_tokens_per_s']:.0f} tok/s){fused}{chunked} | "
               f"loop {r['decode_loop_ms_per_tok']:.2f} ms/tok | "
               f"scan {r['decode_scan_ms_per_tok']:.2f} ms/tok "
               f"({r['scan_speedup_vs_loop']:.2f}x, "
               f"{r['decode_scan_tokens_per_s']:.0f} tok/s)")
+
+    cfgs = report["configs"]
+    ref = cfgs.get("bf16_w_bf16_kv")
+    # bf16_w_int8_kv isolates the fused int8 ATTENTION (the int8-weight
+    # configs also swap every matmul kernel under use_pallas, which on the
+    # CPU interpret lowering is a separate, unrelated cost)
+    fus = cfgs.get("bf16_w_int8_kv") or next(
+        (c for n, c in cfgs.items()
+         if "int8_kv" in n and "prefill_fused_ms" in c), None)
+    if ref and fus and "prefill_fused_ms" in fus:
+        ratio = ref["prefill_ms"] / fus["prefill_fused_ms"]
+        report["fused_int8_prefill_speedup_vs_bf16_jnp"] = ratio
+        print(f"fused int8 prefill vs bf16 jnp prefill: {ratio:.2f}x")
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)

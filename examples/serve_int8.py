@@ -1,7 +1,18 @@
 """Serve a FAT-quantized model with batched requests (int8 weights).
 
 Wraps repro.launch.serve: calibrates, converts to int8, then runs batched
-prefill + greedy decode, comparing int8 against the bf16 baseline.
+prefill + greedy decode, comparing int8 against the bf16 baseline, and
+finally demonstrates the chunked ragged prefill pipeline with sampled
+decoding.
+
+Useful serve flags (see repro/launch/serve.py for the full list):
+  --prefill-chunk N   chunked ragged prefill: one lax.scan over fixed-size
+                      prompt chunks + a per-request length vector, so one
+                      compiled executable serves any prompt length
+  --temperature T     sampled decoding (0 = greedy); --top-p P restricts
+                      sampling to the nucleus of probability mass P
+  --pallas            fused Pallas kernels: flash-prefill AND flash-decode
+                      attend directly over the int8 KV cache tiles
 
 Run: PYTHONPATH=src python examples/serve_int8.py
 """
@@ -19,6 +30,14 @@ def main():
     out_fp = serve.main()
     same = (out_int8 == out_fp).mean()
     print(f"int8 vs bf16 generated-token agreement: {float(same):.2f}")
+
+    # chunked prefill (4 chunks of 8) + nucleus sampling: same engine, one
+    # executable for every prompt length up to the pad, sampled tokens
+    sys.argv = ["serve", "--arch", "smollm-135m", "--smoke",
+                "--requests", "4", "--prompt-len", "32", "--gen", "8",
+                "--prefill-chunk", "8", "--temperature", "0.8",
+                "--top-p", "0.9"]
+    serve.main()
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _da
 from repro.kernels import fake_quant as _fq
+from repro.kernels import prefill_attention as _pa
 from repro.kernels import quant_matmul as _qm
 from repro.kernels import ref as _ref
 
@@ -61,6 +62,22 @@ def decode_attention(q, k_cache, v_cache, k_scale, v_scale, cur_pos, **kw):
 
 
 decode_attention_ref = _ref.decode_attention_ref
+
+
+def prefill_attention(q, k, v, k_scale, v_scale, q_start, kv_len, **kw):
+    """Fused flash-prefill over an int8 (or unit-scale float) KV stream.
+
+    q: (B, Sq, KV, G, D); k/v: (B, Sk, KV, D) int8 with per-head dequant
+    scales (KV,) — the serving prefill hot path.  ``q_start`` offsets
+    query positions (chunked prefill); ``kv_len`` (B,) masks each
+    request's valid KV slots (ragged prompt lengths).  Causal and
+    sliding-window masks skip fully-dead tiles at block level.
+    """
+    return _pa.prefill_attention_int8(q, k, v, k_scale, v_scale, q_start,
+                                      kv_len, interpret=_interpret(), **kw)
+
+
+prefill_attention_ref = _ref.prefill_attention_ref
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))

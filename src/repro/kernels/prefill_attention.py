@@ -1,0 +1,209 @@
+"""Pallas TPU kernel: fused int8-KV flash-prefill attention.
+
+The prefill twin of kernels/decode_attention.py: where decode reads the
+whole cache for ONE query token, prefill attends a whole prompt (or one
+chunk of it) against the int8 KV stream — the dominant HBM cost of long
+prompts.  The paper's frozen per-head thresholds (FAT §2, calibrated then
+finalized) make the KV scales static at serve time, so the prompt's K/V
+quantize once and this kernel attends directly over the int8 tiles the
+cache stores — no bf16 re-materialization between "attend" and "append".
+
+    k/v int8 tile --DMA--> VMEM --(scales fold into q / epilogue)--> f32
+    s   = (q * k_scale / sqrt(D)) @ k_tile^T            (MXU)
+    m,l = running max / normalizer update               (VPU)
+    acc = acc * exp(m_old - m_new) + softmax_tile @ v_tile
+    out = acc * v_scale / l                             (epilogue)
+
+Grid is (B, KV-heads, Q-chunks, KV-chunks) with the KV axis innermost
+("arbitrary") so the (block_q * G, D) accumulator tile lives in VMEM
+scratch across KV steps — classic flash-attention online softmax, GQA
+groups flattened into the query-row axis so every tile is a plain 2D
+matmul.
+
+Masking is positional and block-skipped: causal and sliding-window
+predicates are evaluated per TILE first and a fully-masked tile skips its
+matmuls entirely via ``pl.when`` — a sliding-window layer therefore costs
+O(S * window) compute, not O(S^2).  ``q_start`` (scalar: chunk offset of
+query row 0) and ``kv_len`` (per-request valid KV count) make the same
+executable serve chunked, ragged prefill: padded/garbage rows normalize
+to zeros exactly like the decode kernel's empty-cache case.
+
+A bf16/f32 K/V stream runs through the same kernel with scales == 1.
+The pure-jnp oracle is kernels/ref.py::prefill_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tpu_compat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, qs_ref, kl_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, n_k: int, block_q: int, block_k: int,
+            groups: int, dim: int, causal: bool, window: int | None):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qs_ref[0, 0]
+    kv_len = kl_ref[0, 0]
+    q_lo = q_start + qi * block_q      # absolute position of query row 0
+    k_lo = ki * block_k                # absolute position of key col 0
+
+    # block-level skip: a tile whose every (q, k) pair is masked never
+    # touches the MXU — causal skips the upper-triangular half, a sliding
+    # window additionally skips everything left of the band
+    live = k_lo < kv_len
+    if causal:
+        live &= k_lo <= q_lo + (block_q - 1)
+    if window is not None:
+        live &= k_lo + (block_k - 1) >= q_lo - (window - 1)
+
+    @pl.when(live)
+    def _tile():
+        # fold key dequant scale and 1/sqrt(D) into q: the scale is uniform
+        # within a head, so (q*c) @ k_int8 == c * (q @ k)
+        c = ks_ref[0, 0] * jax.lax.rsqrt(jnp.asarray(dim, jnp.float32))
+        q = q_ref[0, 0].astype(jnp.float32) * c          # (block_q*G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # (block_k, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                # (block_q*G, block_k)
+
+        # element masks: GQA groups are flattened into rows, so row r is
+        # query position q_lo + r // G
+        rows = block_q * groups
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // groups
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        valid = k_pos < kv_len
+        if causal:
+            valid &= k_pos <= q_pos
+        if window is not None:
+            valid &= (q_pos - k_pos) < window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (rows, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        # re-mask: an all-masked row has s == m_new == NEG_INF and exp(0) == 1
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)        # (block_k, D)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _epilogue():
+        # value dequant folds once into the epilogue (linear in v); rows
+        # with no visible key (padding / ragged tail) have l == 0 -> zeros
+        o = acc_ref[...] * vs_ref[0, 0] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def _fit_block(s: int, target: int) -> int:
+    """Largest sublane-aligned tile <= target (padding covers remainders)."""
+    return max(8, min(target, -(-s // 8) * 8) // 8 * 8)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "out_dtype",
+                     "interpret"))
+def prefill_attention_int8(
+    q: jax.Array,        # (B, Sq, KV, G, D) float — prompt queries, GQA view
+    k: jax.Array,        # (B, Sk, KV, D) int8 (or float with scales == 1)
+    v: jax.Array,        # (B, Sk, KV, D) int8 (or float with scales == 1)
+    k_scale: jax.Array,  # (KV,) f32 per-head dequant scale
+    v_scale: jax.Array,  # (KV,) f32 per-head dequant scale
+    q_start: jax.Array,  # scalar int32: absolute position of query row 0
+    kv_len: jax.Array,   # (B,) int32: valid KV count per request
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+):
+    """Fused multi-query-row flash attention over a (possibly int8) KV
+    stream.  Returns (B, Sq, KV, G, D) in ``out_dtype``."""
+    b, sq, kvh, g, d = q.shape
+    sk = k.shape[1]
+
+    bq = _fit_block(sq, block_q)
+    bk = _fit_block(sk, block_k)
+    sq_p = -(-sq // bq) * bq
+    sk_p = -(-sk // bk) * bk
+    # prefill runs once per prompt (or chunk), so unlike the decode kernel
+    # a pad copy here is not on the per-token path — plain jnp.pad is fine
+    if sq_p != sq:
+        q = jnp.pad(q, [(0, 0), (0, sq_p - sq), (0, 0), (0, 0), (0, 0)])
+    if sk_p != sk:
+        pad = [(0, 0), (0, sk_p - sk), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    n_q, n_k = sq_p // bq, sk_p // bk
+
+    # flatten GQA groups into the query-row axis: (B, KV, Sq*G, D) keeps
+    # every kernel tile a 2D matmul operand
+    q2 = jnp.transpose(q, (0, 2, 1, 3, 4)).reshape(b, kvh, sq_p * g, d)
+    rows = bq * g
+
+    kernel = functools.partial(
+        _kernel, n_k=n_k, block_q=bq, block_k=bk, groups=g, dim=d,
+        causal=causal, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kvh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d), lambda bi, h, qi, ki: (bi, h, qi, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda bi, h, qi, ki: (bi, ki, h, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda bi, h, qi, ki: (bi, ki, h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, qi, ki: (h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, qi, ki: (h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, qi, ki: (0, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, qi, ki: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, d),
+                               lambda bi, h, qi, ki: (bi, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, sq_p * g, d), out_dtype),
+        scratch_shapes=_scratch(rows, d),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(
+        q2,
+        k,
+        v,
+        k_scale.reshape(kvh, 1).astype(jnp.float32),
+        v_scale.reshape(kvh, 1).astype(jnp.float32),
+        jnp.reshape(q_start, (1, 1)).astype(jnp.int32),
+        jnp.reshape(jnp.broadcast_to(kv_len, (b,)), (b, 1)).astype(jnp.int32),
+    )
+    out = out.reshape(b, kvh, sq_p, g, d).transpose(0, 2, 1, 3, 4)
+    return out[:, :sq]
+
+
+def _scratch(rows, d):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return [
+        pltpu.VMEM((rows, d), jnp.float32),  # output accumulator
+        pltpu.VMEM((rows, 1), jnp.float32),  # running max
+        pltpu.VMEM((rows, 1), jnp.float32),  # running normalizer
+    ]

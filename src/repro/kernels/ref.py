@@ -37,6 +37,39 @@ def decode_attention_ref(q, k_cache, v_cache, k_scale, v_scale, cur_pos,
     return (out * (jnp.asarray(cur_pos) > 0)).astype(out_dtype)
 
 
+def prefill_attention_ref(q, k, v, k_scale, v_scale, q_start, kv_len, *,
+                          causal=True, window=None, out_dtype=jnp.float32):
+    """Oracle for kernels.prefill_attention_int8: dequantize the K/V
+    stream, masked softmax per query row, GQA-grouped output.
+
+    q: (B, Sq, KV, G, D); k/v: (B, Sk, KV, D) int8 (or float);
+    k/v_scale: (KV,) dequant scales; q_start: absolute position of query
+    row 0 (scalar); kv_len: (B,) valid KV count per request.  Query rows
+    with no visible key return zeros, matching the kernel.
+    """
+    b, sq, kvh, g, d = q.shape
+    sk = k.shape[1]
+    kf = k.astype(jnp.float32) * k_scale.reshape(1, 1, -1, 1)
+    vf = v.astype(jnp.float32) * v_scale.reshape(1, 1, -1, 1)
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf)
+    q_pos = jnp.asarray(q_start) + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len), (b,))
+    mask = (k_pos[None, :] < kv_len[:, None])[:, None, None, None, :]
+    mask = jnp.broadcast_to(mask, s.shape)
+    if causal:
+        mask &= (q_pos[:, None] >= k_pos[None, :])[None, None, None]
+    if window is not None:
+        mask &= ((q_pos[:, None] - k_pos[None, :]) < window)[None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p / denom, vf)
+    return out.astype(out_dtype)
+
+
 def fake_quant_ref(x, t_max, alpha, *, levels=127.0, qmin=-127.0, qmax=127.0,
                    alpha_min=0.5, alpha_max=1.0):
     """Oracle for kernels.fake_quant_fwd (per-out-channel thresholds)."""

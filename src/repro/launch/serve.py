@@ -1,17 +1,27 @@
 """Serving driver: int8 FAT-quantized model, batched requests.
 
 Pipeline: calibrate -> (optional FAT fine-tune) -> convert_to_int8 ->
-prefill each request batch -> greedy decode N tokens.  The whole resident
+prefill each request batch -> decode N tokens.  The whole resident
 state is int8: weights (the paper's "ready to run on mobile phones"
 artifact, here TPU-shaped) AND the KV cache (per-head static thresholds
 from the same §2 calibration pass, frozen at finalize_calibration) — so
-decode streams half the HBM bytes and nothing is computed "on the fly".
+BOTH attention phases stream half the HBM bytes and nothing is computed
+"on the fly".
 
-The decode loop is a single compiled ``jax.lax.scan`` over the generation
-(launch/steps.py::make_decode_loop): N tokens cost one dispatch instead of
-N, with (token, cache, position) carried as scan state.  ``--loop`` keeps
-the legacy per-token Python loop for comparison (benchmarks/serve_bench.py
-tracks the ratio).
+The engine is two fused Pallas kernels over the same int8 cache
+(``--pallas``): flash-prefill (kernels/prefill_attention.py — the prompt's
+K/V quantize once and are attended AND appended as the same tiles) and
+flash-decode (kernels/decode_attention.py).  The decode loop is a single
+compiled ``jax.lax.scan`` over the generation (steps.make_decode_loop): N
+tokens cost one dispatch instead of N, with (token, cache, position, PRNG
+key) carried as scan state.  ``--loop`` keeps the legacy per-token Python
+loop for comparison (benchmarks/serve_bench.py tracks the ratio).
+
+``--prefill-chunk N`` switches prefill to the chunked ragged pipeline:
+one lax.scan over fixed-size prompt chunks plus a per-request length
+vector, so a single compiled executable serves any prompt length up to
+the pad (no per-shape retrace).  ``--temperature`` / ``--top-p`` turn on
+sampled decoding (greedy by default).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
@@ -19,6 +29,8 @@ Usage:
   Flags: --fp (bf16 weights baseline)  --no-kv-int8 (bf16 KV cache)
          --loop (per-token dispatch instead of the scanned loop)
          --pallas (fused kernels; defaults on for TPU backends)
+         --prefill-chunk N (chunked ragged prefill)
+         --temperature T --top-p P --seed S (sampled decoding)
 """
 from __future__ import annotations
 
@@ -67,9 +79,19 @@ def main():
     ap.add_argument("--loop", action="store_true",
                     help="legacy per-token Python loop (vs lax.scan)")
     ap.add_argument("--pallas", action="store_true", default=None,
-                    help="fused Pallas kernels (decode attention, int8 "
-                         "matmul); default: on for TPU backends, off on "
-                         "CPU where interpret mode is emulation-slow")
+                    help="fused Pallas kernels (prefill + decode attention, "
+                         "int8 matmul); default: on for TPU backends, off "
+                         "on CPU where interpret mode is emulation-slow")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked ragged prefill: scan fixed-size prompt "
+                         "chunks with a per-request length vector (one "
+                         "executable for every prompt length)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (with --temperature > 0)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for sampled decoding")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -102,13 +124,20 @@ def main():
 
     # cache (arg 3) is donated: the decode carry reuses the input buffer
     # instead of keeping two copies of the (possibly huge) cache resident
-    prefill = jax.jit(ST.make_prefill_step(model, cfg, policy, mode=mode),
+    prefill = jax.jit(ST.make_prefill_step(model, cfg, policy, mode=mode,
+                                           prefill_chunk=args.prefill_chunk),
                       donate_argnums=(3,))
 
     # batched requests from the pipeline (prompt = first prompt_len tokens)
     batch = DP.make_batch(spec, 12345)
     batch.pop("labels", None)
-    max_len = args.prompt_len + args.gen + (
+    prompt_cap = args.prompt_len
+    if args.prefill_chunk:
+        # the cache must hold the PADDED prompt: chunked prefill writes
+        # whole chunks (garbage tail slots are masked by the length vector)
+        prompt_cap = -(-args.prompt_len // args.prefill_chunk
+                       ) * args.prefill_chunk
+    max_len = prompt_cap + args.gen + (
         cfg.mm_patches if cfg.modality == "vlm" else 0)
     if use_pallas:
         # tile the cache length for the fused decode kernel — a non-tiling
@@ -121,14 +150,27 @@ def main():
                     if l.dtype == jnp.int8)
         print(f"[serve] kv cache: {n_kv8} int8 KV tensors resident")
 
+    if args.prefill_chunk:
+        # pad prompts to a chunk multiple; the per-request length vector
+        # masks the tail, so THIS executable serves any prompt length
+        batch["tokens"], lengths = ST.pad_for_chunked_prefill(
+            batch["tokens"], args.prefill_chunk)
+        prefill_args = (serve_params, qparams, batch, cache, lengths)
+    else:
+        prefill_args = (serve_params, qparams, batch, cache)
+
     # AOT-compile (lower().compile()) and time the resulting executables:
     # steady-state numbers with no warm-up execution — lowering never runs
     # the computation or consumes donated buffers, so the cache is not
     # copied or doubled during startup
-    prefill_x = prefill.lower(serve_params, qparams, batch, cache).compile()
+    prefill_x = prefill.lower(*prefill_args).compile()
     t0 = time.time()
-    logits, cache = prefill_x(serve_params, qparams, batch, cache)
-    next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    logits, cache = prefill_x(*prefill_args)
+    key = jax.random.PRNGKey(args.seed)
+    key, sub = jax.random.split(key)
+    next_tok = ST.sample_tokens(logits[:, -1, :], sub,
+                                temperature=args.temperature,
+                                top_p=args.top_p)
     next_tok.block_until_ready()
     prefill_s = time.time() - t0
 
@@ -143,21 +185,32 @@ def main():
         for i in range(args.gen - 1):
             nxt, logits, cache = decode_x(
                 serve_params, qparams, toks[-1][:, None], cache, pos0 + i)
+            if args.temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = ST.sample_tokens(logits[:, -1, :], sub,
+                                       temperature=args.temperature,
+                                       top_p=args.top_p)
             toks.append(nxt)
         out = jnp.stack(toks, axis=1)
     else:
         decode_loop = jax.jit(
             ST.make_decode_loop(model, cfg, policy, mode=mode,
-                                n_steps=args.gen),
+                                n_steps=args.gen,
+                                temperature=args.temperature,
+                                top_p=args.top_p),
             donate_argnums=(3,))
         loop_x = decode_loop.lower(serve_params, qparams, next_tok, cache,
-                                   pos0).compile()
+                                   pos0, key).compile()
         t0 = time.time()
-        out, cache = loop_x(serve_params, qparams, next_tok, cache, pos0)
+        out, cache = loop_x(serve_params, qparams, next_tok, cache, pos0, key)
     out.block_until_ready()
     decode_s = time.time() - t0
     kind = "loop" if args.loop else "scan"
-    print(f"[serve] {args.requests} requests | prefill {prefill_s*1e3:.1f} ms "
+    pf_kind = (f"chunked/{args.prefill_chunk}" if args.prefill_chunk
+               else "one-shot")
+    pf_tps = args.requests * args.prompt_len / max(prefill_s, 1e-9)
+    print(f"[serve] {args.requests} requests | prefill ({pf_kind}) "
+          f"{prefill_s*1e3:.1f} ms ({pf_tps:.0f} tok/s) "
           f"| {args.gen} tokens ({kind}) in {decode_s*1e3:.1f} ms "
           f"({decode_s/max(args.gen-1,1)*1e3:.1f} ms/tok)")
     for r in range(min(args.requests, 2)):

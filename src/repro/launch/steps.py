@@ -9,7 +9,13 @@
   * calibrate_step   — observer pass (§2 calibration).
   * pretrain_step    — standard next-token CE on all params (substrate
                        proof: the framework trains, not just fine-tunes).
-  * prefill_step / serve_step — int8 serving paths (weights int8-resident).
+  * prefill_step     — int8 serving prefill; ``prefill_chunk`` switches to
+                       the chunked ragged variant (lax.scan over fixed
+                       prompt chunks + a per-request length vector: one
+                       executable for every prompt length).
+  * serve_step / decode_loop — one-token decode and the scanned
+                       whole-generation loop; ``temperature``/``top_p``
+                       sample from the carried PRNG key (greedy default).
 """
 from __future__ import annotations
 
@@ -134,21 +140,137 @@ def make_pretrain_step(model, cfg, hp: TrainHParams = TrainHParams()):
 
 def _serve_ctx(mode: str, policy: A.QuantPolicy, qparams):
     """Serving ctx.  A ctx is built even for mode='none' when the policy
-    quantizes the KV cache (Dense layers still run full precision —
-    enabled() is False): the int8-KV-over-bf16-weights ablation needs the
-    KV thresholds in qparams to reach attention."""
-    if mode == "none" and not policy.kv_int8:
+    quantizes the KV cache or enables the Pallas kernels (Dense layers
+    still run full precision — enabled() is False): the
+    int8-KV-over-bf16-weights ablation needs the KV thresholds in qparams
+    to reach attention, and the fused bf16-KV attention kernels (unit
+    scales) need the policy flag to reach it."""
+    if mode == "none" and not (policy.kv_int8 or policy.use_pallas):
         return None
     return A.make_ctx(mode, policy, qparams)
 
 
-def make_prefill_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8"):
-    def prefill_step(serve_params, qparams, batch, cache):
+def pad_for_chunked_prefill(tokens, chunk: int, lengths=None):
+    """Pad (B, S) tokens up to a ``chunk`` multiple and build the
+    per-request length vector the chunked prefill step consumes
+    (defaults to the unpadded S for every request)."""
+    b, s = tokens.shape
+    s_pad = -(-s // chunk) * chunk
+    if s_pad != s:
+        tokens = jnp.pad(tokens, [(0, 0), (0, s_pad - s)])
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    return tokens, jnp.asarray(lengths, jnp.int32)
+
+
+def _attn_cache_len(cache):
+    """Sequence capacity of the first attention cache in a cache pytree
+    (k is (..., S, KV, D) in every layout, stacked or per-layer)."""
+    if isinstance(cache, dict):
+        if "attn" in cache and "k" in cache["attn"]:
+            return cache["attn"]["k"].shape[-3]
+        for sub in cache.values():
+            n = _attn_cache_len(sub)
+            if n is not None:
+                return n
+    return None
+
+
+def make_prefill_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8",
+                      prefill_chunk: int | None = None):
+    """Prefill step.  With ``prefill_chunk`` set, returns the CHUNKED
+    variant ``prefill_step(params, qparams, batch, cache, lengths)``: a
+    ``lax.scan`` over fixed-size prompt chunks with a per-request length
+    vector, so ONE compiled executable serves ragged prompt lengths
+    (tokens padded to a chunk multiple) instead of recompiling per shape.
+    Each chunk appends its K/V at absolute cache slots and attends over
+    the growing cache; the carry keeps each request's last valid hidden
+    state so the readout runs once on (B, 1, d), never on full logits.
+    """
+    if prefill_chunk is None:
+        def prefill_step(serve_params, qparams, batch, cache):
+            ctx = _serve_ctx(mode, policy, qparams)
+            logits, new_cache = model.prefill(serve_params, batch, cache, ctx)
+            return logits, new_cache
+
+        return prefill_step
+
+    kinds = {cfg.layer_kind(i) for i in range(cfg.n_layers)}
+    if kinds - {"attn", "attn_local"} or cfg.modality != "text":
+        raise ValueError(
+            "chunked prefill covers attention-only text stacks: SSM state "
+            "folding has no per-request length masking yet "
+            f"(got kinds={sorted(kinds)}, modality={cfg.modality})")
+
+    def prefill_step(serve_params, qparams, batch, cache, lengths):
         ctx = _serve_ctx(mode, policy, qparams)
-        logits, new_cache = model.prefill(serve_params, batch, cache, ctx)
-        return logits, new_cache
+        tokens = batch["tokens"]
+        b, s_max = tokens.shape
+        if s_max % prefill_chunk:
+            raise ValueError(
+                f"tokens length {s_max} must pad to a multiple of "
+                f"prefill_chunk={prefill_chunk} "
+                "(steps.pad_for_chunked_prefill)")
+        cache_len = _attn_cache_len(cache)
+        if cache_len is not None and s_max > cache_len:
+            # dynamic_update_slice would silently CLAMP the out-of-range
+            # chunk write, shifting keys into wrong slots — reject instead
+            raise ValueError(
+                f"padded prompt {s_max} exceeds the cache length "
+                f"{cache_len}; size the cache to at least the padded "
+                "prompt (prompt_len rounded up to prefill_chunk) + gen")
+        lengths = jnp.asarray(lengths, jnp.int32)
+        n_chunks = s_max // prefill_chunk
+
+        def body(carry, ci):
+            cache, h_last = carry
+            tok_c = jax.lax.dynamic_slice_in_dim(
+                tokens, ci * prefill_chunk, prefill_chunk, axis=1)
+            h, cache = model.prefill_chunk(
+                serve_params, tok_c, cache, ci * prefill_chunk, ctx,
+                lengths=lengths, kv_limit=s_max)
+            # carry the last VALID hidden of each request (requests whose
+            # final token lives in this chunk update; others keep theirs)
+            last = lengths - 1
+            here = (last >= ci * prefill_chunk) & (
+                last < (ci + 1) * prefill_chunk)
+            idx = jnp.clip(last - ci * prefill_chunk, 0, prefill_chunk - 1)
+            h_sel = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+            h_last = jnp.where(here[:, None, None], h_sel.astype(h_last.dtype),
+                               h_last)
+            return (cache, h_last), None
+
+        h0 = jnp.zeros((b, 1, cfg.d_model), cfg.dtype)
+        (cache, h_last), _ = jax.lax.scan(body, (cache, h0),
+                                          jnp.arange(n_chunks))
+        logits = model.readout_fn(serve_params, ctx)(h_last)
+        return logits, cache
 
     return prefill_step
+
+
+def sample_tokens(logits, key, *, temperature: float = 1.0,
+                  top_p: float = 1.0):
+    """Temperature / nucleus (top-p) sampling over (B, V) logits.
+
+    ``temperature <= 0`` is greedy argmax.  ``top_p < 1`` keeps the
+    smallest prefix of probability-sorted tokens whose mass reaches
+    top_p (always at least the argmax) and renormalizes over it.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    if top_p < 1.0:
+        sorted_l = jnp.sort(l, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        # exclusive cumulative mass: a token stays while the mass BEFORE
+        # it is < top_p, so the argmax always survives
+        cum = jnp.cumsum(probs, axis=-1) - probs
+        keep = cum < top_p
+        thresh = jnp.min(jnp.where(keep, sorted_l, jnp.inf), axis=-1,
+                         keepdims=True)
+        l = jnp.where(l >= thresh, l, -jnp.inf)
+    return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)
 
 
 def make_serve_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8"):
@@ -156,7 +278,8 @@ def make_serve_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8"):
         ctx = _serve_ctx(mode, policy, qparams)
         logits, new_cache = model.decode_step(serve_params, tokens, cache,
                                               cur_pos, ctx)
-        # greedy next token (sampled serving wires a temperature here)
+        # greedy next token; make_decode_loop overrides with sample_tokens
+        # when a temperature is set
         next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         return next_tok, logits, new_cache
 
@@ -164,33 +287,46 @@ def make_serve_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8"):
 
 
 def make_decode_loop(model, cfg, policy: A.QuantPolicy, mode: str = "int8",
-                     n_steps: int = 16):
+                     n_steps: int = 16, temperature: float = 0.0,
+                     top_p: float = 1.0):
     """Whole-generation decode as ONE compiled call (the serving fast path).
 
     The per-token Python loop re-dispatches the jitted step every token —
     at decode shapes the dispatch overhead rivals the compute.  Here the
-    greedy-decode body rolls into a single ``jax.lax.scan`` carrying
-    (token, cache, position): N tokens cost one dispatch and XLA keeps the
-    cache resident across steps.  Callers should jit with
+    decode body rolls into a single ``jax.lax.scan`` carrying (token,
+    cache, position, PRNG key): N tokens cost one dispatch and XLA keeps
+    the cache resident across steps.  Callers should jit with
     ``donate_argnums=(3,)`` so the input cache buffer is reused for the
     scan carry instead of doubling resident cache HBM (serve.py does).
 
+    ``temperature > 0`` samples each token (optionally nucleus-filtered by
+    ``top_p``) with a per-step key split from the carried key; the default
+    0.0 keeps greedy decoding bit-identical to before.
+
     Returns (tokens (B, n_steps), final cache); tokens[:, 0] is ``tok0``
-    (the prefill argmax), the remaining n_steps-1 come from the scan.
+    (the caller's prefill argmax/sample), the rest come from the scan.
     """
 
     step = make_serve_step(model, cfg, policy, mode=mode)
+    sampled = temperature > 0.0
 
-    def decode_loop(serve_params, qparams, tok0, cache, pos0):
+    def decode_loop(serve_params, qparams, tok0, cache, pos0, key=None):
+        if key is None:
+            key = jax.random.PRNGKey(0)
+
         def body(carry, _):
-            tok, cache, pos = carry
-            nxt, _, cache = step(serve_params, qparams, tok[:, None], cache,
-                                 pos)
-            return (nxt, cache, pos + 1), nxt
+            tok, cache, pos, key = carry
+            nxt, logits, cache = step(serve_params, qparams, tok[:, None],
+                                      cache, pos)
+            if sampled:
+                key, sub = jax.random.split(key)
+                nxt = sample_tokens(logits[:, -1, :], sub,
+                                    temperature=temperature, top_p=top_p)
+            return (nxt, cache, pos + 1, key), nxt
 
-        carry0 = (tok0, cache, jnp.asarray(pos0, jnp.int32))
-        (_, cache, _), toks = jax.lax.scan(body, carry0, None,
-                                           length=n_steps - 1)
+        carry0 = (tok0, cache, jnp.asarray(pos0, jnp.int32), key)
+        (_, cache, _, _), toks = jax.lax.scan(body, carry0, None,
+                                              length=n_steps - 1)
         toks = jnp.concatenate([tok0[:, None], jnp.moveaxis(toks, 0, 1)],
                                axis=1)
         return toks, cache

@@ -13,6 +13,14 @@ decode):
     sequence-sharded cache GSPMD turns the softmax reductions into the
     flash-decode partial-max/partial-sum combine automatically.
 
+Serving runs a TWO-KERNEL fused engine when policy.use_pallas: prefill
+attends through kernels/prefill_attention.py (the prompt's K/V quantize
+once against the frozen calibrated thresholds and the SAME int8 tiles are
+appended to the cache and attended), decode through
+kernels/decode_attention.py.  ``quantize_for_cache``/``cache_write`` are
+the single quantize-on-append point shared by the dense cache and the SWA
+ring buffer across both phases.
+
 All paths share GQA head grouping: Hq = KV * G, computed as einsum over a
 (B, S, KV, G, D) view so no materialized head replication occurs.
 """
@@ -46,6 +54,40 @@ def quantize_kv(x, scale):
 def dequantize_kv(x_q, scale):
     """int8 cache -> f32 with per-head dequant ``scale`` (KV,)."""
     return x_q.astype(jnp.float32) * scale.reshape(1, 1, -1, 1)
+
+
+def quantize_for_cache(cache, k, v):
+    """Cache-ready K/V: quantize against the cache's per-head scales when
+    the cache is int8, otherwise cast to the cache storage dtype.
+
+    The single quantize-on-append point shared by the dense cache and the
+    SWA ring buffer, for both prefill and decode — K/V quantize ONCE and
+    the same tiles feed attention and the cache write (seeds the ROADMAP
+    paged-cache unification).
+    """
+    if "k_scale" in cache:
+        return (quantize_kv(k, cache["k_scale"]),
+                quantize_kv(v, cache["v_scale"]))
+    return k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+
+
+def cache_write(cache, kq, vq, start):
+    """Write cache-ready K/V tiles into slots [start, start + len) along
+    the sequence axis; scales and any other cache entries carry over."""
+    new = dict(cache)
+    new["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, start, 1)
+    new["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, start, 1)
+    return new
+
+
+def cache_scales(cache):
+    """Per-head dequant scales of a cache (ones for a float cache) — the
+    kernels accept a float cache through the same code path."""
+    if "k_scale" in cache:
+        return cache["k_scale"], cache["v_scale"]
+    n_kv = cache["k"].shape[2]
+    ones = jnp.ones((n_kv,), jnp.float32)
+    return ones, ones
 
 
 def _gqa_scores(q, k):
@@ -407,17 +449,30 @@ class Attention(Module):
         o = o.reshape(b, s, self.n_heads * self.head_dim)
         return self.wo(params["wo"], o, ctx)
 
-    def prefill(self, params, x, cache, ctx=None, *, memory=None):
+    def prefill(self, params, x, cache, ctx=None, *, memory=None,
+                q_offset=0, lengths=None, kv_limit=None):
         """Forward + populate the KV cache (returns (y, cache)).
 
-        With an int8 cache ("k_scale" present) the computed K/V quantize on
-        append against the frozen calibrated per-head thresholds; attention
-        over the prompt itself still runs on the exact K/V (quantization
-        error only enters through later decode reads)."""
+        K/V quantize ONCE against the frozen calibrated per-head
+        thresholds (int8 cache) and the same cache-ready tiles feed both
+        the cache write and — on the fused path (policy.use_pallas) — the
+        Pallas flash-prefill kernel, which attends directly over the int8
+        stream (dense and SWA ring cases alike).  The jnp fallback keeps
+        the exact-K/V attention of the reference path.
+
+        ``q_offset``/``lengths`` enable chunked ragged prefill: positions
+        shift by ``q_offset``, the chunk's K/V append at slot ``q_offset``
+        of a dense cache, and attention runs against the updated cache
+        masked to each request's valid length.  ``kv_limit`` (static int)
+        bounds the cache extent attention reads — the step passes the
+        padded prompt length so per-chunk work scales with the prompt,
+        not the cache capacity.  ``lengths is None`` is the one-shot
+        whole-prompt case."""
         b, s, _ = x.shape
+        chunked = lengths is not None
         q, k, v = self._qkv(params, x, ctx, kv_src=memory)
         if not self.cross:
-            pos = jnp.arange(s)
+            pos = q_offset + jnp.arange(s)
             q, k = self._rope(q, k, pos, pos)
             self._observe_kv(ctx, k, v)
         cache_len = cache["k"].shape[1]
@@ -425,33 +480,77 @@ class Attention(Module):
             new_cache = {"k": k[:, :cache_len], "v": v[:, :cache_len]}
             o = flash_attention(q, k, v, causal=False, q_chunk=self.q_chunk,
                                 kv_chunk=self.kv_chunk)
+            o = o.reshape(b, s, self.n_heads * self.head_dim)
+            return self.wo(params["wo"], o, ctx), new_cache
+
+        if "k_scale" in cache:
+            k_s, v_s = self._kv_scales(ctx)
+            cache = {**cache, "k_scale": k_s, "v_scale": v_s}
+        # quantize once: the same tiles are appended AND (kernel path)
+        # attended — no bf16 K/V re-materialization between the two
+        kq, vq = quantize_for_cache(cache, k, v)
+        use_kernel = (ctx is not None and ctx.policy.use_pallas
+                      and self.causal)
+
+        if chunked:
+            if self.window is not None and cache_len == self.window:
+                raise ValueError(
+                    f"{self.path}: chunked prefill needs a dense cache; the "
+                    "SWA ring buffer drops absolute slots (size the cache "
+                    ">= max_len or prefill one-shot)")
+            new_cache = cache_write(cache, kq, vq, q_offset)
+            kv_len = jnp.clip(jnp.asarray(lengths, jnp.int32), 0,
+                              q_offset + s)
+            # attend only the cache prefix that can hold prompt K/V —
+            # without this every chunk pays for max_len (prompt + full
+            # generation budget) worth of dequant + scores
+            limit = cache_len if kv_limit is None else min(kv_limit,
+                                                           cache_len)
+            k_src, v_src = new_cache["k"][:, :limit], new_cache["v"][:, :limit]
+            if use_kernel:
+                from repro.kernels import ops as kops
+
+                ks_, vs_ = cache_scales(new_cache)
+                o = kops.prefill_attention(
+                    q, k_src, v_src, ks_, vs_,
+                    q_offset, kv_len, causal=True, window=self.window,
+                ).astype(x.dtype)
+            else:
+                if "k_scale" in new_cache:
+                    k_eff = dequantize_kv(k_src, new_cache["k_scale"])
+                    v_eff = dequantize_kv(v_src, new_cache["v_scale"])
+                else:
+                    k_eff, v_eff = k_src, v_src
+                o = flash_attention(q, k_eff, v_eff, causal=True,
+                                    q_chunk=self.q_chunk,
+                                    kv_chunk=self.kv_chunk,
+                                    q_offset=q_offset, window=self.window)
         else:
             # keep the last cache_len entries; ring invariant: position p
             # lives at slot p % cache_len (decode relies on this)
             keep = min(s, cache_len)
-            kk = k[:, s - keep:]
-            vv = v[:, s - keep:]
+            kk, vv = kq[:, s - keep:], vq[:, s - keep:]
             if keep == cache_len:
                 shift = (s - keep) % cache_len
                 kk = jnp.roll(kk, shift, axis=1)
                 vv = jnp.roll(vv, shift, axis=1)
-            new_cache = {}
-            if "k_scale" in cache:
-                k_s, v_s = self._kv_scales(ctx)
-                kk = quantize_kv(kk, k_s)
-                vv = quantize_kv(vv, v_s)
-                new_cache["k_scale"] = k_s
-                new_cache["v_scale"] = v_s
-            new_cache.update({
-                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kk, 0, axis=1),
-                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vv, 0, axis=1),
-            })
-            if self.window is not None and s > self.window:
+            new_cache = cache_write(cache, kk, vv, 0)
+            if use_kernel:
+                from repro.kernels import ops as kops
+
+                ks_, vs_ = cache_scales(cache)
+                o = kops.prefill_attention(
+                    q, kq, vq, ks_, vs_, jnp.int32(0),
+                    jnp.full((b,), s, jnp.int32), causal=True,
+                    window=self.window,
+                ).astype(x.dtype)
+            elif self.window is not None and s > self.window:
                 o = sliding_window_attention(q, k, v, window=self.window,
                                              q_chunk=self.q_chunk)
             else:
                 o = flash_attention(q, k, v, causal=self.causal,
-                                    q_chunk=self.q_chunk, kv_chunk=self.kv_chunk,
+                                    q_chunk=self.q_chunk,
+                                    kv_chunk=self.kv_chunk,
                                     window=self.window)
         o = o.reshape(b, s, self.n_heads * self.head_dim)
         return self.wo(params["wo"], o, ctx), new_cache
@@ -480,9 +579,13 @@ class Attention(Module):
         q, k = self._rope(q, k, pos, pos)
         cache_len = cache["k"].shape[1]
         quantized = "k_scale" in cache
-        if quantized:
-            k = quantize_kv(k, cache["k_scale"])
-            v = quantize_kv(v, cache["v_scale"])
+        # same quantize-on-append helper as prefill: the new token's K/V
+        # become cache-ready tiles once, then a single slot write
+        k, v = quantize_for_cache(cache, k, v)
+        ring = self.window is not None and cache_len == self.window
+        idx = cur_pos % cache_len if ring else cur_pos
+        upd = cache_write(cache, k, v, idx)
+        k_cache, v_cache = upd["k"], upd["v"]
 
         def dequant(k_cache, v_cache):
             if not quantized:
@@ -490,11 +593,8 @@ class Attention(Module):
             return (dequantize_kv(k_cache, cache["k_scale"]),
                     dequantize_kv(v_cache, cache["v_scale"]))
 
-        if self.window is not None and cache_len == self.window:
+        if ring:
             # ring buffer: absolute decode against rotated positions
-            idx = cur_pos % cache_len
-            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, 1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, 1)
             k_eff, v_eff = dequant(k_cache, v_cache)
             # absolute position of ring slot i given cur_pos
             slot = jnp.arange(cache_len)
@@ -510,8 +610,6 @@ class Attention(Module):
             p = jax.nn.softmax(sc, axis=-1)
             o = _gqa_out(p, v_eff.astype(jnp.float32)).astype(x.dtype)
         else:
-            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cur_pos, 1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cur_pos, 1)
             use_kernel = (
                 quantized
                 and self.window is None
@@ -530,7 +628,4 @@ class Attention(Module):
                 o = decode_attention(q, k_eff, v_eff, cur_pos + 1,
                                      window=self.window)
         o = o.reshape(b, s, self.n_heads * self.head_dim)
-        new_cache = dict(cache)
-        new_cache["k"] = k_cache
-        new_cache["v"] = v_cache
-        return self.wo(params["wo"], o, ctx), new_cache
+        return self.wo(params["wo"], o, ctx), upd

@@ -103,6 +103,21 @@ class CausalLM(Module):
         logits = self.readout_fn(params, ctx)(h[:, -1:, :])
         return logits, cache
 
+    def prefill_chunk(self, params, tokens, cache, q_offset, ctx=None, *,
+                      lengths=None, kv_limit=None):
+        """One fixed-size chunk of a chunked prefill: tokens (B, chunk) at
+        absolute positions ``q_offset + arange(chunk)``; K/V append into
+        the dense cache at the same slots.  ``kv_limit`` (static) bounds
+        the cache extent attention reads — the padded prompt length, so
+        per-chunk work scales with the prompt, not max_len.  Returns the
+        chunk's final hidden states (B, chunk, d) — the caller gathers
+        each request's last valid position and applies the readout once
+        (see launch/steps.py::make_prefill_step)."""
+        x = self.embed_inputs(params, {"tokens": tokens}, ctx)
+        return self.stack.prefill(params["stack"], x, cache, ctx,
+                                  q_offset=q_offset, lengths=lengths,
+                                  kv_limit=kv_limit)
+
     def decode_step(self, params, tokens, cache, cur_pos, ctx=None):
         """tokens: (B, 1) -> (logits (B, 1, V), new cache)."""
         x = self.embed(params["embed"], tokens)

@@ -145,12 +145,19 @@ class Block(Module):
             c["cross"] = self.cross_attn.init_cache(batch, max_len, dtype)
         return c
 
-    def prefill(self, params, x, cache, ctx=None, *, memory=None):
+    def prefill(self, params, x, cache, ctx=None, *, memory=None,
+                q_offset=0, lengths=None, kv_limit=None):
+        """``q_offset``/``lengths``/``kv_limit`` thread chunked ragged
+        prefill down to attention (SSM state folding is offset-free: it
+        continues from the carried cache state, so chunking composes;
+        raggedness is an attention-mask concept guarded at the step
+        level)."""
         h = self.pre_norm(params["pre_norm"], x)
         new_cache = dict(cache)
         if self.kind == "hybrid":
-            a, new_cache["attn"] = self.attn.prefill(params["attn"], h,
-                                                     cache["attn"], ctx)
+            a, new_cache["attn"] = self.attn.prefill(
+                params["attn"], h, cache["attn"], ctx,
+                q_offset=q_offset, lengths=lengths, kv_limit=kv_limit)
             m = self.mamba(params["mamba"], h, ctx)
             # rebuild mamba decode state from the full prefill (rerun tail):
             new_cache["mamba"] = self._mamba_state_from_prefill(params, h,
@@ -163,8 +170,9 @@ class Block(Module):
             new_cache["mamba"] = self._mamba_state_from_prefill(params, h,
                                                                 cache, ctx)
         else:
-            mix, new_cache["attn"] = self.attn.prefill(params["attn"], h,
-                                                       cache["attn"], ctx)
+            mix, new_cache["attn"] = self.attn.prefill(
+                params["attn"], h, cache["attn"], ctx,
+                q_offset=q_offset, lengths=lengths, kv_limit=kv_limit)
         x = x + mix
         if self.cross:
             h = self.cross_norm(params["cross_norm"], x)
@@ -459,7 +467,8 @@ class Stack(Module):
             for i, b in enumerate(blocks)
         }
 
-    def prefill(self, params, x, cache, ctx=None, *, memory=None):
+    def prefill(self, params, x, cache, ctx=None, *, memory=None,
+                q_offset=0, lengths=None, kv_limit=None):
         if self.scanned and self.serve_homogeneous:
             from repro.core.api import QuantCtx
 
@@ -470,7 +479,10 @@ class Stack(Module):
             def body(x, xs):
                 lp, lc, lq = xs
                 lctx = QuantCtx(mode, policy, lq) if ctx is not None else None
-                return self.template.prefill(lp, x, lc, lctx, memory=memory)
+                return self.template.prefill(lp, x, lc, lctx, memory=memory,
+                                             q_offset=q_offset,
+                                             lengths=lengths,
+                                             kv_limit=kv_limit)
 
             x, new_cache = jax.lax.scan(body, x, (params["layers"], cache, qs))
             return self.final_norm(params["final_norm"], x), new_cache
@@ -479,12 +491,15 @@ class Stack(Module):
             for i, blk in enumerate(self._serve_blocks()):
                 lp, lctx = self._layer_view(params, ctx, i)
                 x, new_cache[f"layer{i}"] = blk.prefill(
-                    lp, x, cache[f"layer{i}"], lctx, memory=memory)
+                    lp, x, cache[f"layer{i}"], lctx, memory=memory,
+                    q_offset=q_offset, lengths=lengths, kv_limit=kv_limit)
             return self.final_norm(params["final_norm"], x), new_cache
         new_cache = {}
         for i, blk in enumerate(self.blocks):
             x, new_cache[f"layer{i}"] = blk.prefill(
-                params[f"layer{i}"], x, cache[f"layer{i}"], ctx, memory=memory
+                params[f"layer{i}"], x, cache[f"layer{i}"], ctx,
+                memory=memory, q_offset=q_offset, lengths=lengths,
+                kv_limit=kv_limit,
             )
         return self.final_norm(params["final_norm"], x), new_cache
 
