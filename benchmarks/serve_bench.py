@@ -8,6 +8,9 @@ configurations of the two-kernel engine:
   * prefill: chunked-jnp flash vs fused Pallas flash-prefill
     (quantize-once int8 attention) vs chunked ragged pipeline
   * decode driver: per-token Python loop vs single lax.scan
+  * ragged traffic: mixed-length requests streaming through the
+    slot-based continuous-batching scheduler (tokens/s under streaming
+    admission — the multi-user serving number)
 
 and writes ``BENCH_serve.json`` so the perf trajectory is tracked across
 PRs.  The headline numbers are prefill ms / tokens-per-s per config plus
@@ -18,7 +21,7 @@ interpret lowering, so they track correctness and grid overhead, not the
 2x byte reduction).
 
 Run: PYTHONPATH=src python -m benchmarks.serve_bench [--quick] [--gen 32]
-     [--prompt-len 512] [--prefill-chunk 128]
+     [--prompt-len 512] [--prefill-chunk 128] [--max-slots 4]
 """
 from __future__ import annotations
 
@@ -48,24 +51,40 @@ def _bench(fn, *args, iters=2):
     return (time.perf_counter() - t0) / iters
 
 
-def bench_config(model, cfg, params, batch, *, requests, prompt_len, gen,
-                 int8_weights, kv_int8, calib_batches, prefill_chunk=None):
+def prepared_params(model, cfg, params, calib_batches, *, int8_weights,
+                    kv_int8, memo=None):
+    """(serve_params, qparams) for a weight/KV config, memoized so the
+    ragged-traffic scenario reuses the grid's calibration + conversion
+    instead of paying a second end-to-end prepare pass."""
     from repro.launch.serve import prepare_int8
 
+    key = (bool(int8_weights), bool(kv_int8))
+    if memo is not None and key in memo:
+        return memo[key]
     policy = A.QuantPolicy(kv_int8=kv_int8)
-    mode = "int8" if int8_weights else "none"
     if int8_weights or kv_int8:
         # same deployment pipeline the serving CLI runs — the bench must
         # measure the served configuration, not a reimplementation of it
-        serve_params, qparams = prepare_int8(model, cfg, policy, params,
-                                             calib_batches,
-                                             convert=int8_weights)
+        out = prepare_int8(model, cfg, policy, params, calib_batches,
+                           convert=int8_weights)
     else:
         # pure-bf16 baseline consumes no thresholds; skip the calibration
         # forward passes
-        serve_params = params
-        qparams = A.finalize_calibration(
-            A.init_qparams(model, params, policy), policy)
+        out = (params, A.finalize_calibration(
+            A.init_qparams(model, params, policy), policy))
+    if memo is not None:
+        memo[key] = out
+    return out
+
+
+def bench_config(model, cfg, params, batch, *, requests, prompt_len, gen,
+                 int8_weights, kv_int8, calib_batches, prefill_chunk=None,
+                 memo=None):
+    policy = A.QuantPolicy(kv_int8=kv_int8)
+    mode = "int8" if int8_weights else "none"
+    serve_params, qparams = prepared_params(
+        model, cfg, params, calib_batches, int8_weights=int8_weights,
+        kv_int8=kv_int8, memo=memo)
 
     prefill = jax.jit(ST.make_prefill_step(model, cfg, policy, mode=mode))
     step = jax.jit(ST.make_serve_step(model, cfg, policy, mode=mode))
@@ -128,6 +147,49 @@ def bench_config(model, cfg, params, batch, *, requests, prompt_len, gen,
     }
 
 
+def bench_ragged_traffic(model, cfg, params, calib_batches, *, requests,
+                         max_slots, prompt_len, gen, prefill_chunk,
+                         block_steps=8, memo=None):
+    """Continuous-batching throughput: ``requests`` mixed-length requests
+    stream through ``max_slots`` slots (launch/scheduler.py).  The first
+    run compiles the three scheduler executables; the timed run is
+    steady-state.  Records generated tokens/s — the multi-user serving
+    headline — plus the executable counts (must be 1 each: raggedness is
+    data, not shape)."""
+    from repro.launch.scheduler import SlotScheduler
+    from repro.launch.serve import ragged_requests
+
+    policy = A.QuantPolicy(kv_int8=True)
+    serve_params, qparams = prepared_params(
+        model, cfg, params, calib_batches, int8_weights=True, kv_int8=True,
+        memo=memo)
+    sched = SlotScheduler(
+        model, cfg, policy, serve_params, qparams, mode="int8",
+        max_slots=max_slots, prompt_cap=prompt_len, gen_cap=gen,
+        prefill_chunk=prefill_chunk, block_steps=block_steps)
+    shape = ShapeSpec("bench", "train", prompt_len, requests)
+    spec = DP.spec_for(cfg, shape)
+    reqs = ragged_requests(spec, requests, prompt_len, gen)
+    sched.run(list(reqs))          # compile + warm the executables
+    t0 = time.perf_counter()
+    completions = sched.run(list(reqs))
+    wall = time.perf_counter() - t0
+    n_new = sum(len(c.tokens) for c in completions)
+    n_prompt = sum(c.prompt_len for c in completions)
+    counts = sched.executable_counts()
+    return {
+        "requests": requests,
+        "max_slots": max_slots,
+        "block_steps": block_steps,
+        "prompt_lens": sorted({c.prompt_len for c in completions}),
+        "generated_tokens": n_new,
+        "wall_ms": wall * 1e3,
+        "gen_tokens_per_s": n_new / wall,
+        "total_tokens_per_s": (n_new + n_prompt) / wall,
+        "executables": counts,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -138,6 +200,9 @@ def main():
                     help="only the production config (int8 w + int8 kv)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="also time the chunked ragged prefill pipeline")
+    ap.add_argument("--max-slots", type=int, default=None,
+                    help="slots for the ragged-traffic scenario "
+                         "(default: requests // 2, min 2)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
@@ -169,12 +234,13 @@ def main():
         "backend": jax.default_backend(),
         "configs": {},
     }
+    memo = {}   # (int8_weights, kv_int8) -> prepared (serve_params, qparams)
     for name, int8_w, kv8 in grid:
         r = bench_config(
             model, cfg, params, batch, requests=args.requests,
             prompt_len=args.prompt_len, gen=args.gen,
             int8_weights=int8_w, kv_int8=kv8, calib_batches=calib_batches,
-            prefill_chunk=args.prefill_chunk,
+            prefill_chunk=args.prefill_chunk, memo=memo,
         )
         report["configs"][name] = r
         fused = (f" | fused {r['prefill_fused_ms']:.1f} ms"
@@ -200,6 +266,21 @@ def main():
         ratio = ref["prefill_ms"] / fus["prefill_fused_ms"]
         report["fused_int8_prefill_speedup_vs_bf16_jnp"] = ratio
         print(f"fused int8 prefill vs bf16 jnp prefill: {ratio:.2f}x")
+
+    # continuous batching: stream 2x the slot count of mixed-length
+    # requests through the scheduler (the multi-user serving scenario)
+    slots = args.max_slots or max(2, args.requests // 2)
+    rt = bench_ragged_traffic(
+        model, cfg, params, calib_batches, requests=max(args.requests,
+                                                        2 * slots),
+        max_slots=slots, prompt_len=args.prompt_len, gen=args.gen,
+        prefill_chunk=args.prefill_chunk,
+        block_steps=min(8, max(2, args.gen // 2)), memo=memo)
+    report["ragged_traffic"] = rt
+    print(f"ragged traffic: {rt['requests']} reqs / {rt['max_slots']} slots "
+          f"| lens {rt['prompt_lens']} | {rt['generated_tokens']} tokens in "
+          f"{rt['wall_ms']:.1f} ms ({rt['gen_tokens_per_s']:.0f} gen tok/s) "
+          f"| executables {rt['executables']}")
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)

@@ -1,11 +1,13 @@
 """Serve a FAT-quantized model with batched requests (int8 weights).
 
 Wraps repro.launch.serve: calibrates, converts to int8, then runs batched
-prefill + greedy decode, comparing int8 against the bf16 baseline, and
-finally demonstrates the chunked ragged prefill pipeline with sampled
-decoding.
+prefill + greedy decode, comparing int8 against the bf16 baseline,
+demonstrates the chunked ragged prefill pipeline with sampled decoding,
+and finishes with the continuous-batching scheduler: a ragged request
+queue streaming through a fixed set of cache slots.
 
-Useful serve flags (see repro/launch/serve.py for the full list):
+Useful serve flags (see repro/launch/serve.py and the README flag
+reference for the full list):
   --prefill-chunk N   chunked ragged prefill: one lax.scan over fixed-size
                       prompt chunks + a per-request length vector, so one
                       compiled executable serves any prompt length
@@ -13,6 +15,11 @@ Useful serve flags (see repro/launch/serve.py for the full list):
                       sampling to the nucleus of probability mass P
   --pallas            fused Pallas kernels: flash-prefill AND flash-decode
                       attend directly over the int8 KV cache tiles
+  --max-slots N       continuous batching (launch/scheduler.py): requests
+                      are admitted into free cache slots as they drain,
+                      every slot decodes at its own position, and ONE
+                      compiled decode executable serves the whole ragged
+                      run (--block-steps / --eos-id tune the scheduler)
 
 Run: PYTHONPATH=src python examples/serve_int8.py
 """
@@ -37,6 +44,16 @@ def main():
                 "--requests", "4", "--prompt-len", "32", "--gen", "8",
                 "--prefill-chunk", "8", "--temperature", "0.8",
                 "--top-p", "0.9"]
+    serve.main()
+
+    # continuous batching: 6 ragged requests stream through 2 cache slots
+    # (admission runs the chunked prefill into whichever slot freed up);
+    # the printed executable counts must all be 1 — no retrace, however
+    # the queue happens to drain
+    sys.argv = ["serve", "--arch", "smollm-135m", "--smoke",
+                "--requests", "6", "--prompt-len", "32", "--gen", "8",
+                "--max-slots", "2", "--prefill-chunk", "8",
+                "--block-steps", "4"]
     serve.main()
 
 

@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Docs lane: fail on broken intra-repo links and on serve.py CLI flags
+missing from the README flag reference.  Pure stdlib (CI runs it before
+any heavy deps install).
+
+Checks
+------
+1. Every relative markdown link target in README.md and docs/**.md
+   resolves to a file or directory in the repo (anchors stripped;
+   http(s)/mailto links skipped).
+2. Every ``--flag`` registered by ``add_argument`` in
+   src/repro/launch/serve.py appears verbatim in README.md — the README
+   is the flag reference of record, so a new flag without docs fails CI.
+
+Run: python scripts/check_docs.py   (from anywhere; paths resolve
+relative to the repo root, which is this script's parent directory).
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images is unnecessary: image targets must
+# resolve too.  Inline code spans are stripped first so `a[i](x)` bits in
+# code don't parse as links.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_SPAN = re.compile(r"`[^`]*`")
+
+
+def md_files():
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("**/*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in md_files():
+        text = _CODE_SPAN.sub("", md.read_text())
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(
+                    f"{md.relative_to(REPO)}: broken link -> {target}")
+    return errors
+
+
+def serve_flags() -> list[str]:
+    """All --flags registered in serve.py, via the ast (no jax import)."""
+    tree = ast.parse((REPO / "src/repro/launch/serve.py").read_text())
+    flags = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument"):
+            for arg in node.args:
+                if (isinstance(arg, ast.Constant)
+                        and isinstance(arg.value, str)
+                        and arg.value.startswith("--")):
+                    flags.append(arg.value)
+    return flags
+
+
+def check_flag_reference() -> list[str]:
+    readme = (REPO / "README.md").read_text()
+    missing = [f for f in serve_flags() if f not in readme]
+    return [f"README.md: serve.py flag {f} missing from the flag reference"
+            for f in missing]
+
+
+def main() -> int:
+    errors = check_links() + check_flag_reference()
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if errors:
+        return 1
+    n_flags = len(serve_flags())
+    print(f"check_docs OK: {len(md_files())} markdown files, "
+          f"{n_flags} serve.py flags documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

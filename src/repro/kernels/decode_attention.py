@@ -12,16 +12,41 @@ pass:
     acc = acc * exp(m_old - m_new) + softmax_tile @ v_tile
     out = acc * v_scale / l                           (epilogue)
 
-Grid is (B, KV-heads, S/bs) with the sequence dimension innermost
-("arbitrary") so the (G, D) accumulator tile lives in VMEM scratch across
-sequence steps — the partial-max/partial-sum combine of flash-decode.
-Per-head dequant scales fold into q (keys) and the epilogue (values), so
-dequantization costs one scalar multiply per tile element, on the VPU,
-overlapping the MXU contraction.
+Grid layout
+-----------
+``(B, KV-heads, S/block_s)`` with the sequence dimension innermost and
+declared "arbitrary" (B and head axes are "parallel"): sequential
+execution along the KV axis is what lets the (G, D) accumulator tile live
+in VMEM scratch across sequence steps — the partial-max/partial-sum
+combine of flash-decode.  Per-head dequant scales fold into q (keys) and
+the epilogue (values), so dequantization costs one scalar multiply per
+tile element, on the VPU, overlapping the MXU contraction.
 
-``cur_pos`` masks the unwritten cache tail; a bf16 cache runs through the
-same kernel with scales == 1.  The pure-jnp oracle is
-kernels/ref.py::decode_attention_ref.
+VMEM scratch expectations
+-------------------------
+Three scratch buffers persist across the innermost grid axis: the (G, D)
+f32 output accumulator plus (G, 1) running max and normalizer.  They are
+(re)initialized at ``si == 0`` and flushed to the output ref at
+``si == n_s - 1`` — correctness relies on the innermost axis running
+in-order on one core, which the "arbitrary" dimension semantics
+guarantee.  Budget: one (1, block_s, 1, D) int8 K tile + V tile are
+resident per step alongside the scratch; block_s is chosen so a whole
+tile fits comfortably (default 128 x D).
+
+Masking semantics
+-----------------
+``cur_pos`` is the number of valid cache slots per batch row — a scalar
+(uniform batch, the single-stream serving path) or a (B,) vector (the
+slot-based continuous-batching scheduler: each slot of the batch decodes
+at its own position).  Slots at ``k_pos >= cur_pos[b]`` are masked BEFORE
+the running-max update and re-masked after (an all-masked tile has
+s == m_new == NEG_INF and exp(0) == 1, which would corrupt l).  A row
+with ``cur_pos[b] == 0`` (inactive scheduler slot) masks every key and
+normalizes to exact zeros in the epilogue — inactive slots cost grid
+steps but produce well-defined output.
+
+A bf16 cache runs through the same kernel with scales == 1.  The
+pure-jnp oracle is kernels/ref.py::decode_attention_ref.
 """
 from __future__ import annotations
 
@@ -56,7 +81,8 @@ def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, o_ref,
         preferred_element_type=jnp.float32,
     )                                                # (G, bs)
 
-    # mask the unwritten tail (cache slots >= cur_pos)
+    # mask the unwritten tail (cache slots >= this row's cur_pos); pos_ref
+    # is blocked per batch row, so slot-ragged positions mask per slot
     k_pos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
     valid = k_pos < pos_ref[0, 0]
     s = jnp.where(valid, s, NEG_INF)
@@ -89,13 +115,19 @@ def decode_attention_int8(
     v_cache: jax.Array,  # (B, S, KV, D) int8 (or float with scales == 1)
     k_scale: jax.Array,  # (KV,) f32 per-head dequant scale
     v_scale: jax.Array,  # (KV,) f32 per-head dequant scale
-    cur_pos: jax.Array,  # scalar int32: number of valid cache slots
+    cur_pos: jax.Array,  # int32 valid-slot count: scalar or per-slot (B,)
     *,
     block_s: int = 128,
     out_dtype=jnp.float32,
     interpret: bool = False,
 ):
-    """Fused one-token decode attention over a (possibly int8) KV cache."""
+    """Fused one-token decode attention over a (possibly int8) KV cache.
+
+    ``cur_pos`` broadcasts to a per-batch-row (B,) valid-slot vector (the
+    prefill kernel's per-request ``kv_len`` pattern): a scalar serves the
+    uniform single-stream path, a vector serves slot-ragged continuous
+    batching, where a 0 entry marks an inactive slot (output zeros).
+    """
     b, kvh, g, d = q.shape
     s = k_cache.shape[1]
     # prefer a sublane-aligned tile that divides S exactly: a pad here
@@ -124,7 +156,7 @@ def decode_attention_int8(
             pl.BlockSpec((1, bs, 1, d), lambda bi, h, si: (bi, si, h, 0)),
             pl.BlockSpec((1, 1), lambda bi, h, si: (h, 0)),
             pl.BlockSpec((1, 1), lambda bi, h, si: (h, 0)),
-            pl.BlockSpec((1, 1), lambda bi, h, si: (0, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, si: (bi, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, h, si: (bi, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), out_dtype),
@@ -138,7 +170,10 @@ def decode_attention_int8(
         v_cache,
         k_scale.reshape(kvh, 1).astype(jnp.float32),
         v_scale.reshape(kvh, 1).astype(jnp.float32),
-        jnp.reshape(cur_pos, (1, 1)).astype(jnp.int32),
+        # per-batch-row valid-slot count (prefill's kv_len pattern): a
+        # scalar broadcasts to all rows, a (B,) vector is slot-ragged
+        jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32).reshape(-1),
+                         (b,)).reshape(b, 1),
     )
 
 

@@ -14,19 +14,39 @@ cache stores — no bf16 re-materialization between "attend" and "append".
     acc = acc * exp(m_old - m_new) + softmax_tile @ v_tile
     out = acc * v_scale / l                             (epilogue)
 
-Grid is (B, KV-heads, Q-chunks, KV-chunks) with the KV axis innermost
-("arbitrary") so the (block_q * G, D) accumulator tile lives in VMEM
-scratch across KV steps — classic flash-attention online softmax, GQA
-groups flattened into the query-row axis so every tile is a plain 2D
-matmul.
+Grid layout
+-----------
+``(B, KV-heads, Q-chunks, KV-chunks)`` with the KV axis innermost and
+declared "arbitrary" (the three outer axes are "parallel"): in-order
+execution along KV is what lets the (block_q * G, D) accumulator tile
+live in VMEM scratch across KV steps — classic flash-attention online
+softmax.  GQA groups are flattened into the query-row axis so every
+kernel tile is a plain 2D matmul operand.
 
-Masking is positional and block-skipped: causal and sliding-window
-predicates are evaluated per TILE first and a fully-masked tile skips its
-matmuls entirely via ``pl.when`` — a sliding-window layer therefore costs
-O(S * window) compute, not O(S^2).  ``q_start`` (scalar: chunk offset of
-query row 0) and ``kv_len`` (per-request valid KV count) make the same
-executable serve chunked, ragged prefill: padded/garbage rows normalize
-to zeros exactly like the decode kernel's empty-cache case.
+VMEM scratch expectations
+-------------------------
+Three scratch buffers persist across the innermost (KV) axis: the
+(block_q * G, D) f32 output accumulator plus (block_q * G, 1) running max
+and normalizer.  They are (re)initialized at ``ki == 0`` and flushed at
+``ki == n_k - 1``, so correctness relies on the KV axis running in-order
+on one core (the "arbitrary" dimension contract).  Per step the resident
+set adds one (block_k, D) int8 K tile and V tile; the default 256-row
+blocks keep q-tile + scratch + K/V tiles within VMEM at head dims <= 256.
+
+Masking semantics
+-----------------
+Positional and block-skipped: causal and sliding-window predicates are
+evaluated per TILE first and a fully-masked tile skips its matmuls
+entirely via ``pl.when`` — a sliding-window layer therefore costs
+O(S * window) compute, not O(S^2).  (Skipped tiles are still DMA'd; see
+the ROADMAP "prefill DMA skip" item.)  ``q_start`` (scalar: chunk offset
+of query row 0) and ``kv_len`` (per-request valid KV count) make the same
+executable serve chunked, ragged prefill: element masks re-apply after
+the running-max update (an all-masked tile has s == m_new == NEG_INF and
+exp(0) == 1), and padded/garbage rows end with l == 0, normalizing to
+exact zeros like the decode kernel's empty-cache case.  The decode
+kernel's per-slot ``cur_pos`` vector and the slot scheduler's inactive
+slots (kv_len == 0) reuse this same convention.
 
 A bf16/f32 K/V stream runs through the same kernel with scales == 1.
 The pure-jnp oracle is kernels/ref.py::prefill_attention_ref.

@@ -22,19 +22,23 @@ def decode_attention_ref(q, k_cache, v_cache, k_scale, v_scale, cur_pos,
     masked softmax over valid positions, GQA-grouped output.
 
     q: (B, KV, G, D); k/v_cache: (B, S, KV, D) int8 (or float);
-    k/v_scale: (KV,) dequant scales; cur_pos: valid cache length.
-    cur_pos == 0 (empty cache) returns zeros, matching the kernel.
+    k/v_scale: (KV,) dequant scales; cur_pos: valid cache length — a
+    scalar (uniform batch) or a (B,) per-slot vector (continuous
+    batching).  A row with cur_pos == 0 (empty cache / inactive slot)
+    returns zeros, matching the kernel.
     """
+    b = q.shape[0]
     d = q.shape[-1]
     kf = k_cache.astype(jnp.float32) * k_scale.reshape(1, 1, -1, 1)
     vf = v_cache.astype(jnp.float32) * v_scale.reshape(1, 1, -1, 1)
     qf = q.astype(jnp.float32) / jnp.sqrt(jnp.asarray(d, jnp.float32))
     s = jnp.einsum("bkgd,bskd->bkgs", qf, kf)
-    mask = jnp.arange(k_cache.shape[1]) < cur_pos
-    s = jnp.where(mask[None, None, None, :], s, -1e30)
+    pos = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32).reshape(-1), (b,))
+    mask = jnp.arange(k_cache.shape[1])[None, :] < pos[:, None]  # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
-    return (out * (jnp.asarray(cur_pos) > 0)).astype(out_dtype)
+    return (out * (pos > 0)[:, None, None, None]).astype(out_dtype)
 
 
 def prefill_attention_ref(q, k, v, k_scale, v_scale, q_start, kv_len, *,

@@ -1,0 +1,304 @@
+"""Slot-based continuous-batching scheduler over the int8 serving engine.
+
+The paper's frozen static thresholds (§2) are what make this possible:
+K/V dequant scales never change at serve time, so a request can be
+admitted into — or evicted from — a shared int8 KV cache without any
+recalibration.  The cache is one fixed-shape (max_slots, cache_len) int8
+region per layer; requests stream through slots while the COMPILED
+executables never change:
+
+  * admission runs the batch-1 chunked ragged prefill (one executable for
+    every prompt length: tokens pad to ``prompt_cap``, the length vector
+    does the ragged masking) and splices the resulting cache region into
+    the free slot with one dynamic-update-slice along the batch axis;
+  * decode runs ``steps.make_slot_decode_loop`` blocks: every slot at its
+    own position (vector ``cur_pos`` through the fused decode kernel),
+    inactive slots masked in attention, sampling, and cache writes;
+  * eviction is pure bookkeeping — a finished slot's region is dead data
+    that the next admission's prefill overwrites (slots [0, prompt) and
+    per-step decode writes cover every position a future mask can see).
+
+Slot lifecycle (see docs/serving.md for the full diagram)::
+
+    FREE --admit(prefill into slot region)--> ACTIVE
+    ACTIVE --EOS token / gen budget / cache full--> DRAINED
+    DRAINED --collect output--> FREE
+
+Which slots are live, at which positions, with which arrival order is
+DATA (pos/active vectors), never SHAPE — so one compiled decode
+executable serves every admission pattern (verified by the
+jit-cache-miss-counting test in tests/test_scheduler.py).
+
+The host loop (``SlotScheduler.run``) interleaves admission and decode
+blocks: admit into every free slot, decode ``block_steps`` tokens, retire
+finished slots, repeat until the queue drains.  Raggedness across
+requests costs masked lanes within a block, not recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api as A
+from repro.launch import steps as ST
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: prompt tokens + a generation budget."""
+    rid: int
+    tokens: np.ndarray          # (prompt_len,) int32
+    max_gen: int = 16           # generated-token budget (incl. first token)
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: list                # generated tokens (includes EOS if hit)
+    finished_by: str            # 'eos' | 'budget' | 'capacity'
+
+
+def _slot_cache_insert(cache, slot_cache, slot):
+    """Splice a batch-1 cache pytree into slot ``slot`` of the batch cache.
+
+    KV leaves are (..., B, S, KV, D) — batch axis at ndim-4 in both the
+    per-layer and the stacked-scanned layout — and get a dynamic-update-
+    slice along it.  Lower-rank leaves (per-head dequant scales) are
+    request-independent (frozen calibration), identical for every
+    admission: take the slot cache's copy wholesale, which also fixes up
+    the ones-initialized scales of a never-admitted batch cache.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def write(big, small):
+        if big.ndim < 4:
+            return small
+        return jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, big.ndim - 4)
+
+    return jax.tree.map(write, cache, slot_cache)
+
+
+class SlotScheduler:
+    """Continuous batching: admit/evict requests through a fixed slot batch.
+
+    Parameters
+    ----------
+    model, cfg, policy, mode : the serving stack (same objects serve.py
+        builds); attention-only text configs with dense caches only — the
+        same restriction as chunked prefill, checked at construction.
+    serve_params, qparams : converted weights + finalized thresholds.
+    max_slots : decode batch size (concurrent requests).
+    prompt_cap : maximum prompt length; every prompt pads to this, the
+        length vector masks the tail (one prefill executable).  Rounded up
+        to a ``prefill_chunk`` multiple.
+    gen_cap : per-slot generation headroom reserved in the cache.
+    prefill_chunk : chunk size of the admission prefill scan; None picks
+        ``max(8, min(16, prompt_cap))`` — the single home of that default
+        (serve.py and serve_bench.py both inherit it, so the benchmark
+        measures the executable the CLI serves).
+    block_steps : decode-block length; admission happens at block
+        boundaries, so smaller blocks = lower admission latency, larger
+        blocks = fewer dispatches.
+    temperature, top_p, seed : sampling (greedy when temperature == 0).
+    eos_id : generation stops for a slot when it emits this token
+        (< 0 disables).
+    """
+
+    def __init__(self, model, cfg, policy: A.QuantPolicy, serve_params,
+                 qparams, *, mode: str = "int8", max_slots: int = 4,
+                 prompt_cap: int = 64, gen_cap: int = 32,
+                 prefill_chunk: int | None = None, block_steps: int = 8,
+                 temperature: float = 0.0, top_p: float = 1.0,
+                 eos_id: int = -1, seed: int = 0):
+        kinds = {cfg.layer_kind(i) for i in range(cfg.n_layers)}
+        wins = {cfg.attn_window(i) for i in range(cfg.n_layers)}
+        if kinds - {"attn", "attn_local"} or cfg.modality != "text":
+            raise ValueError(
+                "slot scheduler covers attention-only text stacks "
+                f"(got kinds={sorted(kinds)}, modality={cfg.modality})")
+        if wins != {None}:
+            raise ValueError(
+                "slot scheduler needs dense caches: SWA ring buffers drop "
+                f"absolute slots (got windows={sorted(map(str, wins))})")
+        self.model, self.cfg = model, cfg
+        self.policy, self.mode = policy, mode
+        self.serve_params, self.qparams = serve_params, qparams
+        self.max_slots = max_slots
+        if prefill_chunk is None:
+            prefill_chunk = max(8, min(16, prompt_cap))
+        self.prefill_chunk = prefill_chunk
+        self.prompt_cap = -(-prompt_cap // prefill_chunk) * prefill_chunk
+        self.block_steps = block_steps
+        self.temperature, self.top_p = temperature, top_p
+        self.eos_id = eos_id
+        cache_len = self.prompt_cap + gen_cap
+        if policy.use_pallas:
+            # tile the cache length for the fused decode kernel — a
+            # non-tiling length pad-copies the cache every step
+            cache_len = -(-cache_len // 128) * 128
+        self.cache_len = cache_len
+        self._key = jax.random.PRNGKey(seed)
+
+        kv_int8 = bool(policy.kv_int8)
+        self._kv_int8 = kv_int8
+        # batch-1 slot cache template for admissions (prefill never
+        # donates it, so one allocation serves every admission)
+        self._slot_cache0 = model.init_cache(1, cache_len, cfg.dtype,
+                                             kv_int8=kv_int8)
+        # trace counting: the counter bumps inside the to-be-jitted Python
+        # body, which only runs when the jit cache misses — so the count
+        # IS the number of compiled variants, measured on public jit
+        # behavior (and per instance: each wrapper is a fresh closure)
+        self._trace_counts = {"prefill": 0, "decode": 0, "insert": 0}
+
+        def counted(name, fn):
+            def wrapper(*args):
+                self._trace_counts[name] += 1
+                return fn(*args)
+            return wrapper
+
+        self._prefill = jax.jit(counted("prefill", ST.make_prefill_step(
+            model, cfg, policy, mode=mode, prefill_chunk=prefill_chunk)))
+        self._decode = jax.jit(counted("decode", ST.make_slot_decode_loop(
+            model, cfg, policy, mode=mode, n_steps=block_steps,
+            temperature=temperature, top_p=top_p, eos_id=eos_id)),
+            donate_argnums=(3,))
+        self._insert = jax.jit(counted("insert", _slot_cache_insert),
+                               donate_argnums=(0,))
+
+    # -- observability ----------------------------------------------------
+    def executable_counts(self) -> dict:
+        """Number of times each of the three pieces was TRACED (== number
+        of compiled variants) — the no-retrace contract says each stays
+        at 1 across every admission pattern."""
+        return dict(self._trace_counts)
+
+    # -- one serving session ----------------------------------------------
+    def run(self, requests: Iterable[Request],
+            max_blocks: Optional[int] = None) -> list[Completion]:
+        """Serve ``requests`` to completion through the slot batch.
+
+        Admission is streaming: requests queue up and enter whenever a
+        slot frees, so the number of concurrent residents never exceeds
+        ``max_slots`` while raggedness (arrival time, prompt length,
+        budget) stays data.  Returns completions in finish order.
+        ``max_blocks`` bounds the decode blocks (None = drain fully).
+        """
+        queue = deque(requests)
+        B = self.max_slots
+        pos = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        last_tok = np.zeros((B,), np.int32)
+        slot_req: list[Optional[Request]] = [None] * B
+        slot_out: list[list] = [[] for _ in range(B)]
+        cache = self.model.init_cache(B, self.cache_len, self.cfg.dtype,
+                                      kv_int8=self._kv_int8)
+        done: list[Completion] = []
+        n_blocks = 0
+
+        def retire(slot: int, why: str):
+            req = slot_req[slot]
+            done.append(Completion(req.rid, len(req.tokens),
+                                   slot_out[slot], why))
+            slot_req[slot] = None
+            slot_out[slot] = []
+            active[slot] = False
+
+        while queue or active.any():
+            # -- admission: fill every free slot from the queue ------------
+            for slot in range(B):
+                if slot_req[slot] is not None or not queue:
+                    continue
+                req = queue.popleft()
+                cache, t0 = self._admit(cache, slot, req)
+                slot_req[slot] = req
+                slot_out[slot] = [int(t0)]
+                pos[slot] = len(req.tokens)
+                last_tok[slot] = int(t0)
+                active[slot] = True
+                if self.eos_id >= 0 and int(t0) == self.eos_id:
+                    retire(slot, "eos")
+                elif req.max_gen <= 1:
+                    retire(slot, "budget")
+            if not active.any():
+                continue
+
+            # -- one decode block over the slot batch ----------------------
+            toks, emitted, cache, pos_d, active_d, self._key = self._decode(
+                self.serve_params, self.qparams, jnp.asarray(last_tok),
+                cache, jnp.asarray(pos), jnp.asarray(active), self._key)
+            toks = np.asarray(toks)
+            emitted = np.asarray(emitted)
+            pos_new = np.asarray(pos_d)
+            active_new = np.asarray(active_d)
+
+            # -- collect emissions, retire finished slots ------------------
+            for slot in range(B):
+                req = slot_req[slot]
+                if req is None or not active[slot]:
+                    continue
+                for i in range(self.block_steps):
+                    if not emitted[slot, i]:
+                        break
+                    if len(slot_out[slot]) >= req.max_gen:
+                        break
+                    slot_out[slot].append(int(toks[slot, i]))
+                pos[slot] = pos_new[slot]
+                last_tok[slot] = (slot_out[slot][-1]
+                                  if slot_out[slot] else last_tok[slot])
+                # finish reason from what was actually COLLECTED: an EOS
+                # beyond the budget cut was never part of the output, so
+                # that request finished by budget, not eos — and a
+                # device-side freeze without a collected EOS and with
+                # budget to spare can only be the capacity guard
+                hit_eos = (self.eos_id >= 0 and bool(slot_out[slot])
+                           and slot_out[slot][-1] == self.eos_id)
+                budget_done = len(slot_out[slot]) >= req.max_gen
+                if hit_eos:
+                    retire(slot, "eos")
+                elif budget_done:
+                    retire(slot, "budget")
+                elif not active_new[slot]:
+                    retire(slot, "capacity")
+                else:
+                    active[slot] = active_new[slot]
+            n_blocks += 1
+            if max_blocks is not None and n_blocks >= max_blocks:
+                break
+        return done
+
+    # -- admission ---------------------------------------------------------
+    def _admit(self, cache, slot: int, req: Request):
+        """Chunked-prefill the prompt into a batch-1 cache, splice it into
+        ``slot``'s region, and return (cache, first generated token)."""
+        L = int(len(req.tokens))
+        if L > self.prompt_cap:
+            raise ValueError(
+                f"request {req.rid}: prompt length {L} exceeds prompt_cap "
+                f"{self.prompt_cap}")
+        if L < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_gen < 1:
+            # admission always yields the prefill's first token, so a
+            # 0-token budget cannot be honored
+            raise ValueError(
+                f"request {req.rid}: max_gen must be >= 1 (the first "
+                "token is sampled at admission)")
+        toks = np.zeros((1, self.prompt_cap), np.int32)
+        toks[0, :L] = np.asarray(req.tokens, np.int32)
+        lengths = jnp.asarray([L], jnp.int32)
+        logits, slot_cache = self._prefill(
+            self.serve_params, self.qparams, {"tokens": jnp.asarray(toks)},
+            self._slot_cache0, lengths)
+        self._key, sub = jax.random.split(self._key)
+        t0 = ST.sample_tokens(logits[:, -1, :], sub,
+                              temperature=self.temperature, top_p=self.top_p)
+        cache = self._insert(cache, slot_cache, jnp.asarray(slot, jnp.int32))
+        return cache, int(t0[0])

@@ -23,6 +23,13 @@ vector, so a single compiled executable serves any prompt length up to
 the pad (no per-shape retrace).  ``--temperature`` / ``--top-p`` turn on
 sampled decoding (greedy by default).
 
+``--max-slots N`` switches the whole run to CONTINUOUS BATCHING
+(launch/scheduler.py): the batch becomes N slots over one fixed-shape
+int8 cache, requests stream in from a queue with ragged prompt lengths,
+each admission runs the chunked prefill into a free slot's cache region,
+and decode blocks advance every live slot at its own position — one
+compiled decode executable for every admission pattern.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
       --requests 4 --prompt-len 32 --gen 16
@@ -31,10 +38,13 @@ Usage:
          --pallas (fused kernels; defaults on for TPU backends)
          --prefill-chunk N (chunked ragged prefill)
          --temperature T --top-p P --seed S (sampled decoding)
+         --max-slots N (continuous-batching scheduler)
+         --block-steps N --eos-id T (scheduler decode-block / EOS knobs)
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -65,6 +75,60 @@ def prepare_int8(model, cfg, policy, params, calib_batches, *,
     return serve_params, qparams
 
 
+def ragged_requests(spec, n_requests, prompt_len, gen, *, seed=12345):
+    """Build a ragged request queue from the data pipeline: request r's
+    prompt keeps between half and all of ``prompt_len`` tokens (a
+    deterministic mixed-length arrival pattern)."""
+    from repro.launch.scheduler import Request
+
+    batch = DP.make_batch(
+        dataclasses.replace(spec, global_batch=n_requests), seed)
+    toks = jax.device_get(batch["tokens"])[:, :prompt_len]
+    reqs = []
+    for r in range(n_requests):
+        frac = (r % 4) / 6.0               # lengths cycle 1, 5/6, 2/3, 1/2
+        length = max(1, prompt_len - int(frac * prompt_len))
+        reqs.append(Request(rid=r, tokens=toks[r, :length].astype("int32"),
+                            max_gen=gen))
+    return reqs
+
+
+def run_continuous(args, model, cfg, policy, serve_params, qparams, mode):
+    """--max-slots path: stream --requests ragged requests through the
+    slot scheduler and report aggregate throughput."""
+    from repro.launch.scheduler import SlotScheduler
+
+    sched = SlotScheduler(
+        model, cfg, policy, serve_params, qparams, mode=mode,
+        max_slots=args.max_slots, prompt_cap=args.prompt_len,
+        gen_cap=args.gen, prefill_chunk=args.prefill_chunk,
+        block_steps=args.block_steps, temperature=args.temperature,
+        top_p=args.top_p, eos_id=args.eos_id, seed=args.seed)
+
+    shape = ShapeSpec("cli", "train", args.prompt_len, args.requests)
+    spec = DP.spec_for(cfg, shape)
+    reqs = ragged_requests(spec, args.requests, args.prompt_len, args.gen)
+    t0 = time.time()
+    completions = sched.run(reqs)
+    wall = time.time() - t0
+    n_new = sum(len(c.tokens) for c in completions)
+    n_prompt = sum(c.prompt_len for c in completions)
+    print(f"[serve] continuous batching: {len(completions)} requests "
+          f"through {args.max_slots} slots (block={args.block_steps}) | "
+          f"prompt lens {sorted({c.prompt_len for c in completions})} | "
+          f"{n_new} tokens in {wall*1e3:.1f} ms "
+          f"({n_new/max(wall,1e-9):.0f} gen tok/s, "
+          f"{(n_new+n_prompt)/max(wall,1e-9):.0f} total tok/s)")
+    counts = sched.executable_counts()
+    print(f"[serve] executables: prefill={counts['prefill']} "
+          f"decode={counts['decode']} insert={counts['insert']} "
+          "(1 each == no retrace across the whole ragged run)")
+    for c in completions[:2]:
+        print(f"  req{c.rid}: prompt_len={c.prompt_len} "
+              f"finished_by={c.finished_by} -> {c.tokens}")
+    return completions
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -92,6 +156,16 @@ def main():
                     help="nucleus sampling mass (with --temperature > 0)")
     ap.add_argument("--seed", type=int, default=0,
                     help="PRNG seed for sampled decoding")
+    ap.add_argument("--max-slots", type=int, default=None,
+                    help="continuous batching: serve --requests ragged "
+                         "requests through N cache slots with streaming "
+                         "admission (launch/scheduler.py)")
+    ap.add_argument("--block-steps", type=int, default=8,
+                    help="scheduler decode-block length (admission happens "
+                         "at block boundaries)")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="EOS token id for the scheduler (< 0 disables; a "
+                         "slot stops generating when it emits this)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -121,6 +195,10 @@ def main():
             n_int8 = sum(1 for l in jax.tree.leaves(serve_params)
                          if l.dtype == jnp.int8)
             print(f"[serve] converted: {n_int8} int8 weight tensors resident")
+
+    if args.max_slots:
+        return run_continuous(args, model, cfg, policy, serve_params,
+                              qparams, mode)
 
     # cache (arg 3) is donated: the decode carry reuses the input buffer
     # instead of keeping two copies of the (possibly huge) cache resident

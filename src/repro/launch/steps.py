@@ -16,6 +16,21 @@
   * serve_step / decode_loop — one-token decode and the scanned
                        whole-generation loop; ``temperature``/``top_p``
                        sample from the carried PRNG key (greedy default).
+  * slot_decode_loop — the continuous-batching decode block: per-slot
+                       position/active vectors in the scan carry, EOS
+                       freezing one slot mid-scan without touching the
+                       rest, fixed (max_slots, cache_len, n_steps) shapes
+                       so one executable serves every admission pattern
+                       (driven by launch/scheduler.py).
+
+Masking semantics shared by the serving steps: a request's raggedness is
+always DATA (length vectors, per-slot positions, active masks), never
+SHAPE — that is what keeps each step a single compiled executable.  A
+masked row (padded prompt tail, inactive slot) attends over zero keys and
+produces exact-zero attention output; cache writes for masked rows are
+bit-exact no-ops.  VMEM expectations live with the kernels
+(repro.kernels.prefill_attention / decode_attention): the steps only
+pick grid-friendly shapes (chunk multiples, 128-tiled cache lengths).
 """
 from __future__ import annotations
 
@@ -274,10 +289,12 @@ def sample_tokens(logits, key, *, temperature: float = 1.0,
 
 
 def make_serve_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8"):
-    def serve_step(serve_params, qparams, tokens, cache, cur_pos):
+    def serve_step(serve_params, qparams, tokens, cache, cur_pos,
+                   slot_mask=None):
         ctx = _serve_ctx(mode, policy, qparams)
         logits, new_cache = model.decode_step(serve_params, tokens, cache,
-                                              cur_pos, ctx)
+                                              cur_pos, ctx,
+                                              slot_mask=slot_mask)
         # greedy next token; make_decode_loop overrides with sample_tokens
         # when a temperature is set
         next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
@@ -332,3 +349,87 @@ def make_decode_loop(model, cfg, policy: A.QuantPolicy, mode: str = "int8",
         return toks, cache
 
     return decode_loop
+
+
+def make_slot_decode_loop(model, cfg, policy: A.QuantPolicy,
+                          mode: str = "int8", n_steps: int = 8,
+                          temperature: float = 0.0, top_p: float = 1.0,
+                          eos_id: int = -1):
+    """One continuous-batching decode BLOCK: ``n_steps`` scanned steps over
+    a slot batch where every slot sits at its own position.
+
+    The single-stream loop above carries a scalar position; here the carry
+    is per-slot — (token (B,), cache, pos (B,), active (B,) bool, key) —
+    and each step:
+
+      * decodes all slots at their own positions (vector ``cur_pos``
+        through the decode kernel), with inactive slots masked in
+        attention (zero visible keys) and in the cache write (bit-exact
+        no-op append), so an all-slots-inactive step changes nothing;
+      * samples/argmaxes the next token for every slot, then freezes any
+        slot that emitted ``eos_id`` — EOS mid-scan stops THAT slot only
+        (its position stops advancing, its emissions mask off) while the
+        rest of the batch keeps decoding;
+      * deactivates slots whose position reached the cache capacity
+        before they could clamp-write over the last valid entry.
+
+    Returns ``(toks (B, n_steps), emitted (B, n_steps) bool, cache,
+    pos, active, key)``: ``emitted[b, i]`` marks real tokens (the EOS
+    itself is emitted; everything after is padding).  The scheduler
+    (launch/scheduler.py) runs this block between admission rounds; all
+    shapes are fixed by (max_slots, cache_len, n_steps), so ONE compiled
+    executable serves every admission pattern — which slots are live,
+    at which positions, is data, not shape.
+
+    ``eos_id < 0`` disables EOS detection (fixed-budget generation).
+    Callers should jit with ``donate_argnums=(3,)`` like the
+    single-stream loop.
+    """
+    kinds = {cfg.layer_kind(i) for i in range(cfg.n_layers)}
+    if kinds - {"attn", "attn_local"} or cfg.modality != "text":
+        # same guard as chunked prefill: SSM decode advances its state for
+        # every batch row — a frozen slot's state would silently drift
+        raise ValueError(
+            "slot decode covers attention-only text stacks: SSM state "
+            "stepping has no per-slot freeze yet "
+            f"(got kinds={sorted(kinds)}, modality={cfg.modality})")
+
+    step = make_serve_step(model, cfg, policy, mode=mode)
+    sampled = temperature > 0.0
+
+    def slot_decode_loop(serve_params, qparams, tok0, cache, pos0, active0,
+                         key=None):
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        cache_len = _attn_cache_len(cache)
+
+        def body(carry, _):
+            tok, cache, pos, active, key = carry
+            # capacity guard BEFORE the write: a slot at pos == cache_len
+            # has nowhere to append — freeze it instead of clamping over
+            # the last valid entry
+            if cache_len is not None:
+                active = active & (pos < cache_len)
+            nxt, logits, cache = step(serve_params, qparams, tok[:, None],
+                                      cache, pos, active)
+            if sampled:
+                key, sub = jax.random.split(key)
+                nxt = sample_tokens(logits[:, -1, :], sub,
+                                    temperature=temperature, top_p=top_p)
+            nxt = jnp.where(active, nxt, tok)      # frozen slots hold
+            emitted = active
+            if eos_id >= 0:
+                # the EOS token itself is emitted; the slot freezes after
+                active = active & (nxt != eos_id)
+            pos = jnp.where(emitted, pos + 1, pos)
+            return (nxt, cache, pos, active, key), (nxt, emitted)
+
+        pos0 = jnp.asarray(pos0, jnp.int32)
+        active0 = jnp.asarray(active0, bool)
+        carry0 = (jnp.asarray(tok0, jnp.int32), cache, pos0, active0, key)
+        (tok, cache, pos, active, key), (toks, emitted) = jax.lax.scan(
+            body, carry0, None, length=n_steps)
+        return (jnp.moveaxis(toks, 0, 1), jnp.moveaxis(emitted, 0, 1),
+                cache, pos, active, key)
+
+    return slot_decode_loop

@@ -19,7 +19,10 @@ once against the frozen calibrated thresholds and the SAME int8 tiles are
 appended to the cache and attended), decode through
 kernels/decode_attention.py.  ``quantize_for_cache``/``cache_write`` are
 the single quantize-on-append point shared by the dense cache and the SWA
-ring buffer across both phases.
+ring buffer across both phases; ``cache_write_slots`` is the per-slot
+decode append of the continuous-batching scheduler, where ``decode``
+takes a (B,) position vector + active mask instead of one scalar
+position (launch/scheduler.py, docs/serving.md).
 
 All paths share GQA head grouping: Hq = KV * G, computed as einsum over a
 (B, S, KV, G, D) view so no materialized head replication occurs.
@@ -77,6 +80,38 @@ def cache_write(cache, kq, vq, start):
     new = dict(cache)
     new["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, start, 1)
     new["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, start, 1)
+    return new
+
+
+def cache_write_slots(cache, kq, vq, starts, active=None):
+    """Per-slot decode append: batch row b writes its one-token K/V tile at
+    sequence index ``starts[b]`` (the continuous-batching write, where each
+    slot of the batch sits at its own position).
+
+    kq/vq: (B, 1, KV, D) cache-ready tiles; starts: (B,) int32.  ``active``
+    (B,) bool masks the write per slot: an inactive slot reads back the
+    tile currently at its (clamped) write index and writes it unchanged,
+    so a step over inactive slots is bit-exact cache-neutral — no
+    requantization drift, and an all-slots-inactive scheduler step is a
+    true no-op.  Out-of-range starts clamp (XLA dynamic-slice semantics);
+    the slot decode loop deactivates capacity-full slots before they
+    could clamp while active.
+    """
+    starts = jnp.asarray(starts, jnp.int32)
+
+    def write_one(c, u, st):          # c: (S, KV, D), u: (1, KV, D)
+        return jax.lax.dynamic_update_slice_in_dim(c, u, st, 0)
+
+    if active is not None:
+        def read_one(c, st):
+            return jax.lax.dynamic_slice_in_dim(c, st, 1, 0)
+
+        sel = active[:, None, None, None]
+        kq = jnp.where(sel, kq, jax.vmap(read_one)(cache["k"], starts))
+        vq = jnp.where(sel, vq, jax.vmap(read_one)(cache["v"], starts))
+    new = dict(cache)
+    new["k"] = jax.vmap(write_one)(cache["k"], kq, starts)
+    new["v"] = jax.vmap(write_one)(cache["v"], vq, starts)
     return new
 
 
@@ -252,21 +287,29 @@ def sliding_window_attention(q, k, v, *, window: int, q_chunk: int = 512,
 def decode_attention(q, k_cache, v_cache, cur_pos, *, window: int | None = None):
     """One-step decode: q (B,1,KV,G,D) against cache (B,Smax,KV,D).
 
-    ``cur_pos`` is the number of valid cache entries (scalar).  Positions
-    beyond it (and outside the sliding window, if any) are masked.  With a
-    sequence-sharded cache, GSPMD lowers the masked softmax into partial
-    reductions + a tiny cross-shard combine (flash-decode).
+    ``cur_pos`` is the number of valid cache entries — a scalar (uniform
+    batch) or a (B,) per-slot vector (continuous batching: each slot of
+    the batch decodes at its own position; a 0 entry means no visible key
+    and returns exact zeros, matching the fused kernel's inactive-slot
+    convention).  Positions beyond it (and outside the sliding window, if
+    any) are masked.  With a sequence-sharded cache, GSPMD lowers the
+    masked softmax into partial reductions + a tiny cross-shard combine
+    (flash-decode).
     """
     b, _, kvh, g, d = q.shape
     smax = k_cache.shape[1]
     scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
     s = _gqa_scores(q.astype(jnp.float32) * scale, k_cache.astype(jnp.float32))
+    pos = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32).reshape(-1), (b,))
     k_pos = jnp.arange(smax)
-    mask = k_pos < cur_pos
+    mask = k_pos[None, :] < pos[:, None]                       # (B, Smax)
     if window is not None:
-        mask &= k_pos >= (cur_pos - window)
-    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+        mask &= k_pos[None, :] >= (pos[:, None] - window)
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
+    # rows with no visible key (pos == 0) softmax uniformly over NEG_INF
+    # scores — zero them so inactive slots are well-defined
+    p = p * (pos > 0)[:, None, None, None, None]
     return _gqa_out(p, v_cache.astype(jnp.float32)).astype(q.dtype)
 
 
@@ -555,8 +598,17 @@ class Attention(Module):
         o = o.reshape(b, s, self.n_heads * self.head_dim)
         return self.wo(params["wo"], o, ctx), new_cache
 
-    def decode(self, params, x, cache, cur_pos, ctx=None, *, memory=None):
-        """Single-token decode. x: (B,1,d); cur_pos: tokens already cached.
+    def decode(self, params, x, cache, cur_pos, ctx=None, *, memory=None,
+               slot_mask=None):
+        """Single-token decode. x: (B,1,d); cur_pos: tokens already cached
+        — a scalar (uniform batch, the single-stream path) or a (B,)
+        per-slot vector (continuous batching: each batch slot decodes at
+        its own position, writes its K/V at its own cache index, and masks
+        its own valid prefix).  ``slot_mask`` (B,) bool marks active slots
+        when a scheduler drives the batch: inactive slots write nothing
+        (bit-exact cache-neutral) and attend over zero keys (output rows
+        zero).  The per-slot path needs a dense cache — SWA ring buffers
+        keep the scalar contract.
 
         For SWA layers the cache is a ring buffer of size ``window``; the
         write index wraps and masking uses absolute positions.
@@ -575,16 +627,31 @@ class Attention(Module):
                                  cache["k"].shape[1])
             o = o.reshape(b, s, self.n_heads * self.head_dim)
             return self.wo(params["wo"], o, ctx), cache
-        pos = jnp.full((s,), 0) + cur_pos
-        q, k = self._rope(q, k, pos, pos)
+        per_slot = jnp.ndim(cur_pos) > 0 or slot_mask is not None
         cache_len = cache["k"].shape[1]
         quantized = "k_scale" in cache
-        # same quantize-on-append helper as prefill: the new token's K/V
-        # become cache-ready tiles once, then a single slot write
-        k, v = quantize_for_cache(cache, k, v)
         ring = self.window is not None and cache_len == self.window
-        idx = cur_pos % cache_len if ring else cur_pos
-        upd = cache_write(cache, k, v, idx)
+        if per_slot and ring:
+            raise ValueError(
+                f"{self.path}: per-slot decode (vector cur_pos / slot_mask) "
+                "needs a dense cache; the SWA ring buffer drops absolute "
+                "slots — size the cache >= max_len or decode with a scalar "
+                "position")
+        if per_slot:
+            pos_vec = jnp.broadcast_to(
+                jnp.asarray(cur_pos, jnp.int32).reshape(-1), (b,))
+            # per-slot rotary: positions (B, 1) batch the angle tables
+            q, k = self._rope(q, k, pos_vec[:, None], pos_vec[:, None])
+            k, v = quantize_for_cache(cache, k, v)
+            upd = cache_write_slots(cache, k, v, pos_vec, active=slot_mask)
+        else:
+            pos = jnp.full((s,), 0) + cur_pos
+            q, k = self._rope(q, k, pos, pos)
+            # same quantize-on-append helper as prefill: the new token's
+            # K/V become cache-ready tiles once, then a single slot write
+            k, v = quantize_for_cache(cache, k, v)
+            idx = cur_pos % cache_len if ring else cur_pos
+            upd = cache_write(cache, k, v, idx)
         k_cache, v_cache = upd["k"], upd["v"]
 
         def dequant(k_cache, v_cache):
@@ -610,6 +677,14 @@ class Attention(Module):
             p = jax.nn.softmax(sc, axis=-1)
             o = _gqa_out(p, v_eff.astype(jnp.float32)).astype(x.dtype)
         else:
+            if per_slot:
+                # valid-prefix length per slot; an inactive slot attends
+                # over zero keys -> exact-zero output rows
+                valid = pos_vec + 1
+                if slot_mask is not None:
+                    valid = jnp.where(slot_mask, valid, 0)
+            else:
+                valid = cur_pos + 1
             use_kernel = (
                 quantized
                 and self.window is None
@@ -621,11 +696,11 @@ class Attention(Module):
 
                 o = kops.decode_attention(
                     q[:, 0], k_cache, v_cache,
-                    cache["k_scale"], cache["v_scale"], cur_pos + 1,
+                    cache["k_scale"], cache["v_scale"], valid,
                 )[:, None].astype(x.dtype)
             else:
                 k_eff, v_eff = dequant(k_cache, v_cache)
-                o = decode_attention(q, k_eff, v_eff, cur_pos + 1,
+                o = decode_attention(q, k_eff, v_eff, valid,
                                      window=self.window)
         o = o.reshape(b, s, self.n_heads * self.head_dim)
         return self.wo(params["wo"], o, ctx), upd

@@ -118,10 +118,17 @@ class CausalLM(Module):
                                   q_offset=q_offset, lengths=lengths,
                                   kv_limit=kv_limit)
 
-    def decode_step(self, params, tokens, cache, cur_pos, ctx=None):
-        """tokens: (B, 1) -> (logits (B, 1, V), new cache)."""
+    def decode_step(self, params, tokens, cache, cur_pos, ctx=None, *,
+                    slot_mask=None):
+        """tokens: (B, 1) -> (logits (B, 1, V), new cache).
+
+        ``cur_pos`` may be a per-slot (B,) position vector and
+        ``slot_mask`` a (B,) active mask — the continuous-batching decode
+        contract (see launch/scheduler.py); scalar cur_pos keeps the
+        single-stream behavior."""
         x = self.embed(params["embed"], tokens)
-        h, cache = self.stack.decode(params["stack"], x, cache, cur_pos, ctx)
+        h, cache = self.stack.decode(params["stack"], x, cache, cur_pos, ctx,
+                                     slot_mask=slot_mask)
         return self.readout_fn(params, ctx)(h), cache
 
     # -- quantization plans ---------------------------------------------------
@@ -219,10 +226,11 @@ class EncDecLM(Module):
                                         memory=memory)
         return self.readout_fn(params, ctx)(h[:, -1:, :]), cache
 
-    def decode_step(self, params, tokens, cache, cur_pos, ctx=None):
+    def decode_step(self, params, tokens, cache, cur_pos, ctx=None, *,
+                    slot_mask=None):
         x = self.embed(params["embed"], tokens)
         h, cache = self.decoder.decode(params["decoder"], x, cache, cur_pos,
-                                       ctx)
+                                       ctx, slot_mask=slot_mask)
         return self.readout_fn(params, ctx)(h), cache
 
     def fold_plan(self):

@@ -228,12 +228,18 @@ class Block(Module):
         )
         return {"ssm": state, "conv": conv_state}
 
-    def decode(self, params, x, cache, cur_pos, ctx=None, *, memory=None):
+    def decode(self, params, x, cache, cur_pos, ctx=None, *, memory=None,
+               slot_mask=None):
+        """``cur_pos`` may be a per-slot (B,) vector and ``slot_mask`` a
+        (B,) active mask (continuous batching) — both thread down to
+        attention; SSM decode has no per-request position concept, so the
+        scheduler guards attention-only stacks at construction."""
         h = self.pre_norm(params["pre_norm"], x)
         new_cache = dict(cache)
         if self.kind == "hybrid":
             a, new_cache["attn"] = self.attn.decode(params["attn"], h,
-                                                    cache["attn"], cur_pos, ctx)
+                                                    cache["attn"], cur_pos, ctx,
+                                                    slot_mask=slot_mask)
             m, new_cache["mamba"] = self.mamba.decode(params["mamba"], h,
                                                       cache["mamba"], ctx)
             a = self.attn_out_norm(params["attn_out_norm"], a)
@@ -244,7 +250,8 @@ class Block(Module):
                                                         cache["mamba"], ctx)
         else:
             mix, new_cache["attn"] = self.attn.decode(params["attn"], h,
-                                                      cache["attn"], cur_pos, ctx)
+                                                      cache["attn"], cur_pos, ctx,
+                                                      slot_mask=slot_mask)
         x = x + mix
         if self.cross:
             h = self.cross_norm(params["cross_norm"], x)
@@ -503,7 +510,8 @@ class Stack(Module):
             )
         return self.final_norm(params["final_norm"], x), new_cache
 
-    def decode(self, params, x, cache, cur_pos, ctx=None, *, memory=None):
+    def decode(self, params, x, cache, cur_pos, ctx=None, *, memory=None,
+               slot_mask=None):
         if self.scanned and self.serve_homogeneous:
             from repro.core.api import QuantCtx
 
@@ -515,7 +523,8 @@ class Stack(Module):
                 lp, lc, lq = xs
                 lctx = QuantCtx(mode, policy, lq) if ctx is not None else None
                 return self.template.decode(lp, x, lc, cur_pos, lctx,
-                                            memory=memory)
+                                            memory=memory,
+                                            slot_mask=slot_mask)
 
             x, new_cache = jax.lax.scan(body, x, (params["layers"], cache, qs))
             return self.final_norm(params["final_norm"], x), new_cache
@@ -524,12 +533,13 @@ class Stack(Module):
             for i, blk in enumerate(self._serve_blocks()):
                 lp, lctx = self._layer_view(params, ctx, i)
                 x, new_cache[f"layer{i}"] = blk.decode(
-                    lp, x, cache[f"layer{i}"], cur_pos, lctx, memory=memory)
+                    lp, x, cache[f"layer{i}"], cur_pos, lctx, memory=memory,
+                    slot_mask=slot_mask)
             return self.final_norm(params["final_norm"], x), new_cache
         new_cache = {}
         for i, blk in enumerate(self.blocks):
             x, new_cache[f"layer{i}"] = blk.decode(
                 params[f"layer{i}"], x, cache[f"layer{i}"], cur_pos, ctx,
-                memory=memory,
+                memory=memory, slot_mask=slot_mask,
             )
         return self.final_norm(params["final_norm"], x), new_cache

@@ -110,6 +110,46 @@ class TestDecodeAttentionKernel:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-5, atol=1e-5)
 
+    def test_matches_oracle_per_slot_positions(self):
+        """Vector cur_pos (continuous batching): every batch row masks its
+        own valid prefix, including a 0-entry inactive slot that must
+        return exact zeros."""
+        rng = np.random.default_rng(2)
+        b, s, kv, g, d = 4, 48, 3, 4, 16
+        q = jnp.asarray(rng.normal(size=(b, kv, g, d)), jnp.float32)
+        k = jnp.asarray(rng.integers(-127, 128, size=(b, s, kv, d)), jnp.int8)
+        v = jnp.asarray(rng.integers(-127, 128, size=(b, s, kv, d)), jnp.int8)
+        ks = jnp.asarray(np.abs(rng.normal(size=(kv,))) * 0.02 + 0.01,
+                         jnp.float32)
+        vs = jnp.asarray(np.abs(rng.normal(size=(kv,))) * 0.02 + 0.01,
+                         jnp.float32)
+        pos = jnp.asarray([48, 17, 0, 5], jnp.int32)
+        got = ops.decode_attention(q, k, v, ks, vs, pos, block_s=16)
+        want = kref.decode_attention_ref(q, k, v, ks, vs, pos)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        # the inactive slot (pos == 0) is exactly zero, not NaN/uniform
+        np.testing.assert_array_equal(np.asarray(got)[2], 0.0)
+
+    def test_vector_pos_rows_match_scalar_pos(self):
+        """Row b of a vector-pos call equals a scalar-pos call at that
+        row's position — per-slot masking is exact row-wise slicing."""
+        rng = np.random.default_rng(3)
+        b, s, kv, g, d = 3, 32, 2, 2, 8
+        q = jnp.asarray(rng.normal(size=(b, kv, g, d)), jnp.float32)
+        k = jnp.asarray(rng.integers(-127, 128, size=(b, s, kv, d)), jnp.int8)
+        v = jnp.asarray(rng.integers(-127, 128, size=(b, s, kv, d)), jnp.int8)
+        ones = jnp.ones((kv,), jnp.float32)
+        pos = [31, 8, 1]
+        got = ops.decode_attention(q, k, v, ones, ones,
+                                   jnp.asarray(pos, jnp.int32), block_s=8)
+        for r, p in enumerate(pos):
+            want = ops.decode_attention(q[r:r + 1], k[r:r + 1], v[r:r + 1],
+                                        ones, ones, jnp.int32(p), block_s=8)
+            np.testing.assert_allclose(np.asarray(got)[r],
+                                       np.asarray(want)[0],
+                                       rtol=1e-6, atol=1e-6)
+
     def test_bf16_cache_scales_of_one(self):
         """The same kernel serves an unquantized cache with unit scales."""
         rng = np.random.default_rng(1)

@@ -1,0 +1,27 @@
+"""The CI docs lane, runnable locally: intra-repo markdown links resolve
+and the README documents every serve.py CLI flag (scripts/check_docs.py
+is the single source of truth; this test just runs it)."""
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = Path(__file__).resolve().parent.parent / "scripts" / "check_docs.py"
+
+
+def test_docs_links_and_flag_reference():
+    proc = subprocess.run([sys.executable, str(SCRIPT)],
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr or proc.stdout
+
+
+def test_flag_extraction_sees_the_cli():
+    """The ast-based flag scan must actually find the serve CLI (guards
+    against a refactor silently emptying the docs check)."""
+    sys.path.insert(0, str(SCRIPT.parent))
+    try:
+        import check_docs
+    finally:
+        sys.path.pop(0)
+    flags = check_docs.serve_flags()
+    assert "--max-slots" in flags and "--prefill-chunk" in flags
+    assert len(flags) >= 10

@@ -1,0 +1,244 @@
+"""Continuous-batching scheduler: slot lifecycle, per-slot decode, and the
+no-retrace contract.
+
+The acceptance contract: ONE compiled decode executable serves every
+admission pattern (arrival times, prompt lengths, live-slot counts are
+data, not shape — verified by jit-cache-miss counting), and every request
+served through the slot batch generates exactly the tokens it would get
+from the single-stream pipeline (prefill + scanned decode at batch 1).
+
+EOS/no-op scan semantics are pinned against a deterministic stub model
+(next token == current + 1) so the edge cases don't depend on what a
+randomly initialized network happens to emit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import api as A
+from repro.launch import steps as ST
+from repro.launch.scheduler import Request, SlotScheduler
+from repro.models import build_model
+
+B, S, GEN = 2, 32, 6
+CHUNK = 8
+
+
+def _calibrated(arch="smollm-135m", kv_int8=True, **pol):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    policy = A.QuantPolicy(kv_int8=kv_int8, **pol)
+    qp = A.init_qparams(model, params, policy)
+    qp = ST.make_calibrate_step(model, cfg, policy)(params, qp,
+                                                    {"tokens": toks})
+    qp = A.finalize_calibration(qp, policy)
+    return cfg, model, params, qp, policy, toks
+
+
+def _single_stream_tokens(model, cfg, params, qp, policy, prompt,
+                          cache_len, n_gen):
+    """Reference: batch-1 chunked prefill + scanned greedy decode — the
+    tokens one request gets with the whole engine to itself."""
+    toks = np.zeros((1, -(-len(prompt) // CHUNK) * CHUNK), np.int32)
+    toks[0, :len(prompt)] = prompt
+    pre = jax.jit(ST.make_prefill_step(model, cfg, policy, mode="none",
+                                       prefill_chunk=CHUNK))
+    loop = jax.jit(ST.make_decode_loop(model, cfg, policy, mode="none",
+                                       n_steps=n_gen))
+    cache = model.init_cache(1, cache_len, cfg.dtype, kv_int8=True)
+    lg, cache = pre(params, qp, {"tokens": jnp.asarray(toks)}, cache,
+                    jnp.asarray([len(prompt)], jnp.int32))
+    tok0 = jnp.argmax(lg[:, -1, :], -1).astype(jnp.int32)
+    out, _ = loop(params, qp, tok0, cache, len(prompt))
+    return np.asarray(out)[0].tolist()
+
+
+def _scheduler(model, cfg, policy, params, qp, **kw):
+    kw.setdefault("mode", "none")
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("prompt_cap", S)
+    kw.setdefault("gen_cap", GEN + 2)
+    kw.setdefault("prefill_chunk", CHUNK)
+    kw.setdefault("block_steps", 3)
+    return SlotScheduler(model, cfg, policy, params, qp, **kw)
+
+
+class TestSchedulerParity:
+    def test_ragged_queue_matches_single_stream(self):
+        """Streaming admission through 2 slots == each request served
+        alone, token for token (incl. a request admitted into a slot a
+        longer request just vacated)."""
+        cfg, model, params, qp, policy, toks = _calibrated()
+        lengths = [32, 20, 9]
+        reqs = [Request(rid=r, tokens=np.asarray(toks[r % B, :n]),
+                        max_gen=GEN) for r, n in enumerate(lengths)]
+        sched = _scheduler(model, cfg, policy, params, qp)
+        done = {c.rid: c for c in sched.run(reqs)}
+        assert sorted(done) == [0, 1, 2]
+        for r, n in enumerate(lengths):
+            want = _single_stream_tokens(model, cfg, params, qp, policy,
+                                         np.asarray(toks[r % B, :n]),
+                                         sched.cache_len, GEN)
+            assert done[r].tokens == want, f"request {r} (len {n}) diverged"
+            assert done[r].finished_by == "budget"
+
+    def test_readmission_reuses_evicted_slot_region(self):
+        """max_slots=1: every request flows through slot 0; a short
+        request admitted after a longer one must not see the stale cache
+        tail the previous resident left behind."""
+        cfg, model, params, qp, policy, toks = _calibrated()
+        reqs = [Request(rid=0, tokens=np.asarray(toks[0, :S]), max_gen=GEN),
+                Request(rid=1, tokens=np.asarray(toks[1, :9]), max_gen=GEN)]
+        sched = _scheduler(model, cfg, policy, params, qp, max_slots=1)
+        done = {c.rid: c for c in sched.run(reqs)}
+        want = _single_stream_tokens(model, cfg, params, qp, policy,
+                                     np.asarray(toks[1, :9]),
+                                     sched.cache_len, GEN)
+        assert done[1].tokens == want
+
+    def test_budget_cut_before_eos_reports_budget(self):
+        """A device-side EOS freeze whose EOS lands BEYOND the budget cut
+        must report 'budget' (the EOS was never part of the output) and
+        must not leak the EOS token into the completion."""
+        cfg, model, params, qp, policy, toks = _calibrated()
+        sched = _scheduler(model, cfg, policy, params, qp)
+        want = _single_stream_tokens(model, cfg, params, qp, policy,
+                                     np.asarray(toks[0, :S]),
+                                     sched.cache_len, GEN)
+        budget = 3
+        eos = next((t for i, t in enumerate(want)
+                    if i >= budget and t not in want[:budget]), None)
+        if eos is None:
+            pytest.skip("greedy sequence has no token unique to the tail")
+        sched = _scheduler(model, cfg, policy, params, qp, eos_id=eos)
+        (c,) = sched.run([Request(rid=0, tokens=np.asarray(toks[0, :S]),
+                                  max_gen=budget)])
+        assert c.finished_by == "budget"
+        assert c.tokens == want[:budget]
+
+    def test_capacity_exhaustion_drains_slot(self):
+        """A slot whose position reaches the cache capacity freezes (no
+        clamp-write over the last valid entry) and retires as
+        'capacity'."""
+        cfg, model, params, qp, policy, toks = _calibrated()
+        sched = _scheduler(model, cfg, policy, params, qp, prompt_cap=16,
+                           gen_cap=4)
+        assert sched.cache_len == 20
+        reqs = [Request(rid=0, tokens=np.asarray(toks[0, :16]), max_gen=50)]
+        (c,) = sched.run(reqs)
+        # t0 from prefill + 4 decode appends at slots 16..19, then frozen
+        assert c.finished_by == "capacity"
+        assert len(c.tokens) == 5
+
+
+class TestGuards:
+    def test_zero_gen_budget_rejected(self):
+        """max_gen < 1 cannot be honored: admission always samples the
+        first token."""
+        cfg, model, params, qp, policy, toks = _calibrated()
+        sched = _scheduler(model, cfg, policy, params, qp)
+        with pytest.raises(ValueError, match="max_gen"):
+            sched.run([Request(rid=0, tokens=np.asarray(toks[0, :8]),
+                               max_gen=0)])
+
+    def test_ssm_stack_rejected_at_construction(self):
+        """Same contract as chunked prefill: SSM decode has no per-slot
+        freeze, so the slot loop refuses non-attention stacks up front
+        instead of silently drifting frozen slots' state."""
+        with pytest.raises(ValueError, match="attention-only"):
+            ST.make_slot_decode_loop(None, get_config("mamba2-780m",
+                                                      smoke=True),
+                                     A.QuantPolicy())
+
+
+class TestNoRetrace:
+    def test_one_decode_executable_across_admission_patterns(self):
+        """ISSUE acceptance: two different admission patterns (different
+        arrival order, prompt lengths, and live-slot counts) leave the
+        jit caches at size 1 — raggedness is data, never shape."""
+        cfg, model, params, qp, policy, toks = _calibrated()
+        sched = _scheduler(model, cfg, policy, params, qp)
+        pattern_a = [Request(rid=r, tokens=np.asarray(toks[r % B, :n]),
+                             max_gen=GEN)
+                     for r, n in enumerate([32, 20, 16])]
+        pattern_b = [Request(rid=r, tokens=np.asarray(toks[(r + 1) % B, :n]),
+                             max_gen=GEN - 2)
+                     for r, n in enumerate([9, 27])]
+        sched.run(pattern_a)
+        sched.run(pattern_b)
+        counts = sched.executable_counts()
+        assert counts == {"prefill": 1, "decode": 1, "insert": 1}, counts
+
+
+class TestSlotDecodeLoop:
+    def test_all_slots_inactive_is_noop(self):
+        """A decode block over an all-inactive batch emits nothing,
+        advances nothing, and leaves the cache bit-identical (inactive
+        slots re-write their existing tile)."""
+        cfg, model, params, qp, policy, toks = _calibrated()
+        pre = jax.jit(ST.make_prefill_step(model, cfg, policy, mode="none"))
+        loop = jax.jit(ST.make_slot_decode_loop(model, cfg, policy,
+                                                mode="none", n_steps=3))
+        cache = model.init_cache(B, S + GEN, cfg.dtype, kv_int8=True)
+        lg, cache = pre(params, qp, {"tokens": toks}, cache)
+        tok0 = jnp.argmax(lg[:, -1, :], -1).astype(jnp.int32)
+        pos0 = jnp.full((B,), S, jnp.int32)
+        out, emitted, cache2, pos, active, _ = loop(
+            params, qp, tok0, cache, pos0, jnp.zeros((B,), bool))
+        assert not np.asarray(emitted).any()
+        np.testing.assert_array_equal(np.asarray(pos), np.asarray(pos0))
+        assert not np.asarray(active).any()
+        for a, b in zip(jax.tree.leaves(cache2), jax.tree.leaves(cache)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class _StubModel:
+    """decode_step emits one-hot logits for (token + 1) % vocab and leaves
+    the cache untouched — a deterministic counter per slot, so EOS timing
+    is exact."""
+
+    def __init__(self, vocab):
+        self.vocab = vocab
+
+    def decode_step(self, params, tokens, cache, cur_pos, ctx=None, *,
+                    slot_mask=None):
+        nxt = (tokens[:, 0] + 1) % self.vocab
+        logits = jax.nn.one_hot(nxt, self.vocab)[:, None, :] * 10.0
+        return logits, cache
+
+
+class TestEosMidScan:
+    def _run(self, tok0, eos_id, n_steps=5, vocab=16):
+        model = _StubModel(vocab)
+        cfg = get_config("smollm-135m", smoke=True)
+        policy = A.QuantPolicy()
+        loop = ST.make_slot_decode_loop(model, cfg, policy, mode="none",
+                                        n_steps=n_steps, eos_id=eos_id)
+        cache = {"attn": {"k": jnp.zeros((2, 64, 1, 1))}}
+        return loop(None, {}, jnp.asarray(tok0, jnp.int32), cache,
+                    jnp.asarray([10, 10], jnp.int32),
+                    jnp.ones((2,), bool))
+
+    def test_eos_freezes_one_slot_only(self):
+        """Slot 0 counts 4,5,6(=EOS) and freezes; slot 1 keeps decoding
+        through the whole block."""
+        out, emitted, _, pos, active, _ = self._run([3, 7], eos_id=6)
+        out, emitted = np.asarray(out), np.asarray(emitted)
+        # slot 0: emits 4, 5, 6 then freezes (EOS itself is emitted)
+        assert out[0, :3].tolist() == [4, 5, 6]
+        assert emitted[0].tolist() == [True, True, True, False, False]
+        # slot 1: untouched by slot 0's EOS
+        assert out[1].tolist() == [8, 9, 10, 11, 12]
+        assert emitted[1].all()
+        # positions advance only while emitting
+        assert np.asarray(pos).tolist() == [13, 15]
+        assert np.asarray(active).tolist() == [False, True]
+
+    def test_negative_eos_disables_detection(self):
+        out, emitted, _, _, active, _ = self._run([3, 7], eos_id=-1)
+        assert np.asarray(emitted).all()
+        assert np.asarray(active).all()
