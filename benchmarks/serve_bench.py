@@ -11,6 +11,15 @@ configurations of the two-kernel engine:
   * ragged traffic: mixed-length requests streaming through the
     slot-based continuous-batching scheduler (tokens/s under streaming
     admission — the multi-user serving number)
+  * paged prefix reuse: repeated prompts through the PAGED cache layout —
+    admissions ride the prefix store's shared pages instead of running
+    prefill (the ``paged_prefix_reuse`` entry records hits and skipped
+    prefill calls; CI requires it)
+
+Each grid point is one ``Engine`` (launch/engine.py) — the same assembly
+the serving CLI runs, so the bench measures the served configuration,
+not a reimplementation of it.  The fine-grained pieces (loop-vs-scan,
+fused-vs-jnp prefill) are timed on the engine's own step functions.
 
 and writes ``BENCH_serve.json`` so the perf trajectory is tracked across
 PRs.  The headline numbers are prefill ms / tokens-per-s per config plus
@@ -22,6 +31,7 @@ interpret lowering, so they track correctness and grid overhead, not the
 
 Run: PYTHONPATH=src python -m benchmarks.serve_bench [--quick] [--gen 32]
      [--prompt-len 512] [--prefill-chunk 128] [--max-slots 4]
+     [--page-size 16]
 """
 from __future__ import annotations
 
@@ -35,10 +45,10 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.shapes import ShapeSpec
-from repro.core import api as A
 from repro.data import pipeline as DP
 from repro.launch import steps as ST
-from repro.models import build_model
+from repro.launch.engine import Engine
+from repro.launch.serve import ragged_requests
 
 
 def _bench(fn, *args, iters=2):
@@ -51,52 +61,37 @@ def _bench(fn, *args, iters=2):
     return (time.perf_counter() - t0) / iters
 
 
-def prepared_params(model, cfg, params, calib_batches, *, int8_weights,
-                    kv_int8, memo=None):
-    """(serve_params, qparams) for a weight/KV config, memoized so the
-    ragged-traffic scenario reuses the grid's calibration + conversion
-    instead of paying a second end-to-end prepare pass."""
-    from repro.launch.serve import prepare_int8
-
+def _engine(memo, arch, *, int8_weights, kv_int8, calib_batches,
+            **engine_kw):
+    """One Engine per (weights, kv) config, memoized so the ragged and
+    paged scenarios reuse the grid's calibration + conversion instead of
+    paying a second end-to-end prepare pass."""
     key = (bool(int8_weights), bool(kv_int8))
-    if memo is not None and key in memo:
-        return memo[key]
-    policy = A.QuantPolicy(kv_int8=kv_int8)
-    if int8_weights or kv_int8:
-        # same deployment pipeline the serving CLI runs — the bench must
-        # measure the served configuration, not a reimplementation of it
-        out = prepare_int8(model, cfg, policy, params, calib_batches,
-                           convert=int8_weights)
-    else:
-        # pure-bf16 baseline consumes no thresholds; skip the calibration
-        # forward passes
-        out = (params, A.finalize_calibration(
-            A.init_qparams(model, params, policy), policy))
-    if memo is not None:
-        memo[key] = out
-    return out
+    if key not in memo:
+        memo[key] = Engine.from_checkpoint(
+            arch, smoke=True, fp=not int8_weights, kv_int8=kv_int8,
+            use_pallas=False, calib_batches=calib_batches, **engine_kw)
+    return memo[key]
 
 
-def bench_config(model, cfg, params, batch, *, requests, prompt_len, gen,
-                 int8_weights, kv_int8, calib_batches, prefill_chunk=None,
-                 memo=None):
-    policy = A.QuantPolicy(kv_int8=kv_int8)
-    mode = "int8" if int8_weights else "none"
-    serve_params, qparams = prepared_params(
-        model, cfg, params, calib_batches, int8_weights=int8_weights,
-        kv_int8=kv_int8, memo=memo)
+def bench_config(engine: Engine, batch, *, requests, prompt_len, gen,
+                 prefill_chunk=None):
+    model, cfg, policy = engine.model, engine.cfg, engine.policy
+    mode = engine.mode
+    serve_params, qparams = engine.serve_params, engine.qparams
 
     prefill = jax.jit(ST.make_prefill_step(model, cfg, policy, mode=mode))
     step = jax.jit(ST.make_serve_step(model, cfg, policy, mode=mode))
     loop = jax.jit(ST.make_decode_loop(model, cfg, policy, mode=mode,
                                        n_steps=gen))
     max_len = prompt_len + gen
+    kv_int8 = bool(policy.kv_int8)
     cache0 = model.init_cache(requests, max_len, cfg.dtype, kv_int8=kv_int8)
 
     prefill_s = _bench(prefill, serve_params, qparams, batch, cache0)
     n_prompt = requests * prompt_len
     extra = {}
-    if int8_weights or kv_int8:
+    if mode == "int8" or kv_int8:
         # fused flash-prefill: quantize-once attention over the int8 (or
         # unit-scale bf16) KV tiles via the Pallas kernel
         pol_f = dataclasses.replace(policy, use_pallas=True)
@@ -147,36 +142,37 @@ def bench_config(model, cfg, params, batch, *, requests, prompt_len, gen,
     }
 
 
-def bench_ragged_traffic(model, cfg, params, calib_batches, *, requests,
-                         max_slots, prompt_len, gen, prefill_chunk,
-                         block_steps=8, memo=None):
+def _run_sched(engine, reqs, *, max_slots, prompt_len, gen, block_steps):
+    """Warm once, then time a steady-state scheduler run."""
+    engine.generate(list(reqs), max_slots=max_slots, prompt_cap=prompt_len,
+                    gen_cap=gen, block_steps=block_steps)
+    t0 = time.perf_counter()
+    completions = engine.generate(list(reqs), max_slots=max_slots,
+                                  prompt_cap=prompt_len, gen_cap=gen,
+                                  block_steps=block_steps)
+    wall = time.perf_counter() - t0
+    sched = engine.make_scheduler(max_slots=max_slots,
+                                  prompt_cap=prompt_len, gen_cap=gen,
+                                  block_steps=block_steps)
+    return completions, wall, sched
+
+
+def bench_ragged_traffic(engine: Engine, *, requests, max_slots, prompt_len,
+                         gen, block_steps=8):
     """Continuous-batching throughput: ``requests`` mixed-length requests
     stream through ``max_slots`` slots (launch/scheduler.py).  The first
     run compiles the three scheduler executables; the timed run is
     steady-state.  Records generated tokens/s — the multi-user serving
     headline — plus the executable counts (must be 1 each: raggedness is
     data, not shape)."""
-    from repro.launch.scheduler import SlotScheduler
-    from repro.launch.serve import ragged_requests
-
-    policy = A.QuantPolicy(kv_int8=True)
-    serve_params, qparams = prepared_params(
-        model, cfg, params, calib_batches, int8_weights=True, kv_int8=True,
-        memo=memo)
-    sched = SlotScheduler(
-        model, cfg, policy, serve_params, qparams, mode="int8",
-        max_slots=max_slots, prompt_cap=prompt_len, gen_cap=gen,
-        prefill_chunk=prefill_chunk, block_steps=block_steps)
     shape = ShapeSpec("bench", "train", prompt_len, requests)
-    spec = DP.spec_for(cfg, shape)
+    spec = DP.spec_for(engine.cfg, shape)
     reqs = ragged_requests(spec, requests, prompt_len, gen)
-    sched.run(list(reqs))          # compile + warm the executables
-    t0 = time.perf_counter()
-    completions = sched.run(list(reqs))
-    wall = time.perf_counter() - t0
+    completions, wall, sched = _run_sched(
+        engine, reqs, max_slots=max_slots, prompt_len=prompt_len, gen=gen,
+        block_steps=block_steps)
     n_new = sum(len(c.tokens) for c in completions)
     n_prompt = sum(c.prompt_len for c in completions)
-    counts = sched.executable_counts()
     return {
         "requests": requests,
         "max_slots": max_slots,
@@ -186,7 +182,40 @@ def bench_ragged_traffic(model, cfg, params, calib_batches, *, requests,
         "wall_ms": wall * 1e3,
         "gen_tokens_per_s": n_new / wall,
         "total_tokens_per_s": (n_new + n_prompt) / wall,
-        "executables": counts,
+        "executables": sched.executable_counts(),
+    }
+
+
+def bench_paged_prefix_reuse(engine: Engine, *, requests, max_slots,
+                             prompt_len, gen, block_steps=8):
+    """Prefix sharing under the paged layout: a queue where every request
+    carries the SAME prompt.  After the first admission registers the
+    prompt's pages, every later admission attaches them with zero prefill
+    FLOPs — ``prefill_calls_saved`` counts the skipped executions and
+    ``shared_tokens`` the prompt tokens served from shared pages."""
+    shape = ShapeSpec("bench", "train", prompt_len, requests)
+    spec = DP.spec_for(engine.cfg, shape)
+    base = ragged_requests(spec, 1, prompt_len, gen)[0]
+    reqs = [dataclasses.replace(base, rid=r) for r in range(requests)]
+    completions, wall, sched = _run_sched(
+        engine, reqs, max_slots=max_slots, prompt_len=prompt_len, gen=gen,
+        block_steps=block_steps)
+    n_new = sum(len(c.tokens) for c in completions)
+    stats = sched.prefix_stats()
+    calls = sched.call_counts()
+    admissions = 2 * requests          # warm run + timed run
+    return {
+        "requests": requests,
+        "max_slots": max_slots,
+        "page_size": sched.page_size,
+        "generated_tokens": n_new,
+        "wall_ms": wall * 1e3,
+        "gen_tokens_per_s": n_new / wall,
+        "prefill_calls": calls["prefill"],
+        "prefill_calls_saved": admissions - calls["prefill"],
+        "prefix_hits": stats["hits"],
+        "shared_tokens": stats["shared_tokens"],
+        "executables": sched.executable_counts(),
     }
 
 
@@ -203,12 +232,12 @@ def main():
     ap.add_argument("--max-slots", type=int, default=None,
                     help="slots for the ragged-traffic scenario "
                          "(default: requests // 2, min 2)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="page size for the paged prefix-reuse scenario")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
     shape = ShapeSpec("cli", "train", args.prompt_len, args.requests)
     spec = DP.spec_for(cfg, shape)
     calib_batches = DP.calibration_batches(spec, 2)
@@ -234,14 +263,13 @@ def main():
         "backend": jax.default_backend(),
         "configs": {},
     }
-    memo = {}   # (int8_weights, kv_int8) -> prepared (serve_params, qparams)
+    memo = {}   # (int8_weights, kv_int8) -> Engine
     for name, int8_w, kv8 in grid:
+        eng = _engine(memo, args.arch, int8_weights=int8_w, kv_int8=kv8,
+                      calib_batches=calib_batches)
         r = bench_config(
-            model, cfg, params, batch, requests=args.requests,
-            prompt_len=args.prompt_len, gen=args.gen,
-            int8_weights=int8_w, kv_int8=kv8, calib_batches=calib_batches,
-            prefill_chunk=args.prefill_chunk, memo=memo,
-        )
+            eng, batch, requests=args.requests, prompt_len=args.prompt_len,
+            gen=args.gen, prefill_chunk=args.prefill_chunk)
         report["configs"][name] = r
         fused = (f" | fused {r['prefill_fused_ms']:.1f} ms"
                  if "prefill_fused_ms" in r else "")
@@ -270,17 +298,35 @@ def main():
     # continuous batching: stream 2x the slot count of mixed-length
     # requests through the scheduler (the multi-user serving scenario)
     slots = args.max_slots or max(2, args.requests // 2)
+    n_reqs = max(args.requests, 2 * slots)
+    block = min(8, max(2, args.gen // 2))
+    eng = _engine(memo, args.arch, int8_weights=True, kv_int8=True,
+                  calib_batches=calib_batches)
+    eng.prefill_chunk = args.prefill_chunk
     rt = bench_ragged_traffic(
-        model, cfg, params, calib_batches, requests=max(args.requests,
-                                                        2 * slots),
-        max_slots=slots, prompt_len=args.prompt_len, gen=args.gen,
-        prefill_chunk=args.prefill_chunk,
-        block_steps=min(8, max(2, args.gen // 2)), memo=memo)
+        eng, requests=n_reqs, max_slots=slots, prompt_len=args.prompt_len,
+        gen=args.gen, block_steps=block)
     report["ragged_traffic"] = rt
     print(f"ragged traffic: {rt['requests']} reqs / {rt['max_slots']} slots "
           f"| lens {rt['prompt_lens']} | {rt['generated_tokens']} tokens in "
           f"{rt['wall_ms']:.1f} ms ({rt['gen_tokens_per_s']:.0f} gen tok/s) "
           f"| executables {rt['executables']}")
+
+    # paged prefix reuse: the SAME prompt repeated — a fresh paged engine
+    # (own scheduler/prefix store) sharing the memoized int8 preparation
+    paged = Engine(eng.model, eng.cfg, eng.policy, eng.serve_params,
+                   eng.qparams, mode=eng.mode, cache_layout="paged",
+                   page_size=args.page_size,
+                   prefill_chunk=args.prefill_chunk)
+    pr = bench_paged_prefix_reuse(
+        paged, requests=n_reqs, max_slots=slots,
+        prompt_len=args.prompt_len, gen=args.gen, block_steps=block)
+    report["paged_prefix_reuse"] = pr
+    print(f"paged prefix reuse: {pr['requests']} identical prompts / "
+          f"{pr['max_slots']} slots | {pr['prefill_calls']} prefill calls "
+          f"({pr['prefill_calls_saved']} saved, {pr['shared_tokens']} "
+          f"tokens from shared pages) | {pr['gen_tokens_per_s']:.0f} gen "
+          f"tok/s | executables {pr['executables']}")
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)

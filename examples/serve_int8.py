@@ -1,10 +1,14 @@
 """Serve a FAT-quantized model with batched requests (int8 weights).
 
-Wraps repro.launch.serve: calibrates, converts to int8, then runs batched
-prefill + greedy decode, comparing int8 against the bf16 baseline,
-demonstrates the chunked ragged prefill pipeline with sampled decoding,
-and finishes with the continuous-batching scheduler: a ragged request
-queue streaming through a fixed set of cache slots.
+Demonstrates the two serving surfaces:
+
+  1. the ``serve`` CLI (thin flags over the Engine) — int8 vs bf16
+     agreement, chunked ragged prefill with nucleus sampling, and the
+     continuous-batching scheduler;
+  2. the ``Engine`` facade directly (launch/engine.py) — one call
+     assembles calibration + int8 conversion + step functions, and the
+     PAGED cache layout turns repeated prompts into zero-prefill
+     admissions through the prefix store.
 
 Useful serve flags (see repro/launch/serve.py and the README flag
 reference for the full list):
@@ -14,16 +18,22 @@ reference for the full list):
   --temperature T     sampled decoding (0 = greedy); --top-p P restricts
                       sampling to the nucleus of probability mass P
   --pallas            fused Pallas kernels: flash-prefill AND flash-decode
-                      attend directly over the int8 KV cache tiles
+                      attend over the cache's kernel view (identity block
+                      table for dense/ring, the page table for paged)
   --max-slots N       continuous batching (launch/scheduler.py): requests
                       are admitted into free cache slots as they drain,
                       every slot decodes at its own position, and ONE
                       compiled decode executable serves the whole ragged
                       run (--block-steps / --eos-id tune the scheduler)
+  --cache-layout paged --page-size N
+                      page-pool KV cache: block tables are data, and with
+                      --max-slots a repeated prompt rides shared pages
 
 Run: PYTHONPATH=src python examples/serve_int8.py
 """
 import sys
+
+import numpy as np
 
 from repro.launch import serve
 
@@ -55,6 +65,29 @@ def main():
                 "--max-slots", "2", "--prefill-chunk", "8",
                 "--block-steps", "4"]
     serve.main()
+
+    # the Engine facade + paged prefix sharing: three IDENTICAL prompts
+    # through a paged scheduler — the second and third admissions attach
+    # the registered prompt's shared pages and run ZERO prefill FLOPs
+    from repro.launch.engine import Engine
+    from repro.launch.scheduler import Request
+
+    engine = Engine.from_checkpoint("smollm-135m", smoke=True,
+                                    cache_layout="paged", page_size=8,
+                                    prefill_chunk=8)
+    prompt = np.arange(1, 25, dtype=np.int32) % engine.cfg.vocab
+    reqs = [Request(rid=r, tokens=prompt, max_gen=6) for r in range(3)]
+    done = engine.generate(reqs, max_slots=2)
+    sched = engine.make_scheduler(max_slots=2, prompt_cap=len(prompt),
+                                  gen_cap=6)
+    stats = sched.prefix_stats()
+    calls = sched.call_counts()
+    print(f"[engine] paged prefix sharing: {len(done)} identical prompts, "
+          f"{calls['prefill']} prefill call(s), {stats['hits']} hits, "
+          f"{stats['shared_tokens']} prompt tokens reused")
+    assert calls["prefill"] == 1 and stats["hits"] == 2
+    assert len({tuple(c.tokens) for c in done}) == 1, \
+        "identical prompts must generate identical tokens"
 
 
 if __name__ == "__main__":

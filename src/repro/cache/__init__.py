@@ -1,0 +1,47 @@
+"""One KV-cache API: dense / SWA-ring / paged layouts behind the
+``KVCache`` protocol (see repro.cache.base for the contract).
+
+``make_cache`` is the single construction point the model layers use;
+``layout`` semantics:
+
+  * ``"ring"``  (default) — today's behavior: sliding-window layers get a
+    window-sized ring buffer, everything else a dense cache.
+  * ``"dense"`` — force dense everywhere (the slot scheduler's
+    requirement: absolute slots).
+  * ``"paged"`` — page-pool + block-table for non-windowed layers
+    (windowed layers keep their ring: a window-bounded buffer is already
+    the right layout for SWA).
+"""
+from repro.cache.base import (DenseCache, KernelView, KVCache, KV_LEVELS,
+                              RingCache, dequantize_kv, quantize_kv)
+from repro.cache.paged import (PagedCache, PrefixEntry, PrefixStore,
+                               copy_pages, set_table_row,
+                               splice_dense_into_pages)
+
+LAYOUTS = ("dense", "ring", "paged")
+
+
+def make_cache(batch, max_len, n_kv, head_dim, *, dtype, quantized=False,
+               layout="ring", window=None, page_size=64, extra_pages=0):
+    """Build the right ``KVCache`` for one attention layer (see module
+    docstring for the layout semantics)."""
+    if layout not in LAYOUTS:
+        raise ValueError(f"unknown cache layout {layout!r} (use one of "
+                         f"{LAYOUTS})")
+    if window is not None and layout != "dense" and window < max_len:
+        return RingCache.init(batch, window, n_kv, head_dim, dtype=dtype,
+                              quantized=quantized)
+    if layout == "paged":
+        return PagedCache.init(batch, max_len, n_kv, head_dim, dtype=dtype,
+                               quantized=quantized, page_size=page_size,
+                               extra_pages=extra_pages)
+    return DenseCache.init(batch, max_len, n_kv, head_dim, dtype=dtype,
+                           quantized=quantized)
+
+
+__all__ = [
+    "KVCache", "KernelView", "DenseCache", "RingCache", "PagedCache",
+    "PrefixStore", "PrefixEntry", "make_cache", "quantize_kv",
+    "dequantize_kv", "copy_pages", "set_table_row",
+    "splice_dense_into_pages", "KV_LEVELS", "LAYOUTS",
+]

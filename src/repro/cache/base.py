@@ -1,0 +1,370 @@
+"""The ``KVCache`` protocol: one cache API, many layouts.
+
+Serving used to hardcode a dense-contiguous KV layout as an implicit
+convention spread across ``models/attention.py`` (quantize/write helpers),
+``launch/steps.py`` (capacity probes), the scheduler (slot splices) and
+both Pallas kernels (contiguous BlockSpecs).  This package makes the
+layout a first-class, swappable artifact: a cache is a registered JAX
+pytree object that knows how to
+
+  * ``ready``         turn raw K/V into cache-ready tiles (quantize ONCE
+                      against the frozen per-head thresholds — the paper's
+                      §2 scales, static at serve time, which is exactly
+                      what makes tiles reusable across requests);
+  * ``append``        write a contiguous run of positions (prefill chunks,
+                      single-stream decode);
+  * ``append_slots``  per-slot one-token writes (continuous batching);
+  * ``splice_slot``   receive a batch-1 cache into one slot of a batch
+                      cache (scheduler admission);
+  * ``dense_view``    materialize (B, S, KV, D) storage-dtype tiles for
+                      the jnp reference paths;
+  * ``kernel_view``   hand the Pallas kernels (tiles, block-table,
+                      tile-size) — dense and ring degenerate to an
+                      identity table, so the fused kernels keep ONE
+                      compiled executable per piece across layouts.
+
+Three implementations: ``DenseCache`` (position p at slot p),
+``RingCache`` (SWA ring: position p at slot ``p % window``), and
+``PagedCache`` (page pool + per-slot block table; see
+``repro.cache.paged`` — the layout that makes prefix sharing free).
+
+Caches are pytrees, so they flow through jit / lax.scan / donation
+untouched; layout metadata (``quantized``, page size) is static aux data,
+so switching layouts retraces while switching *contents* (positions,
+tables, tiles) never does.  Dict-style access (``cache["k"]``,
+``"k_scale" in cache``) is kept as a compatibility shim for tests and
+tooling that poke at cache internals.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import ClassVar, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+# int8 KV cache uses the symmetric signed-8-bit grid (paper eq. 4); the
+# per-head dequant scale T/127 is frozen at finalize_calibration
+KV_LEVELS = 127.0
+
+
+def quantize_kv(x, scale):
+    """(B, S, KV, D) float -> int8 with per-head dequant ``scale`` (KV,)."""
+    s = scale.reshape(1, 1, -1, 1)
+    return jnp.clip(
+        jnp.round(x.astype(jnp.float32) / s), -KV_LEVELS, KV_LEVELS
+    ).astype(jnp.int8)
+
+
+def dequantize_kv(x_q, scale):
+    """int8 cache tiles -> f32 with per-head dequant ``scale`` (KV,)."""
+    return x_q.astype(jnp.float32) * scale.reshape(1, 1, -1, 1)
+
+
+class KernelView(NamedTuple):
+    """What the fused Pallas kernels consume, layout-independently.
+
+    ``k``/``v``: KV tiles — dense/ring pass (B, S, KV, D) contiguous
+    storage with ``block_table is None`` (the kernel wrapper builds the
+    identity table); paged passes the (pages, page_size, KV, D) pool with
+    a (B, n_blocks) table and ``tile == page_size``.
+    """
+    k: jax.Array
+    v: jax.Array
+    block_table: Optional[jax.Array]
+    tile: Optional[int]
+
+
+class KVCache(abc.ABC):
+    """Layout-agnostic KV cache protocol (see module docstring).
+
+    Subclasses are frozen dataclasses registered as pytrees: array fields
+    are children, everything else (``quantized``, page size) is static
+    aux data.  All shape math uses trailing axes so a scanned-layer stack
+    (leading ``(L,)`` axis on every leaf) flows through the scheduler's
+    splice/table ops unchanged.
+    """
+
+    layout: ClassVar[str] = "abstract"
+
+    # -- static structure --------------------------------------------------
+    @property
+    def quantized(self) -> bool:
+        return self._quantized
+
+    @property
+    def capacity(self) -> int:
+        """Logical sequence capacity of one slot."""
+        return self.k.shape[-3]
+
+    @property
+    def n_kv(self) -> int:
+        return self.k.shape[-2]
+
+    @property
+    def head_dim(self) -> int:
+        return self.k.shape[-1]
+
+    # -- scales ------------------------------------------------------------
+    def scales(self):
+        """Per-head dequant scales (ones for a float cache): the kernels
+        accept float tiles through the same code path with unit scales."""
+        return self.k_scale, self.v_scale
+
+    def with_scales(self, k_scale, v_scale) -> "KVCache":
+        return dataclasses.replace(
+            self, k_scale=k_scale.astype(jnp.float32),
+            v_scale=v_scale.astype(jnp.float32))
+
+    def ready(self, k, v):
+        """Cache-ready K/V tiles: quantize against the frozen per-head
+        scales when the cache stores int8, else cast to the storage dtype.
+        The single quantize-on-append point for every layout and both
+        phases — K/V quantize ONCE and the same tiles feed attention and
+        the cache write."""
+        if self.quantized:
+            return quantize_kv(k, self.k_scale), quantize_kv(v, self.v_scale)
+        return k.astype(self.k.dtype), v.astype(self.v.dtype)
+
+    def dequantize(self, k_tiles, v_tiles):
+        """Storage tiles -> f32 for the jnp reference attention paths."""
+        if not self.quantized:
+            return k_tiles, v_tiles
+        return (dequantize_kv(k_tiles, self.k_scale),
+                dequantize_kv(v_tiles, self.v_scale))
+
+    # -- writes ------------------------------------------------------------
+    @abc.abstractmethod
+    def append(self, kq, vq, start) -> "KVCache":
+        """Write cache-ready tiles at positions [start, start + len)."""
+
+    @abc.abstractmethod
+    def append_slots(self, kq, vq, starts, active=None) -> "KVCache":
+        """Per-slot decode append: batch row b writes its one-token tile
+        at position ``starts[b]``; ``active`` masks rows bit-neutrally."""
+
+    # -- reads -------------------------------------------------------------
+    @abc.abstractmethod
+    def dense_view(self, limit: Optional[int] = None):
+        """(k, v) as contiguous (B, S', KV, D) storage-dtype tiles, where
+        S' = ``limit`` (static) or the full capacity."""
+
+    @abc.abstractmethod
+    def kernel_view(self, limit: Optional[int] = None) -> KernelView:
+        """Tiles + block-table for the fused kernels (see KernelView)."""
+
+    # -- scheduler ---------------------------------------------------------
+    def splice_slot(self, slot_cache: "KVCache", slot) -> "KVCache":
+        """Receive a batch-1 cache into batch row ``slot``.  Handles an
+        optional leading layer axis (batch axis is always ndim-4 on KV
+        leaves).  Scale leaves are request-independent (frozen
+        calibration) and identical for every admission: take the slot
+        cache's copy wholesale, which also fixes up the ones-initialized
+        scales of a never-admitted batch cache."""
+        slot = jnp.asarray(slot, jnp.int32)
+
+        def write(big, small):
+            return jax.lax.dynamic_update_slice_in_dim(
+                big, small.astype(big.dtype), slot, big.ndim - 4)
+
+        return dataclasses.replace(
+            self,
+            k=write(self.k, slot_cache.k), v=write(self.v, slot_cache.v),
+            k_scale=slot_cache.k_scale, v_scale=slot_cache.v_scale)
+
+    # -- dict-style compat shim -------------------------------------------
+    _KEYS = ("k", "v", "k_scale", "v_scale")
+
+    def __getitem__(self, key):
+        if key in ("k_scale", "v_scale") and not self.quantized:
+            raise KeyError(key)  # float caches had no scale entries
+        if key in self._KEYS:
+            return getattr(self, key)
+        raise KeyError(key)
+
+    def __contains__(self, key):
+        try:
+            self[key]
+        except KeyError:
+            return False
+        return True
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    # -- pytree plumbing ---------------------------------------------------
+    # static (aux) dataclass fields; everything else is an array child.
+    # Children flatten WITH DictKeys named like the old cache dicts
+    # ("k", "v", "k_scale", ...) so path-based tooling — dist/sharding's
+    # cache_specs classifies KV leaves by their ``"k"``/``"v"`` path key —
+    # keeps working across the dict -> protocol migration.
+    _static = ("_quantized",)
+
+    @classmethod
+    def _child_names(cls):
+        return tuple(f.name for f in dataclasses.fields(cls)
+                     if f.name not in cls._static)
+
+    def tree_flatten(self):
+        return (tuple(getattr(self, n) for n in self._child_names()),
+                tuple(getattr(self, s) for s in self._static))
+
+    def tree_flatten_with_keys(self):
+        children = tuple((jax.tree_util.DictKey(n), getattr(self, n))
+                         for n in self._child_names())
+        return children, tuple(getattr(self, s) for s in self._static)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kw = dict(zip(cls._child_names(), children))
+        kw.update(zip(cls._static, aux))
+        return cls(**kw)
+
+
+def _zeros_kv(batch, seq, n_kv, head_dim, dtype, quantized):
+    # four DISTINCT buffers: donation (serve.py donates the cache into
+    # the decode loop) rejects the same buffer appearing as two leaves
+    kd = (batch, seq, n_kv, head_dim)
+    store = jnp.int8 if quantized else dtype
+    return (jnp.zeros(kd, store), jnp.zeros(kd, store),
+            jnp.ones((n_kv,), jnp.float32), jnp.ones((n_kv,), jnp.float32))
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True)
+class DenseCache(KVCache):
+    """Contiguous layout: position p lives at slot p.  Required by chunked
+    prefill and the slot scheduler (absolute slots)."""
+
+    layout: ClassVar[str] = "dense"
+
+    k: jax.Array          # (B, S, KV, D) int8 or float
+    v: jax.Array
+    k_scale: jax.Array    # (KV,) f32 (ones when not quantized)
+    v_scale: jax.Array
+    _quantized: bool = dataclasses.field(default=False)
+
+    @classmethod
+    def init(cls, batch, max_len, n_kv, head_dim, *, dtype=jnp.bfloat16,
+             quantized=False):
+        return cls(*_zeros_kv(batch, max_len, n_kv, head_dim, dtype,
+                              quantized), _quantized=quantized)
+
+    def append(self, kq, vq, start):
+        ax = self.k.ndim - 3
+        return dataclasses.replace(
+            self,
+            k=jax.lax.dynamic_update_slice_in_dim(self.k, kq, start, ax),
+            v=jax.lax.dynamic_update_slice_in_dim(self.v, vq, start, ax))
+
+    def append_slots(self, kq, vq, starts, active=None):
+        """kq/vq: (B, 1, KV, D); starts: (B,) int32.  An inactive slot
+        reads back the tile at its (clamped) write index and writes it
+        unchanged — a masked step is bit-exact cache-neutral.  Out-of-
+        range starts clamp (XLA dynamic-slice semantics); the slot decode
+        loop deactivates capacity-full slots before they could clamp
+        while active."""
+        starts = jnp.asarray(starts, jnp.int32)
+
+        def write_one(c, u, st):          # c: (S, KV, D), u: (1, KV, D)
+            return jax.lax.dynamic_update_slice_in_dim(c, u, st, 0)
+
+        if active is not None:
+            def read_one(c, st):
+                return jax.lax.dynamic_slice_in_dim(c, st, 1, 0)
+
+            sel = active[:, None, None, None]
+            kq = jnp.where(sel, kq, jax.vmap(read_one)(self.k, starts))
+            vq = jnp.where(sel, vq, jax.vmap(read_one)(self.v, starts))
+        return dataclasses.replace(
+            self,
+            k=jax.vmap(write_one)(self.k, kq, starts),
+            v=jax.vmap(write_one)(self.v, vq, starts))
+
+    def dense_view(self, limit=None):
+        if limit is None or limit >= self.capacity:
+            return self.k, self.v
+        return self.k[..., :limit, :, :], self.v[..., :limit, :, :]
+
+    def kernel_view(self, limit=None):
+        k, v = self.dense_view(limit)
+        return KernelView(k, v, None, None)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True)
+class RingCache(KVCache):
+    """SWA ring buffer: capacity == window, position p lives at slot
+    ``p % window`` (decode relies on this invariant).  Rings keep the
+    scalar-position decode contract: per-slot decode and chunked prefill
+    drop absolute slots, so both reject rings upstream."""
+
+    layout: ClassVar[str] = "ring"
+
+    k: jax.Array          # (B, window, KV, D)
+    v: jax.Array
+    k_scale: jax.Array
+    v_scale: jax.Array
+    _quantized: bool = dataclasses.field(default=False)
+
+    @classmethod
+    def init(cls, batch, window, n_kv, head_dim, *, dtype=jnp.bfloat16,
+             quantized=False):
+        return cls(*_zeros_kv(batch, window, n_kv, head_dim, dtype,
+                              quantized), _quantized=quantized)
+
+    @property
+    def window(self) -> int:
+        return self.capacity
+
+    def append(self, kq, vq, start):
+        """Single-token writes land at ``start % window``; a whole-prompt
+        write (``start == 0``, s tokens) keeps the last ``window`` entries
+        rolled so position p sits at slot ``p % window``."""
+        ax = self.k.ndim - 3
+        s = kq.shape[ax]
+        cap = self.capacity
+        if s == 1:
+            idx = start % cap
+            return dataclasses.replace(
+                self,
+                k=jax.lax.dynamic_update_slice_in_dim(self.k, kq, idx, ax),
+                v=jax.lax.dynamic_update_slice_in_dim(self.v, vq, idx, ax))
+        # one-shot prompt write: keep the last `window` positions and roll
+        # them into ring order (static shapes — s and cap are trace-time)
+        keep = min(s, cap)
+        kk = jax.lax.slice_in_dim(kq, s - keep, s, axis=ax)
+        vv = jax.lax.slice_in_dim(vq, s - keep, s, axis=ax)
+        if keep == cap:
+            shift = (s - keep) % cap
+            kk = jnp.roll(kk, shift, axis=ax)
+            vv = jnp.roll(vv, shift, axis=ax)
+        return dataclasses.replace(
+            self,
+            k=jax.lax.dynamic_update_slice_in_dim(self.k, kk, 0, ax),
+            v=jax.lax.dynamic_update_slice_in_dim(self.v, vv, 0, ax))
+
+    def append_slots(self, kq, vq, starts, active=None):
+        raise NotImplementedError(
+            "per-slot decode needs absolute slots; the SWA ring buffer "
+            "keeps the scalar-position contract (use a dense or paged "
+            "cache sized >= max_len)")
+
+    def abs_positions(self, cur_pos):
+        """(window,) absolute position held by each ring slot, given the
+        newest token's absolute position ``cur_pos``."""
+        cap = self.capacity
+        idx = cur_pos % cap
+        slot = jnp.arange(cap)
+        return jnp.where(slot <= idx, cur_pos - (idx - slot),
+                         cur_pos - (idx + cap - slot))
+
+    def dense_view(self, limit=None):
+        return self.k, self.v   # ring storage IS its attended extent
+
+    def kernel_view(self, limit=None):
+        return KernelView(self.k, self.v, None, None)

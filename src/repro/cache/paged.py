@@ -1,0 +1,331 @@
+"""Paged KV cache: a page pool + per-slot block tables (vLLM-style),
+plus the host-side prefix store that makes prompt reuse free.
+
+Layout
+------
+::
+
+    k, v      : (pages, page_size, KV, D)   the page pool (int8 or float)
+    table     : (B, n_blocks) int32         per-slot block table: logical
+                                            block j of slot b lives in
+                                            pool page ``table[b, j]``
+    k_scale,
+    v_scale   : (KV,) f32                   frozen per-head dequant scales
+
+The pool holds ``B * n_blocks`` slot-private pages (page ``b*n_blocks+j``
+is slot b's default page for block j — the identity table) plus an
+optional ``extra_pages`` shared region owned by the :class:`PrefixStore`.
+
+Why the paper makes this free: FAT's thresholds are calibrated once and
+frozen (§2), so the int8 dequant scales are request-independent — a page
+quantized while serving one request is bit-valid for every other request.
+Prefix sharing is therefore pure bookkeeping: point a new slot's table at
+already-written pages.  No requantization, no recalibration, no copy for
+full pages.
+
+Mutability rule: a shared page is **immutable**.  Only *full* pages of a
+registered prompt are shared by reference; the partial tail page (the one
+decode will keep appending into) is snapshotted into the shared region at
+registration and **copied** into the new slot's private page on a hit —
+so a sharer's decode writes can never corrupt another resident.
+
+The stacked-layer helpers at the bottom (``splice_dense_into_pages``,
+``set_table_row``, ``copy_pages``) tolerate an optional leading ``(L,)``
+layer axis (scanned stacks): all axis math is relative to the trailing
+(page, page_size, KV, D) / (B, n_blocks) dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import ClassVar, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.base import KernelView, KVCache, _zeros_kv
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True)
+class PagedCache(KVCache):
+    """Page pool + per-slot block table behind the ``KVCache`` protocol.
+
+    Logical position p of slot b lives at page ``table[b, p // ps]``,
+    offset ``p % ps``.  With the identity table this is exactly a dense
+    cache whose sequence axis is tiled into pages — which is what keeps
+    dense↔paged bit-parity and lets the fused kernels serve both layouts
+    from one compiled executable (the table is data, never shape).
+    """
+
+    layout: ClassVar[str] = "paged"
+
+    k: jax.Array          # (T, ps, KV, D) page pool
+    v: jax.Array
+    k_scale: jax.Array    # (KV,) f32
+    v_scale: jax.Array
+    table: jax.Array      # (B, NB) int32
+    _quantized: bool = dataclasses.field(default=False)
+    page_size: int = dataclasses.field(default=64)
+
+    # pytree: the table is a child (keyed "table"); page_size joins
+    # quantized in the static aux (see KVCache pytree plumbing)
+    _static = ("_quantized", "page_size")
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def init(cls, batch, max_len, n_kv, head_dim, *, dtype=jnp.bfloat16,
+             quantized=False, page_size=64, extra_pages=0):
+        """Identity-table pool: slot b owns pages [b*NB, (b+1)*NB) where
+        NB = ceil(max_len / page_size); ``extra_pages`` reserves the
+        shared prefix region at the pool tail."""
+        if page_size < 8 or page_size % 8:
+            # the fused kernels use the page as their KV tile — keep it
+            # sublane-aligned for the TPU lowering
+            raise ValueError(
+                f"page_size must be a positive multiple of 8, got "
+                f"{page_size}")
+        nb = -(-max_len // page_size)
+        k, v, ks, vs = _zeros_kv(batch * nb + extra_pages, page_size, n_kv,
+                                 head_dim, dtype, quantized)
+        table = jnp.arange(batch * nb, dtype=jnp.int32).reshape(batch, nb)
+        return cls(k, v, ks, vs, table, _quantized=quantized,
+                   page_size=page_size)
+
+    @property
+    def capacity(self) -> int:
+        return self.n_blocks * self.page_size
+
+    @property
+    def n_blocks(self) -> int:
+        return self.table.shape[-1]
+
+    @property
+    def n_pages(self) -> int:
+        return self.k.shape[-4]
+
+    # -- writes ------------------------------------------------------------
+    def _page_of(self, positions):
+        """(B, n) positions -> (pages (B, n), offsets (B, n)) via the
+        table; positions clamp to the last valid slot (the same clamp XLA
+        dynamic-update-slice gives the dense layout)."""
+        pos = jnp.clip(jnp.asarray(positions, jnp.int32), 0,
+                       self.capacity - 1)
+        blocks = pos // self.page_size
+        pages = jnp.take_along_axis(self.table, blocks, axis=-1)
+        return pages, pos % self.page_size
+
+    def append(self, kq, vq, start):
+        """Token-granular scatter through the table: tokens [start,
+        start+s) of every batch row land in their mapped pages.  Requires
+        per-row-distinct target pages (any table the engine builds —
+        identity or shared-prefix — satisfies this: appends only ever
+        target private pages)."""
+        b, s = kq.shape[0], kq.shape[1]
+        pos = jnp.asarray(start, jnp.int32) + jnp.arange(s)
+        pages, offs = self._page_of(jnp.broadcast_to(pos, (b, s)))
+        return dataclasses.replace(
+            self,
+            k=self.k.at[pages, offs].set(kq, mode="drop"),
+            v=self.v.at[pages, offs].set(vq, mode="drop"))
+
+    def append_slots(self, kq, vq, starts, active=None):
+        """Per-slot one-token scatter (kq/vq: (B, 1, KV, D)); inactive
+        slots read back their mapped tile and write it unchanged —
+        bit-exact cache-neutral, matching DenseCache."""
+        starts = jnp.asarray(starts, jnp.int32).reshape(-1, 1)     # (B, 1)
+        pages, offs = self._page_of(starts)
+        pages, offs = pages[:, 0], offs[:, 0]
+        kq1, vq1 = kq[:, 0], vq[:, 0]                              # (B, KV, D)
+        if active is not None:
+            sel = active[:, None, None]
+            kq1 = jnp.where(sel, kq1, self.k[pages, offs])
+            vq1 = jnp.where(sel, vq1, self.v[pages, offs])
+        return dataclasses.replace(
+            self,
+            k=self.k.at[pages, offs].set(kq1, mode="drop"),
+            v=self.v.at[pages, offs].set(vq1, mode="drop"))
+
+    # -- reads -------------------------------------------------------------
+    def _blocks_for(self, limit: Optional[int]):
+        if limit is None:
+            return self.n_blocks
+        return min(self.n_blocks, -(-int(limit) // self.page_size))
+
+    def dense_view(self, limit=None):
+        """Gather table-mapped pages back into contiguous (B, S', KV, D)
+        tiles (the jnp fallback path; the fused kernels read the pool
+        directly through the block table instead)."""
+        nb = self._blocks_for(limit)
+        tb = self.table[:, :nb]
+        b = tb.shape[0]
+        shp = (b, nb * self.page_size, self.n_kv, self.head_dim)
+        k = self.k[tb].reshape(shp)
+        v = self.v[tb].reshape(shp)
+        if limit is not None and limit < shp[1]:
+            k, v = k[:, :limit], v[:, :limit]
+        return k, v
+
+    def kernel_view(self, limit=None):
+        nb = self._blocks_for(limit)
+        return KernelView(self.k, self.v, self.table[:, :nb],
+                          self.page_size)
+
+    def splice_slot(self, slot_cache, slot):
+        raise NotImplementedError(
+            "paged splices go through splice_dense_into_pages (the "
+            "scheduler prefills admissions into a dense batch-1 cache and "
+            "scatters it into the slot's private pages)")
+
+
+# -- scheduler-side page ops (stacked-layer aware) --------------------------
+
+def _page_axis(pool) -> int:
+    return pool.ndim - 4
+
+
+def _put_pages(pool, idx, vals):
+    """Scatter ``vals`` into pool pages ``idx`` along the page axis,
+    tolerating leading layer axes.  ``vals``'s page axis sits where the
+    pool's does."""
+    ax = _page_axis(pool)
+    p = jnp.moveaxis(pool, ax, 0)
+    v = jnp.moveaxis(vals, ax, 0)
+    return jnp.moveaxis(p.at[idx].set(v.astype(p.dtype), mode="drop"), 0, ax)
+
+
+def _take_pages(pool, idx):
+    return jnp.take(pool, idx, axis=_page_axis(pool))
+
+
+def splice_dense_into_pages(paged: PagedCache, dense_slot, row):
+    """Admission splice: scatter a batch-1 DENSE cache (the prefill
+    executable's output — one compiled prefill serves every layout) into
+    the pages listed in ``row`` (NB,) and point ``slot``-row of the table
+    at them.  ``row`` is data: private ids on a miss; the caller swaps in
+    shared ids afterwards on a hit (set_table_row), so this one jitted
+    splice serves every admission pattern."""
+    ps, nb = paged.page_size, paged.n_blocks
+    row = jnp.asarray(row, jnp.int32)
+
+    def tiles(x):  # (..., 1, S, KV, D) -> (..., NB, ps, KV, D)
+        shp = x.shape[:-4] + (nb, ps) + x.shape[-2:]
+        return x.reshape(shp)
+
+    return dataclasses.replace(
+        paged,
+        k=_put_pages(paged.k, row, tiles(dense_slot.k)),
+        v=_put_pages(paged.v, row, tiles(dense_slot.v)),
+        k_scale=dense_slot.k_scale, v_scale=dense_slot.v_scale)
+
+
+def set_table_row(paged: PagedCache, slot, row):
+    """Point slot ``slot``'s block table at pages ``row`` (NB,)."""
+    t = jnp.moveaxis(paged.table, -2, 0)
+    t = t.at[jnp.asarray(slot, jnp.int32)].set(
+        jnp.asarray(row, jnp.int32), mode="drop")
+    return dataclasses.replace(paged, table=jnp.moveaxis(t, 0, -2))
+
+
+def copy_pages(paged: PagedCache, src, dst):
+    """Copy pool pages ``src`` -> ``dst`` (fixed-length index vectors; pad
+    unused entries with self-copies, e.g. src == dst == pool_size - 1).
+    Used to snapshot a registered prefix's tail page and to give a hit
+    its private copy — device bytes move, zero model FLOPs."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    return dataclasses.replace(
+        paged,
+        k=_put_pages(paged.k, dst, _take_pages(paged.k, src)),
+        v=_put_pages(paged.v, dst, _take_pages(paged.v, src)))
+
+
+# -- host-side prefix registry ----------------------------------------------
+
+class PrefixEntry(NamedTuple):
+    pages: tuple          # shared page ids of the FULL prompt pages
+    tail_page: Optional[int]   # snapshot page of the partial tail (or None)
+    length: int           # prompt length in tokens
+    logits: np.ndarray    # last-position logits (1, 1, V) — admission
+    #                       samples t0 from these, so a hit runs no model
+
+
+class PrefixStore:
+    """Host-side registry: full-prompt key -> shared pages + stored
+    logits, with an LRU page allocator over the pool's shared region.
+
+    Keys are the full prompt token tuple (the prompt IS the prefix of the
+    whole sequence); registration is opportunistic — when the shared
+    region has no free pages and every entry is in use, new prompts
+    simply aren't registered.  ``users`` tracks which live slots hold
+    references so an entry's pages are never reclaimed under a resident.
+    """
+
+    def __init__(self, first_page: int, n_pages: int, page_size: int):
+        self.page_size = page_size
+        self._free = list(range(first_page, first_page + n_pages))
+        self._entries: "OrderedDict[tuple, dict]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.shared_tokens = 0   # prompt tokens served from shared pages
+
+    # -- stats -------------------------------------------------------------
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "shared_tokens": self.shared_tokens,
+                "entries": len(self._entries),
+                "free_pages": len(self._free)}
+
+    # -- lookup / reference counting --------------------------------------
+    def lookup(self, key: tuple, slot: int):
+        """Full-prompt hit: returns the entry and marks ``slot`` as a
+        user (release with ``release(slot)`` at retirement)."""
+        e = self._entries.get(key)
+        if e is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        e["users"].add(slot)
+        self.hits += 1
+        self.shared_tokens += e["entry"].length
+        return e["entry"]
+
+    def release(self, slot: int):
+        for e in self._entries.values():
+            e["users"].discard(slot)
+
+    # -- registration ------------------------------------------------------
+    def _reclaim(self, need: int):
+        """Evict least-recently-used entries with no live users until
+        ``need`` pages are free (or nothing evictable remains)."""
+        for key in list(self._entries):
+            if len(self._free) >= need:
+                break
+            e = self._entries[key]
+            if e["users"]:
+                continue
+            ent = e["entry"]
+            self._free.extend(ent.pages)
+            if ent.tail_page is not None:
+                self._free.append(ent.tail_page)
+            del self._entries[key]
+
+    def reserve(self, key: tuple, length: int):
+        """Allocate shared pages for a prompt of ``length`` tokens:
+        returns (full_page_ids, tail_page_id | None) or None when the
+        shared region can't fit it."""
+        if key in self._entries:
+            return None
+        n_full, rem = divmod(length, self.page_size)
+        need = n_full + (1 if rem else 0)
+        if need == 0 or len(self._free) < need:
+            self._reclaim(need)
+        if len(self._free) < need or need == 0:
+            return None
+        pages = [self._free.pop() for _ in range(n_full)]
+        tail = self._free.pop() if rem else None
+        return tuple(pages), tail
+
+    def register(self, key: tuple, entry: PrefixEntry):
+        self._entries[key] = {"entry": entry, "users": set()}

@@ -26,6 +26,7 @@ State layout
 from __future__ import annotations
 
 import dataclasses
+import functools
 import re
 from typing import Any, Callable, Optional
 
@@ -53,8 +54,16 @@ class QuantPolicy:
     use_pallas: bool = False            # Pallas kernels on real TPU hot path
     kv_int8: bool = False               # int8 KV cache (per-head static T)
 
+    @functools.cached_property
+    def _skip_res(self) -> tuple[re.Pattern, ...]:
+        # compiled once per policy instance (cached_property writes the
+        # instance __dict__ directly, which frozen= does not block);
+        # skips() runs per layer per call, so re-running re.compile via
+        # re.search's internal cache lookup was measurable overhead
+        return tuple(re.compile(p) for p in self.skip_patterns)
+
     def skips(self, path: str) -> bool:
-        return any(re.search(p, path) for p in self.skip_patterns)
+        return any(p.search(path) for p in self._skip_res)
 
     def weight_spec(self, channel_axis: int = -1) -> Q.QuantSpec:
         return Q.QuantSpec(

@@ -12,6 +12,19 @@ pass:
     acc = acc * exp(m_old - m_new) + softmax_tile @ v_tile
     out = acc * v_scale / l                           (epilogue)
 
+Tiles and block tables
+----------------------
+The kernel core (``decode_attention_tiles``) reads KV through a **block
+table**: K/V arrive as a page pool ``(pages, block_s, KV, D)`` and a
+``(B, S/block_s)`` int32 table maps each (batch row, logical block) to a
+pool page via a scalar-prefetch index map — the table rides in SMEM and
+steers the DMA engine, costing nothing on the compute path.  The paged
+cache (repro.cache.paged) passes its pool/table straight through; the
+dense entry point ``decode_attention_int8`` reshapes its contiguous
+cache into pool form (a free leading-axis split) and passes the identity
+table — so dense and paged layouts share ONE kernel body and the table
+is always data, never shape.
+
 Grid layout
 -----------
 ``(B, KV-heads, S/block_s)`` with the sequence dimension innermost and
@@ -31,19 +44,20 @@ f32 output accumulator plus (G, 1) running max and normalizer.  They are
 in-order on one core, which the "arbitrary" dimension semantics
 guarantee.  Budget: one (1, block_s, 1, D) int8 K tile + V tile are
 resident per step alongside the scratch; block_s is chosen so a whole
-tile fits comfortably (default 128 x D).
+tile fits comfortably (default 128 x D; the paged layout uses its page
+size).
 
 Masking semantics
 -----------------
 ``cur_pos`` is the number of valid cache slots per batch row — a scalar
 (uniform batch, the single-stream serving path) or a (B,) vector (the
 slot-based continuous-batching scheduler: each slot of the batch decodes
-at its own position).  Slots at ``k_pos >= cur_pos[b]`` are masked BEFORE
-the running-max update and re-masked after (an all-masked tile has
-s == m_new == NEG_INF and exp(0) == 1, which would corrupt l).  A row
-with ``cur_pos[b] == 0`` (inactive scheduler slot) masks every key and
-normalizes to exact zeros in the epilogue — inactive slots cost grid
-steps but produce well-defined output.
+at its own position).  Positions are LOGICAL (block index * block_s +
+offset) — the table only relocates storage.  Slots at ``k_pos >=
+cur_pos[b]`` are masked BEFORE the running-max update and re-masked after
+(an all-masked tile has s == m_new == NEG_INF and exp(0) == 1, which
+would corrupt l).  A row with ``cur_pos[b] == 0`` (inactive scheduler
+slot) masks every key and normalizes to exact zeros in the epilogue.
 
 A bf16 cache runs through the same kernel with scales == 1.  The
 pure-jnp oracle is kernels/ref.py::decode_attention_ref.
@@ -55,14 +69,18 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.tpu_compat import tpu_compiler_params
 
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, o_ref,
+def _kernel(tab_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, o_ref,
             acc_ref, m_ref, l_ref, *, n_s: int, block_s: int, dim: int):
+    # tab_ref is the scalar-prefetch block table: consumed by the K/V
+    # index maps (page steering), never by the compute body
+    del tab_ref
     si = pl.program_id(2)
 
     @pl.when(si == 0)
@@ -82,7 +100,8 @@ def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, o_ref,
     )                                                # (G, bs)
 
     # mask the unwritten tail (cache slots >= this row's cur_pos); pos_ref
-    # is blocked per batch row, so slot-ragged positions mask per slot
+    # is blocked per batch row, so slot-ragged positions mask per slot.
+    # k_pos is the LOGICAL position — the block table only moves storage
     k_pos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
     valid = k_pos < pos_ref[0, 0]
     s = jnp.where(valid, s, NEG_INF)
@@ -107,6 +126,66 @@ def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, o_ref,
         o_ref[0, 0] = o.astype(o_ref.dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def decode_attention_tiles(
+    q: jax.Array,          # (B, KV, G, D) float — one query token, GQA view
+    k_pool: jax.Array,     # (pages, block_s, KV, D) int8 or float tiles
+    v_pool: jax.Array,     # (pages, block_s, KV, D)
+    block_tab: jax.Array,  # (B, n_blocks) int32 page per (row, logical blk)
+    k_scale: jax.Array,    # (KV,) f32 per-head dequant scale
+    v_scale: jax.Array,    # (KV,) f32 per-head dequant scale
+    cur_pos: jax.Array,    # int32 valid-slot count: scalar or per-slot (B,)
+    *,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+):
+    """Kernel core: fused one-token decode over block-table-mapped KV
+    tiles.  The dense layout passes a free reshape of its cache plus the
+    identity table (``decode_attention_int8``); the paged layout passes
+    its pool/table directly — same compiled kernel either way."""
+    b, kvh, g, d = q.shape
+    bs = k_pool.shape[1]
+    n_s = block_tab.shape[1]
+
+    kernel = functools.partial(_kernel, n_s=n_s, block_s=bs, dim=d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, h, si, tab: (bi, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda bi, h, si, tab: (tab[bi, si], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda bi, h, si, tab: (tab[bi, si], 0, h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, si, tab: (h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, si, tab: (h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, si, tab: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, h, si, tab: (bi, h, 0, 0)),
+        scratch_shapes=_scratch(g, d),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), out_dtype),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(
+        block_tab.astype(jnp.int32),
+        q,
+        k_pool,
+        v_pool,
+        k_scale.reshape(kvh, 1).astype(jnp.float32),
+        v_scale.reshape(kvh, 1).astype(jnp.float32),
+        # per-batch-row valid-slot count (prefill's kv_len pattern): a
+        # scalar broadcasts to all rows, a (B,) vector is slot-ragged
+        jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32).reshape(-1),
+                         (b,)).reshape(b, 1),
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_s", "out_dtype", "interpret"))
 def decode_attention_int8(
@@ -121,7 +200,9 @@ def decode_attention_int8(
     out_dtype=jnp.float32,
     interpret: bool = False,
 ):
-    """Fused one-token decode attention over a (possibly int8) KV cache.
+    """Dense entry point: contiguous (B, S, KV, D) caches degenerate to
+    the identity block table over a leading-axis reshape of the same
+    buffer — the kernel body is shared with the paged layout.
 
     ``cur_pos`` broadcasts to a per-batch-row (B,) valid-slot vector (the
     prefill kernel's per-request ``kv_len`` pattern): a scalar serves the
@@ -146,40 +227,17 @@ def decode_attention_int8(
         v_cache = jnp.pad(v_cache, pad)
     n_s = s_pad // bs
 
-    kernel = functools.partial(_kernel, n_s=n_s, block_s=bs, dim=d)
-    return pl.pallas_call(
-        kernel,
-        grid=(b, kvh, n_s),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda bi, h, si: (bi, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, d), lambda bi, h, si: (bi, si, h, 0)),
-            pl.BlockSpec((1, bs, 1, d), lambda bi, h, si: (bi, si, h, 0)),
-            pl.BlockSpec((1, 1), lambda bi, h, si: (h, 0)),
-            pl.BlockSpec((1, 1), lambda bi, h, si: (h, 0)),
-            pl.BlockSpec((1, 1), lambda bi, h, si: (bi, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, h, si: (bi, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), out_dtype),
-        scratch_shapes=_scratch(g, d),
-        compiler_params=tpu_compiler_params(
-            ("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(
-        q,
-        k_cache,
-        v_cache,
-        k_scale.reshape(kvh, 1).astype(jnp.float32),
-        v_scale.reshape(kvh, 1).astype(jnp.float32),
-        # per-batch-row valid-slot count (prefill's kv_len pattern): a
-        # scalar broadcasts to all rows, a (B,) vector is slot-ragged
-        jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32).reshape(-1),
-                         (b,)).reshape(b, 1),
-    )
+    # identity view: splitting the contiguous sequence axis into
+    # (blocks, block_s) merges with batch into a page axis copy-free
+    k_pool = k_cache.reshape(b * n_s, bs, kvh, d)
+    v_pool = v_cache.reshape(b * n_s, bs, kvh, d)
+    tab = jnp.arange(b * n_s, dtype=jnp.int32).reshape(b, n_s)
+    return decode_attention_tiles(
+        q, k_pool, v_pool, tab, k_scale, v_scale, cur_pos,
+        out_dtype=out_dtype, interpret=interpret)
 
 
 def _scratch(g, d):
-    from jax.experimental.pallas import tpu as pltpu
-
     return [
         pltpu.VMEM((g, d), jnp.float32),  # output accumulator
         pltpu.VMEM((g, 1), jnp.float32),  # running max

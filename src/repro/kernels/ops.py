@@ -64,6 +64,20 @@ def decode_attention(q, k_cache, v_cache, k_scale, v_scale, cur_pos, **kw):
 decode_attention_ref = _ref.decode_attention_ref
 
 
+def decode_attention_view(q, view, k_scale, v_scale, cur_pos, **kw):
+    """Fused decode over a cache's ``KernelView`` (repro.cache): a dense/
+    ring view (``block_table is None``) routes through the identity-table
+    entry point, a paged view streams its page pool through the same
+    kernel body via the block table."""
+    if view.block_table is None:
+        return _da.decode_attention_int8(
+            q, view.k, view.v, k_scale, v_scale, cur_pos,
+            interpret=_interpret(), **kw)
+    return _da.decode_attention_tiles(
+        q, view.k, view.v, view.block_table, k_scale, v_scale, cur_pos,
+        interpret=_interpret(), **kw)
+
+
 def prefill_attention(q, k, v, k_scale, v_scale, q_start, kv_len, **kw):
     """Fused flash-prefill over an int8 (or unit-scale float) KV stream.
 
@@ -78,6 +92,19 @@ def prefill_attention(q, k, v, k_scale, v_scale, q_start, kv_len, **kw):
 
 
 prefill_attention_ref = _ref.prefill_attention_ref
+
+
+def prefill_attention_view(q, view, k_scale, v_scale, q_start, kv_len,
+                           **kw):
+    """Fused prefill over a cache's ``KernelView`` (repro.cache); same
+    dense-vs-paged routing as ``decode_attention_view``."""
+    if view.block_table is None:
+        return _pa.prefill_attention_int8(
+            q, view.k, view.v, k_scale, v_scale, q_start, kv_len,
+            interpret=_interpret(), **kw)
+    return _pa.prefill_attention_tiles(
+        q, view.k, view.v, view.block_table, k_scale, v_scale, q_start,
+        kv_len, interpret=_interpret(), **kw)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))

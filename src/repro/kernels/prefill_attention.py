@@ -14,6 +14,17 @@ cache stores — no bf16 re-materialization between "attend" and "append".
     acc = acc * exp(m_old - m_new) + softmax_tile @ v_tile
     out = acc * v_scale / l                             (epilogue)
 
+Tiles and block tables
+----------------------
+Like the decode kernel, the core (``prefill_attention_tiles``) reads KV
+through a **block table**: tiles arrive as a page pool
+``(pages, block_k, KV, D)`` and a ``(B, KV-chunks)`` int32 table maps
+each (batch row, logical KV block) to a pool page via a scalar-prefetch
+index map.  The paged cache passes its pool/table straight through (so a
+chunked prefill can attend pages shared with other requests); the dense
+entry point ``prefill_attention_int8`` reshapes its contiguous stream
+and passes the identity table — one kernel body for every layout.
+
 Grid layout
 -----------
 ``(B, KV-heads, Q-chunks, KV-chunks)`` with the KV axis innermost and
@@ -31,22 +42,25 @@ and normalizer.  They are (re)initialized at ``ki == 0`` and flushed at
 ``ki == n_k - 1``, so correctness relies on the KV axis running in-order
 on one core (the "arbitrary" dimension contract).  Per step the resident
 set adds one (block_k, D) int8 K tile and V tile; the default 256-row
-blocks keep q-tile + scratch + K/V tiles within VMEM at head dims <= 256.
+blocks keep q-tile + scratch + K/V tiles within VMEM at head dims <= 256
+(paged pools use their page size as block_k).
 
 Masking semantics
 -----------------
-Positional and block-skipped: causal and sliding-window predicates are
-evaluated per TILE first and a fully-masked tile skips its matmuls
-entirely via ``pl.when`` — a sliding-window layer therefore costs
-O(S * window) compute, not O(S^2).  (Skipped tiles are still DMA'd; see
-the ROADMAP "prefill DMA skip" item.)  ``q_start`` (scalar: chunk offset
-of query row 0) and ``kv_len`` (per-request valid KV count) make the same
-executable serve chunked, ragged prefill: element masks re-apply after
-the running-max update (an all-masked tile has s == m_new == NEG_INF and
-exp(0) == 1), and padded/garbage rows end with l == 0, normalizing to
-exact zeros like the decode kernel's empty-cache case.  The decode
-kernel's per-slot ``cur_pos`` vector and the slot scheduler's inactive
-slots (kv_len == 0) reuse this same convention.
+Positional and block-skipped, always in LOGICAL positions (block index *
+block_k + offset — the table only relocates storage): causal and
+sliding-window predicates are evaluated per TILE first and a fully-masked
+tile skips its matmuls entirely via ``pl.when`` — a sliding-window layer
+therefore costs O(S * window) compute, not O(S^2).  (Skipped tiles are
+still DMA'd; see the ROADMAP "prefill DMA skip" item.)  ``q_start``
+(scalar: chunk offset of query row 0) and ``kv_len`` (per-request valid
+KV count) make the same executable serve chunked, ragged prefill:
+element masks re-apply after the running-max update (an all-masked tile
+has s == m_new == NEG_INF and exp(0) == 1), and padded/garbage rows end
+with l == 0, normalizing to exact zeros like the decode kernel's
+empty-cache case.  The decode kernel's per-slot ``cur_pos`` vector and
+the slot scheduler's inactive slots (kv_len == 0) reuse this same
+convention.
 
 A bf16/f32 K/V stream runs through the same kernel with scales == 1.
 The pure-jnp oracle is kernels/ref.py::prefill_attention_ref.
@@ -58,15 +72,20 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.tpu_compat import tpu_compiler_params
 
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, qs_ref, kl_ref, o_ref,
-            acc_ref, m_ref, l_ref, *, n_k: int, block_q: int, block_k: int,
-            groups: int, dim: int, causal: bool, window: int | None):
+def _kernel(tab_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, qs_ref, kl_ref,
+            o_ref, acc_ref, m_ref, l_ref, *, n_k: int, block_q: int,
+            block_k: int, groups: int, dim: int, causal: bool,
+            window: int | None):
+    # tab_ref: scalar-prefetch block table — consumed by the K/V index
+    # maps only; positions below are logical
+    del tab_ref
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -142,6 +161,88 @@ def _fit_block(s: int, target: int) -> int:
 
 @functools.partial(
     jax.jit,
+    static_argnames=("causal", "window", "block_q", "out_dtype",
+                     "interpret"))
+def prefill_attention_tiles(
+    q: jax.Array,          # (B, Sq, KV, G, D) float — prompt queries
+    k_pool: jax.Array,     # (pages, block_k, KV, D) int8 or float tiles
+    v_pool: jax.Array,     # (pages, block_k, KV, D)
+    block_tab: jax.Array,  # (B, KV-chunks) int32 page per logical block
+    k_scale: jax.Array,    # (KV,) f32 per-head dequant scale
+    v_scale: jax.Array,    # (KV,) f32 per-head dequant scale
+    q_start: jax.Array,    # scalar int32: absolute position of query row 0
+    kv_len: jax.Array,     # (B,) int32: valid KV count per request
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 256,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+):
+    """Kernel core: fused multi-query-row flash attention over
+    block-table-mapped KV tiles.  Returns (B, Sq, KV, G, D)."""
+    b, sq, kvh, g, d = q.shape
+    bk = k_pool.shape[1]
+    n_k = block_tab.shape[1]
+
+    bq = _fit_block(sq, block_q)
+    sq_p = -(-sq // bq) * bq
+    # prefill runs once per prompt (or chunk), so unlike the decode kernel
+    # a pad copy here is not on the per-token path — plain jnp.pad is fine
+    if sq_p != sq:
+        q = jnp.pad(q, [(0, 0), (0, sq_p - sq), (0, 0), (0, 0), (0, 0)])
+    n_q = sq_p // bq
+
+    # flatten GQA groups into the query-row axis: (B, KV, Sq*G, D) keeps
+    # every kernel tile a 2D matmul operand
+    q2 = jnp.transpose(q, (0, 2, 1, 3, 4)).reshape(b, kvh, sq_p * g, d)
+    rows = bq * g
+
+    kernel = functools.partial(
+        _kernel, n_k=n_k, block_q=bq, block_k=bk, groups=g, dim=d,
+        causal=causal, window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d),
+                         lambda bi, h, qi, ki, tab: (bi, h, qi, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda bi, h, qi, ki, tab: (tab[bi, ki], 0, h, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda bi, h, qi, ki, tab: (tab[bi, ki], 0, h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, qi, ki, tab: (h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, qi, ki, tab: (h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, qi, ki, tab: (0, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, qi, ki, tab: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, d),
+                               lambda bi, h, qi, ki, tab: (bi, h, qi, 0)),
+        scratch_shapes=_scratch(rows, d),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, sq_p * g, d), out_dtype),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(
+        block_tab.astype(jnp.int32),
+        q2,
+        k_pool,
+        v_pool,
+        k_scale.reshape(kvh, 1).astype(jnp.float32),
+        v_scale.reshape(kvh, 1).astype(jnp.float32),
+        jnp.reshape(q_start, (1, 1)).astype(jnp.int32),
+        jnp.reshape(jnp.broadcast_to(kv_len, (b,)), (b, 1)).astype(jnp.int32),
+    )
+    out = out.reshape(b, kvh, sq_p, g, d).transpose(0, 2, 1, 3, 4)
+    return out[:, :sq]
+
+
+@functools.partial(
+    jax.jit,
     static_argnames=("causal", "window", "block_q", "block_k", "out_dtype",
                      "interpret"))
 def prefill_attention_int8(
@@ -160,68 +261,30 @@ def prefill_attention_int8(
     out_dtype=jnp.float32,
     interpret: bool = False,
 ):
-    """Fused multi-query-row flash attention over a (possibly int8) KV
-    stream.  Returns (B, Sq, KV, G, D) in ``out_dtype``."""
-    b, sq, kvh, g, d = q.shape
+    """Dense entry point: a contiguous (B, Sk, KV, D) KV stream
+    degenerates to the identity block table over a free leading-axis
+    reshape — same kernel body as the paged layout."""
+    b = q.shape[0]
     sk = k.shape[1]
+    kvh, d = k.shape[2], k.shape[3]
 
-    bq = _fit_block(sq, block_q)
     bk = _fit_block(sk, block_k)
-    sq_p = -(-sq // bq) * bq
     sk_p = -(-sk // bk) * bk
-    # prefill runs once per prompt (or chunk), so unlike the decode kernel
-    # a pad copy here is not on the per-token path — plain jnp.pad is fine
-    if sq_p != sq:
-        q = jnp.pad(q, [(0, 0), (0, sq_p - sq), (0, 0), (0, 0), (0, 0)])
     if sk_p != sk:
         pad = [(0, 0), (0, sk_p - sk), (0, 0), (0, 0)]
         k = jnp.pad(k, pad)
         v = jnp.pad(v, pad)
-    n_q, n_k = sq_p // bq, sk_p // bk
-
-    # flatten GQA groups into the query-row axis: (B, KV, Sq*G, D) keeps
-    # every kernel tile a 2D matmul operand
-    q2 = jnp.transpose(q, (0, 2, 1, 3, 4)).reshape(b, kvh, sq_p * g, d)
-    rows = bq * g
-
-    kernel = functools.partial(
-        _kernel, n_k=n_k, block_q=bq, block_k=bk, groups=g, dim=d,
-        causal=causal, window=window)
-    out = pl.pallas_call(
-        kernel,
-        grid=(b, kvh, n_q, n_k),
-        in_specs=[
-            pl.BlockSpec((1, 1, rows, d), lambda bi, h, qi, ki: (bi, h, qi, 0)),
-            pl.BlockSpec((1, bk, 1, d), lambda bi, h, qi, ki: (bi, ki, h, 0)),
-            pl.BlockSpec((1, bk, 1, d), lambda bi, h, qi, ki: (bi, ki, h, 0)),
-            pl.BlockSpec((1, 1), lambda bi, h, qi, ki: (h, 0)),
-            pl.BlockSpec((1, 1), lambda bi, h, qi, ki: (h, 0)),
-            pl.BlockSpec((1, 1), lambda bi, h, qi, ki: (0, 0)),
-            pl.BlockSpec((1, 1), lambda bi, h, qi, ki: (bi, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, rows, d),
-                               lambda bi, h, qi, ki: (bi, h, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, kvh, sq_p * g, d), out_dtype),
-        scratch_shapes=_scratch(rows, d),
-        compiler_params=tpu_compiler_params(
-            ("parallel", "parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(
-        q2,
-        k,
-        v,
-        k_scale.reshape(kvh, 1).astype(jnp.float32),
-        v_scale.reshape(kvh, 1).astype(jnp.float32),
-        jnp.reshape(q_start, (1, 1)).astype(jnp.int32),
-        jnp.reshape(jnp.broadcast_to(kv_len, (b,)), (b, 1)).astype(jnp.int32),
-    )
-    out = out.reshape(b, kvh, sq_p, g, d).transpose(0, 2, 1, 3, 4)
-    return out[:, :sq]
+    n_k = sk_p // bk
+    k_pool = k.reshape(b * n_k, bk, kvh, d)
+    v_pool = v.reshape(b * n_k, bk, kvh, d)
+    tab = jnp.arange(b * n_k, dtype=jnp.int32).reshape(b, n_k)
+    return prefill_attention_tiles(
+        q, k_pool, v_pool, tab, k_scale, v_scale, q_start, kv_len,
+        causal=causal, window=window, block_q=block_q, out_dtype=out_dtype,
+        interpret=interpret)
 
 
 def _scratch(rows, d):
-    from jax.experimental.pallas import tpu as pltpu
-
     return [
         pltpu.VMEM((rows, d), jnp.float32),  # output accumulator
         pltpu.VMEM((rows, 1), jnp.float32),  # running max

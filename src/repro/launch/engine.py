@@ -1,0 +1,309 @@
+"""``Engine`` — the serving facade over the int8 FAT pipeline.
+
+Before this module, every serving surface (the CLI, the examples, the
+benchmark) re-assembled the same stack by hand: config -> model -> random
+or checkpointed params -> calibration pass -> int8 conversion -> jitted
+step functions -> cache sizing -> prefill/decode driver.  The Engine owns
+that assembly once:
+
+    engine = Engine.from_checkpoint(arch="smollm-135m", smoke=True)
+    # batched one-shot serving (prefill + scanned decode, AOT-compiled):
+    result = engine.generate_batch(batch, gen=16)
+    # continuous batching (slot scheduler; paged layout => prefix sharing):
+    completions = engine.generate(requests, max_slots=4)
+
+``from_checkpoint`` restores params via repro.checkpoint.manager when a
+directory is given (the ``{"params": ...}`` tree train.py writes) and
+falls back to seeded random init; either way it runs the paper's §2
+calibration pass and (unless ``fp=True``) the int8 weight conversion —
+the frozen-threshold artifact every layout of the KV cache relies on.
+
+The cache layout is an Engine-level knob (``cache_layout`` in
+{"dense", "ring", "paged"} + ``page_size``), threaded through
+``model.init_cache`` and the scheduler — callers never touch layout
+internals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.shapes import ShapeSpec
+from repro.core import api as A
+from repro.data import pipeline as DP
+from repro.launch import steps as ST
+from repro.models import build_model
+
+
+def prepare_int8(model, cfg, policy, params, calib_batches, *,
+                 convert: bool = True):
+    """Calibration + int8 conversion (the paper's deployment pipeline).
+
+    ``convert=False`` stops after calibration (bf16-weight ablations need
+    the thresholds but not a second, immediately-discarded param pytree).
+    """
+    qparams = A.init_qparams(model, params, policy)
+    calib = jax.jit(ST.make_calibrate_step(model, cfg, policy))
+    for b in calib_batches:
+        qparams = calib(params, qparams, b)
+    qparams = A.finalize_calibration(qparams, policy)
+    serve_params = (A.convert_to_int8(model, params, qparams, policy)
+                    if convert else params)
+    return serve_params, qparams
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    """Output of the single-stream batched path, with the steady-state
+    timings the CLI and benchmark report."""
+    tokens: jax.Array          # (B, gen) generated token ids
+    prefill_s: float           # AOT-compiled prefill wall time
+    decode_s: float            # decode wall time (gen - 1 steps)
+    prompt_tokens: int
+    gen_tokens: int
+
+
+class Engine:
+    """One assembled serving stack: model + converted params + finalized
+    thresholds + sampling policy + cache layout.  See module docstring."""
+
+    def __init__(self, model, cfg, policy: A.QuantPolicy, serve_params,
+                 qparams, *, mode: str = "int8", cache_layout: str = "ring",
+                 page_size: int = 64, prefill_chunk: Optional[int] = None,
+                 temperature: float = 0.0, top_p: float = 1.0,
+                 seed: int = 0):
+        from repro.cache import LAYOUTS
+
+        if cache_layout not in LAYOUTS:
+            raise ValueError(f"cache_layout must be one of {LAYOUTS}, got "
+                             f"{cache_layout!r}")
+        self.model, self.cfg, self.policy = model, cfg, policy
+        self.serve_params, self.qparams = serve_params, qparams
+        self.mode = mode
+        self.cache_layout = cache_layout
+        self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
+        self.temperature, self.top_p, self.seed = temperature, top_p, seed
+        self._scheduler = None
+        self._scheduler_key = None
+
+    # -- assembly ----------------------------------------------------------
+    @classmethod
+    def from_checkpoint(cls, arch: str = "smollm-135m", *,
+                        checkpoint_dir: Optional[str] = None,
+                        smoke: bool = True, fp: bool = False,
+                        kv_int8: bool = True,
+                        use_pallas: Optional[bool] = None,
+                        calib_batches: Optional[Sequence] = None,
+                        n_calib: int = 2, calib_batch: int = 4,
+                        calib_len: int = 32, init_seed: int = 0,
+                        **engine_kw) -> "Engine":
+        """Build a ready-to-serve Engine.
+
+        ``checkpoint_dir`` restores the newest ``{"params": ...}`` tree
+        written by launch/train.py (mesh-agnostic restore); without one,
+        params are seeded random init (smoke/bench usage).  ``fp`` serves
+        bf16 weights (baseline); ``kv_int8`` quantizes the KV cache.
+        ``calib_batches`` overrides the default data-pipeline calibration
+        stream (``n_calib`` batches of (calib_batch, calib_len) tokens).
+        Remaining ``engine_kw`` go to ``Engine.__init__`` (cache_layout,
+        page_size, temperature, ...).
+        """
+        cfg = get_config(arch, smoke=smoke)
+        model = build_model(cfg)
+        use_pallas = (jax.default_backend() == "tpu" if use_pallas is None
+                      else use_pallas)
+        policy = A.QuantPolicy(kv_int8=kv_int8, use_pallas=use_pallas)
+        params = model.init(jax.random.PRNGKey(init_seed))
+        if checkpoint_dir is not None:
+            from repro.checkpoint.manager import CheckpointManager
+
+            tree, _meta = CheckpointManager(checkpoint_dir).restore_latest()
+            params = tree["params"]
+
+        if calib_batches is None:
+            shape = ShapeSpec("engine", "train", calib_len, calib_batch)
+            spec = DP.spec_for(cfg, shape)
+            calib_batches = DP.calibration_batches(spec, n_calib)
+            for b in calib_batches:
+                b.pop("labels", None)
+
+        mode = "none" if fp else "int8"
+        if fp and not kv_int8:
+            serve_params, qparams = params, A.finalize_calibration(
+                A.init_qparams(model, params, policy), policy)
+        else:
+            # int8 weights and/or int8 KV both need the calibration pass;
+            # bf16-weight ablations skip the weight conversion
+            serve_params, qparams = prepare_int8(
+                model, cfg, policy, params, calib_batches, convert=not fp)
+        return cls(model, cfg, policy, serve_params, qparams, mode=mode,
+                   **engine_kw)
+
+    # -- introspection -----------------------------------------------------
+    def n_int8_weights(self) -> int:
+        return sum(1 for l in jax.tree.leaves(self.serve_params)
+                   if l.dtype == jnp.int8)
+
+    def init_cache(self, batch: int, max_len: int, **kw):
+        """Engine-configured cache: layout/page_size/kv_int8 applied."""
+        kw.setdefault("kv_int8", bool(self.policy.kv_int8))
+        kw.setdefault("layout", self.cache_layout)
+        kw.setdefault("page_size", self.page_size)
+        return self.model.init_cache(batch, max_len, self.cfg.dtype, **kw)
+
+    def _cache_len(self, prompt_len: int, gen: int) -> int:
+        """Single-stream cache sizing: padded prompt + generation budget,
+        rounded for the fused decode kernel (128 tiles) and the paged
+        layout (whole pages)."""
+        cap = prompt_len
+        if self.prefill_chunk:
+            # the cache must hold the PADDED prompt: chunked prefill
+            # writes whole chunks (garbage tails masked by lengths)
+            cap = -(-prompt_len // self.prefill_chunk) * self.prefill_chunk
+        max_len = cap + gen + (self.cfg.mm_patches
+                               if self.cfg.modality == "vlm" else 0)
+        if self.policy.use_pallas:
+            max_len = -(-max_len // 128) * 128
+        if self.cache_layout == "paged":
+            max_len = -(-max_len // self.page_size) * self.page_size
+        return max_len
+
+    # -- single-stream batched serving ------------------------------------
+    def generate_batch(self, batch: dict, gen: int, *,
+                       prompt_len: Optional[int] = None,
+                       loop: bool = False) -> GenerationResult:
+        """Serve one fixed batch: prefill the prompts, then decode ``gen``
+        tokens (the first comes from the prefill logits).  The decode
+        default is the single-dispatch scanned loop; ``loop=True`` keeps
+        the legacy per-token driver for comparison.  Executables are
+        AOT-compiled (lower().compile()) so the reported timings are
+        steady-state with no warm-up execution — and the cache buffer is
+        donated to decode, so the (possibly huge) cache is never resident
+        twice."""
+        model, cfg, policy = self.model, self.cfg, self.policy
+        mode = self.mode
+        tokens = batch["tokens"]
+        requests, s = tokens.shape
+        if prompt_len is None:
+            prompt_len = s
+        cache = self.init_cache(requests, self._cache_len(prompt_len, gen))
+
+        prefill = jax.jit(
+            ST.make_prefill_step(model, cfg, policy, mode=mode,
+                                 prefill_chunk=self.prefill_chunk),
+            donate_argnums=(3,))
+        if self.prefill_chunk:
+            # pad prompts to a chunk multiple; the per-request length
+            # vector masks the tail, so THIS executable serves any
+            # prompt length
+            toks, lengths = ST.pad_for_chunked_prefill(tokens,
+                                                       self.prefill_chunk)
+            prefill_args = (self.serve_params, self.qparams,
+                            {**batch, "tokens": toks}, cache, lengths)
+        else:
+            prefill_args = (self.serve_params, self.qparams, batch, cache)
+
+        prefill_x = prefill.lower(*prefill_args).compile()
+        key = jax.random.PRNGKey(self.seed)
+        t0 = time.time()
+        logits, cache = prefill_x(*prefill_args)
+        key, sub = jax.random.split(key)
+        next_tok = ST.sample_tokens(logits[:, -1, :], sub,
+                                    temperature=self.temperature,
+                                    top_p=self.top_p)
+        next_tok.block_until_ready()
+        prefill_s = time.time() - t0
+
+        pos0 = prompt_len + (cfg.mm_patches if cfg.modality == "vlm" else 0)
+        if loop:
+            decode = jax.jit(
+                ST.make_serve_step(model, cfg, policy, mode=mode),
+                donate_argnums=(3,))
+            decode_x = decode.lower(self.serve_params, self.qparams,
+                                    next_tok[:, None], cache, pos0).compile()
+            t0 = time.time()
+            toks_out = [next_tok]
+            for i in range(gen - 1):
+                nxt, lg, cache = decode_x(self.serve_params, self.qparams,
+                                          toks_out[-1][:, None], cache,
+                                          pos0 + i)
+                if self.temperature > 0:
+                    key, sub = jax.random.split(key)
+                    nxt = ST.sample_tokens(lg[:, -1, :], sub,
+                                           temperature=self.temperature,
+                                           top_p=self.top_p)
+                toks_out.append(nxt)
+            out = jnp.stack(toks_out, axis=1)
+        else:
+            decode_loop = jax.jit(
+                ST.make_decode_loop(model, cfg, policy, mode=mode,
+                                    n_steps=gen,
+                                    temperature=self.temperature,
+                                    top_p=self.top_p),
+                donate_argnums=(3,))
+            loop_x = decode_loop.lower(self.serve_params, self.qparams,
+                                       next_tok, cache, pos0, key).compile()
+            t0 = time.time()
+            out, cache = loop_x(self.serve_params, self.qparams, next_tok,
+                                cache, pos0, key)
+        out.block_until_ready()
+        decode_s = time.time() - t0
+        return GenerationResult(
+            tokens=out, prefill_s=prefill_s, decode_s=decode_s,
+            prompt_tokens=requests * prompt_len,
+            gen_tokens=int(out.shape[0]) * int(out.shape[1]))
+
+    # -- continuous batching -----------------------------------------------
+    def make_scheduler(self, *, max_slots: int = 4, prompt_cap: int = 64,
+                       gen_cap: int = 32, block_steps: int = 8,
+                       eos_id: int = -1, prefix_pages: Optional[int] = None):
+        """Build (or reuse) the slot scheduler for this engine's layout.
+        The scheduler is cached per parameter set so repeated
+        ``generate`` calls keep their compiled executables AND the paged
+        layout's prefix store (shared pages persist across calls)."""
+        from repro.launch.scheduler import SlotScheduler
+
+        # the key covers every knob the scheduler bakes in — including
+        # the engine-level ones — so mutating e.g. engine.prefill_chunk
+        # after a generate() call rebuilds instead of serving stale config
+        key = (max_slots, prompt_cap, gen_cap, block_steps, eos_id,
+               prefix_pages, self.cache_layout, self.page_size,
+               self.prefill_chunk, self.temperature, self.top_p, self.seed)
+        if self._scheduler is None or self._scheduler_key != key:
+            layout = ("paged" if self.cache_layout == "paged" else "dense")
+            self._scheduler = SlotScheduler(
+                self.model, self.cfg, self.policy, self.serve_params,
+                self.qparams, mode=self.mode, max_slots=max_slots,
+                prompt_cap=prompt_cap, gen_cap=gen_cap,
+                prefill_chunk=self.prefill_chunk, block_steps=block_steps,
+                cache_layout=layout, page_size=self.page_size,
+                prefix_pages=prefix_pages, temperature=self.temperature,
+                top_p=self.top_p, eos_id=eos_id, seed=self.seed)
+            self._scheduler_key = key
+        return self._scheduler
+
+    def generate(self, requests: Iterable, *, max_slots: int = 4,
+                 prompt_cap: Optional[int] = None,
+                 gen_cap: Optional[int] = None, block_steps: int = 8,
+                 eos_id: int = -1, max_blocks: Optional[int] = None):
+        """Continuous batching: stream ``requests`` (launch.scheduler
+        Request objects) through ``max_slots`` cache slots; returns
+        Completions in finish order.  With the paged layout, repeated
+        prompts admit through the prefix store with zero prefill FLOPs.
+        ``prompt_cap``/``gen_cap`` default to the queue's longest prompt
+        and largest budget."""
+        reqs = list(requests)
+        if prompt_cap is None:
+            prompt_cap = max((len(r.tokens) for r in reqs), default=64)
+        if gen_cap is None:
+            gen_cap = max((r.max_gen for r in reqs), default=32)
+        sched = self.make_scheduler(
+            max_slots=max_slots, prompt_cap=prompt_cap, gen_cap=gen_cap,
+            block_steps=block_steps, eos_id=eos_id)
+        return sched.run(reqs, max_blocks=max_blocks)

@@ -3,14 +3,16 @@
 The paper's frozen static thresholds (§2) are what make this possible:
 K/V dequant scales never change at serve time, so a request can be
 admitted into — or evicted from — a shared int8 KV cache without any
-recalibration.  The cache is one fixed-shape (max_slots, cache_len) int8
-region per layer; requests stream through slots while the COMPILED
-executables never change:
+recalibration.  The cache is one fixed-shape (max_slots, cache_len)
+region per layer behind the ``repro.cache.KVCache`` protocol (dense by
+default, paged with ``cache_layout="paged"``); requests stream through
+slots while the COMPILED executables never change:
 
   * admission runs the batch-1 chunked ragged prefill (one executable for
     every prompt length: tokens pad to ``prompt_cap``, the length vector
     does the ragged masking) and splices the resulting cache region into
-    the free slot with one dynamic-update-slice along the batch axis;
+    the free slot — a batch-axis dynamic-update-slice for the dense
+    layout, a page-pool scatter + block-table row write for paged;
   * decode runs ``steps.make_slot_decode_loop`` blocks: every slot at its
     own position (vector ``cur_pos`` through the fused decode kernel),
     inactive slots masked in attention, sampling, and cache writes;
@@ -18,16 +20,32 @@ executables never change:
     that the next admission's prefill overwrites (slots [0, prompt) and
     per-step decode writes cover every position a future mask can see).
 
+Prefix sharing (paged layout)
+-----------------------------
+Because the int8 scales are frozen and request-independent, a page
+written for one request is bit-valid for every other — so the paged
+scheduler keeps a host-side :class:`repro.cache.PrefixStore`: after a
+prompt prefills, its full pages are snapshotted into the pool's shared
+region (device copies, keyed by the prompt token hash) together with the
+prompt's last-position logits.  A later request with the SAME prompt
+admits with ZERO prefill FLOPs: its block-table row points at the shared
+pages, the partial tail page (the one decode will append into) is copied
+into the slot's private page, and the first token samples from the
+stored logits.  ``prefix_stats()`` / ``call_counts()`` expose the hit
+and skipped-prefill counters the acceptance test pins.
+
 Slot lifecycle (see docs/serving.md for the full diagram)::
 
-    FREE --admit(prefill into slot region)--> ACTIVE
+    FREE --admit(prefill into slot region | attach shared prefix)--> ACTIVE
     ACTIVE --EOS token / gen budget / cache full--> DRAINED
     DRAINED --collect output--> FREE
 
-Which slots are live, at which positions, with which arrival order is
-DATA (pos/active vectors), never SHAPE — so one compiled decode
-executable serves every admission pattern (verified by the
-jit-cache-miss-counting test in tests/test_scheduler.py).
+Which slots are live, at which positions, with which arrival order —
+and, for paged, which pages a slot's table points at — is DATA
+(pos/active vectors, block tables), never SHAPE: one compiled executable
+per piece serves every admission pattern (verified by the
+jit-cache-miss-counting tests in tests/test_scheduler.py and
+tests/test_cache.py).
 
 The host loop (``SlotScheduler.run``) interleaves admission and decode
 blocks: admit into every free slot, decode ``block_steps`` tokens, retire
@@ -44,6 +62,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache import (KVCache, PrefixEntry, PrefixStore, copy_pages,
+                         set_table_row, splice_dense_into_pages)
 from repro.core import api as A
 from repro.launch import steps as ST
 
@@ -64,25 +84,21 @@ class Completion:
     finished_by: str            # 'eos' | 'budget' | 'capacity'
 
 
+def _cache_map(fn, *trees):
+    """tree.map over cache pytrees with ``KVCache`` objects as leaves."""
+    return jax.tree.map(fn, *trees,
+                        is_leaf=lambda x: isinstance(x, KVCache))
+
+
 def _slot_cache_insert(cache, slot_cache, slot):
-    """Splice a batch-1 cache pytree into slot ``slot`` of the batch cache.
-
-    KV leaves are (..., B, S, KV, D) — batch axis at ndim-4 in both the
-    per-layer and the stacked-scanned layout — and get a dynamic-update-
-    slice along it.  Lower-rank leaves (per-head dequant scales) are
-    request-independent (frozen calibration), identical for every
-    admission: take the slot cache's copy wholesale, which also fixes up
-    the ones-initialized scales of a never-admitted batch cache.
-    """
+    """Splice a batch-1 cache pytree into slot ``slot`` of the batch
+    cache via each layer's ``KVCache.splice_slot`` (dense layout: one
+    dynamic-update-slice along the batch axis per layer; scale leaves
+    come from the slot cache — frozen calibration, identical for every
+    admission)."""
     slot = jnp.asarray(slot, jnp.int32)
-
-    def write(big, small):
-        if big.ndim < 4:
-            return small
-        return jax.lax.dynamic_update_slice_in_dim(
-            big, small.astype(big.dtype), slot, big.ndim - 4)
-
-    return jax.tree.map(write, cache, slot_cache)
+    return _cache_map(lambda big, small: big.splice_slot(small, slot),
+                      cache, slot_cache)
 
 
 class SlotScheduler:
@@ -90,9 +106,9 @@ class SlotScheduler:
 
     Parameters
     ----------
-    model, cfg, policy, mode : the serving stack (same objects serve.py
-        builds); attention-only text configs with dense caches only — the
-        same restriction as chunked prefill, checked at construction.
+    model, cfg, policy, mode : the serving stack (same objects the Engine
+        builds); attention-only text configs only — the same restriction
+        as chunked prefill, checked at construction.
     serve_params, qparams : converted weights + finalized thresholds.
     max_slots : decode batch size (concurrent requests).
     prompt_cap : maximum prompt length; every prompt pads to this, the
@@ -106,6 +122,12 @@ class SlotScheduler:
     block_steps : decode-block length; admission happens at block
         boundaries, so smaller blocks = lower admission latency, larger
         blocks = fewer dispatches.
+    cache_layout : "dense" (default) or "paged"; paged turns on
+        prompt-prefix sharing through the page pool ("ring" is accepted
+        as an alias of dense — the scheduler requires absolute slots).
+    page_size : paged-layout page length (tokens per page).
+    prefix_pages : size of the pool's shared prefix region, in pages
+        (None = room for two full-capacity prompts).
     temperature, top_p, seed : sampling (greedy when temperature == 0).
     eos_id : generation stops for a slot when it emits this token
         (< 0 disables).
@@ -115,6 +137,8 @@ class SlotScheduler:
                  qparams, *, mode: str = "int8", max_slots: int = 4,
                  prompt_cap: int = 64, gen_cap: int = 32,
                  prefill_chunk: int | None = None, block_steps: int = 8,
+                 cache_layout: str = "dense", page_size: int = 64,
+                 prefix_pages: int | None = None,
                  temperature: float = 0.0, top_p: float = 1.0,
                  eos_id: int = -1, seed: int = 0):
         kinds = {cfg.layer_kind(i) for i in range(cfg.n_layers)}
@@ -127,6 +151,12 @@ class SlotScheduler:
             raise ValueError(
                 "slot scheduler needs dense caches: SWA ring buffers drop "
                 f"absolute slots (got windows={sorted(map(str, wins))})")
+        if cache_layout == "ring":
+            cache_layout = "dense"   # no windows here: ring == dense
+        if cache_layout not in ("dense", "paged"):
+            raise ValueError(
+                f"slot scheduler cache_layout must be dense or paged, got "
+                f"{cache_layout!r}")
         self.model, self.cfg = model, cfg
         self.policy, self.mode = policy, mode
         self.serve_params, self.qparams = serve_params, qparams
@@ -138,25 +168,65 @@ class SlotScheduler:
         self.block_steps = block_steps
         self.temperature, self.top_p = temperature, top_p
         self.eos_id = eos_id
+        self.cache_layout = cache_layout
+        self.page_size = page_size
         cache_len = self.prompt_cap + gen_cap
         if policy.use_pallas:
             # tile the cache length for the fused decode kernel — a
             # non-tiling length pad-copies the cache every step
             cache_len = -(-cache_len // 128) * 128
+        if cache_layout == "paged":
+            # capacity must equal n_blocks * page_size so the dense
+            # batch-1 prefill result reshapes into whole pages
+            cache_len = -(-cache_len // page_size) * page_size
         self.cache_len = cache_len
         self._key = jax.random.PRNGKey(seed)
 
         kv_int8 = bool(policy.kv_int8)
         self._kv_int8 = kv_int8
-        # batch-1 slot cache template for admissions (prefill never
-        # donates it, so one allocation serves every admission)
+        self._n_blocks = cache_len // page_size if cache_layout == "paged" \
+            else 0
+        if prefix_pages is None:
+            prefix_pages = 2 * self._n_blocks
+        self._prefix_pages = prefix_pages if cache_layout == "paged" else 0
+        # batch-1 slot cache template for admissions: DENSE regardless of
+        # the batch layout — one compiled prefill executable serves every
+        # layout, and the splice re-homes the tiles (prefill never donates
+        # the template, so one allocation serves every admission)
         self._slot_cache0 = model.init_cache(1, cache_len, cfg.dtype,
-                                             kv_int8=kv_int8)
+                                             kv_int8=kv_int8,
+                                             layout="dense")
+        # the resident batch cache lives on the instance so page contents
+        # (and the prefix store pointing into them) survive across run()s
+        self._cache = model.init_cache(
+            max_slots, cache_len, cfg.dtype, kv_int8=kv_int8,
+            layout=cache_layout, page_size=page_size,
+            extra_pages=self._prefix_pages)
+
+        # paged bookkeeping: slot-private page rows + the shared-region
+        # prefix store (host-side; device content lives in the pool)
+        if cache_layout == "paged":
+            nb = self._n_blocks
+            self._private_rows = [
+                np.arange(b * nb, (b + 1) * nb, dtype=np.int32)
+                for b in range(max_slots)]
+            self._prefix = PrefixStore(max_slots * nb, self._prefix_pages,
+                                       page_size)
+        else:
+            self._private_rows = None
+            self._prefix = None
+
         # trace counting: the counter bumps inside the to-be-jitted Python
         # body, which only runs when the jit cache misses — so the count
         # IS the number of compiled variants, measured on public jit
-        # behavior (and per instance: each wrapper is a fresh closure)
-        self._trace_counts = {"prefill": 0, "decode": 0, "insert": 0}
+        # behavior (and per instance: each wrapper is a fresh closure).
+        # call counts tick on every invocation (host-side): the prefix-
+        # sharing acceptance pins prefill CALLS, not just traces.
+        pieces = ["prefill", "decode", "insert"]
+        if cache_layout == "paged":
+            pieces += ["set_row", "copy_page"]
+        self._trace_counts = {p: 0 for p in pieces}
+        self._call_counts = {p: 0 for p in pieces}
 
         def counted(name, fn):
             def wrapper(*args):
@@ -164,21 +234,57 @@ class SlotScheduler:
                 return fn(*args)
             return wrapper
 
-        self._prefill = jax.jit(counted("prefill", ST.make_prefill_step(
+        self._prefill_fn = jax.jit(counted("prefill", ST.make_prefill_step(
             model, cfg, policy, mode=mode, prefill_chunk=prefill_chunk)))
-        self._decode = jax.jit(counted("decode", ST.make_slot_decode_loop(
+        self._decode_fn = jax.jit(counted("decode", ST.make_slot_decode_loop(
             model, cfg, policy, mode=mode, n_steps=block_steps,
             temperature=temperature, top_p=top_p, eos_id=eos_id)),
             donate_argnums=(3,))
-        self._insert = jax.jit(counted("insert", _slot_cache_insert),
-                               donate_argnums=(0,))
+        if cache_layout == "paged":
+            self._insert_fn = jax.jit(
+                counted("insert", lambda c, sc, row: _cache_map(
+                    lambda big, small: splice_dense_into_pages(big, small,
+                                                               row),
+                    c, sc)),
+                donate_argnums=(0,))
+            self._set_row_fn = jax.jit(
+                counted("set_row", lambda c, slot, row: _cache_map(
+                    lambda big: set_table_row(big, slot, row), c)),
+                donate_argnums=(0,))
+            self._copy_page_fn = jax.jit(
+                counted("copy_page", lambda c, src, dst: _cache_map(
+                    lambda big: copy_pages(big, src, dst), c)),
+                donate_argnums=(0,))
+        else:
+            self._insert_fn = jax.jit(counted("insert", _slot_cache_insert),
+                                      donate_argnums=(0,))
 
     # -- observability ----------------------------------------------------
     def executable_counts(self) -> dict:
-        """Number of times each of the three pieces was TRACED (== number
-        of compiled variants) — the no-retrace contract says each stays
-        at 1 across every admission pattern."""
+        """Number of times each jitted piece was TRACED (== number of
+        compiled variants) — the no-retrace contract says each stays at 1
+        across every admission pattern (including shared-prefix
+        admissions: block-table rows and page ids are data)."""
         return dict(self._trace_counts)
+
+    def call_counts(self) -> dict:
+        """Host-side invocation counts per piece.  ``prefill`` is the
+        number of admissions that actually ran the model — a prefix-store
+        hit admits without bumping it (the zero-prefill-FLOPs counter)."""
+        return dict(self._call_counts)
+
+    def prefix_stats(self) -> dict:
+        """Prefix-sharing counters (paged layout; empty dict for dense)."""
+        return self._prefix.stats() if self._prefix is not None else {}
+
+    # -- counted invocation helpers ---------------------------------------
+    def _prefill(self, *args):
+        self._call_counts["prefill"] += 1
+        return self._prefill_fn(*args)
+
+    def _decode(self, *args):
+        self._call_counts["decode"] += 1
+        return self._decode_fn(*args)
 
     # -- one serving session ----------------------------------------------
     def run(self, requests: Iterable[Request],
@@ -198,8 +304,6 @@ class SlotScheduler:
         last_tok = np.zeros((B,), np.int32)
         slot_req: list[Optional[Request]] = [None] * B
         slot_out: list[list] = [[] for _ in range(B)]
-        cache = self.model.init_cache(B, self.cache_len, self.cfg.dtype,
-                                      kv_int8=self._kv_int8)
         done: list[Completion] = []
         n_blocks = 0
 
@@ -210,6 +314,8 @@ class SlotScheduler:
             slot_req[slot] = None
             slot_out[slot] = []
             active[slot] = False
+            if self._prefix is not None:
+                self._prefix.release(slot)
 
         while queue or active.any():
             # -- admission: fill every free slot from the queue ------------
@@ -217,7 +323,7 @@ class SlotScheduler:
                 if slot_req[slot] is not None or not queue:
                     continue
                 req = queue.popleft()
-                cache, t0 = self._admit(cache, slot, req)
+                t0 = self._admit(slot, req)
                 slot_req[slot] = req
                 slot_out[slot] = [int(t0)]
                 pos[slot] = len(req.tokens)
@@ -231,9 +337,11 @@ class SlotScheduler:
                 continue
 
             # -- one decode block over the slot batch ----------------------
-            toks, emitted, cache, pos_d, active_d, self._key = self._decode(
-                self.serve_params, self.qparams, jnp.asarray(last_tok),
-                cache, jnp.asarray(pos), jnp.asarray(active), self._key)
+            toks, emitted, self._cache, pos_d, active_d, self._key = \
+                self._decode(
+                    self.serve_params, self.qparams, jnp.asarray(last_tok),
+                    self._cache, jnp.asarray(pos), jnp.asarray(active),
+                    self._key)
             toks = np.asarray(toks)
             emitted = np.asarray(emitted)
             pos_new = np.asarray(pos_d)
@@ -272,12 +380,15 @@ class SlotScheduler:
             n_blocks += 1
             if max_blocks is not None and n_blocks >= max_blocks:
                 break
+        # no resident remains (or the run was cut): drop any prefix-store
+        # references this run's slots held so unused entries stay evictable
+        if self._prefix is not None:
+            for slot in range(B):
+                self._prefix.release(slot)
         return done
 
     # -- admission ---------------------------------------------------------
-    def _admit(self, cache, slot: int, req: Request):
-        """Chunked-prefill the prompt into a batch-1 cache, splice it into
-        ``slot``'s region, and return (cache, first generated token)."""
+    def _check(self, req: Request):
         L = int(len(req.tokens))
         if L > self.prompt_cap:
             raise ValueError(
@@ -291,14 +402,101 @@ class SlotScheduler:
             raise ValueError(
                 f"request {req.rid}: max_gen must be >= 1 (the first "
                 "token is sampled at admission)")
+        return L
+
+    def _sample_t0(self, logits) -> int:
+        self._key, sub = jax.random.split(self._key)
+        t0 = ST.sample_tokens(jnp.asarray(logits)[:, -1, :], sub,
+                              temperature=self.temperature, top_p=self.top_p)
+        return int(t0[0])
+
+    def _admit(self, slot: int, req: Request) -> int:
+        """Admit ``req`` into ``slot`` and return its first generated
+        token.  Dense: chunked-prefill the prompt into the batch-1
+        template and splice it into the slot's region.  Paged: try the
+        prefix store first — a full-prompt hit attaches the shared pages
+        (block-table row write + one tail-page copy) and samples from the
+        stored logits, running ZERO prefill FLOPs; a miss prefills,
+        scatters into the slot's private pages, and registers the prompt
+        for future sharers."""
+        L = self._check(req)
+        key = tuple(int(t) for t in np.asarray(req.tokens))
+
+        if self._prefix is not None:
+            entry = self._prefix.lookup(key, slot)
+            if entry is not None:
+                return self._attach_prefix(slot, entry)
+
         toks = np.zeros((1, self.prompt_cap), np.int32)
         toks[0, :L] = np.asarray(req.tokens, np.int32)
         lengths = jnp.asarray([L], jnp.int32)
         logits, slot_cache = self._prefill(
             self.serve_params, self.qparams, {"tokens": jnp.asarray(toks)},
             self._slot_cache0, lengths)
-        self._key, sub = jax.random.split(self._key)
-        t0 = ST.sample_tokens(logits[:, -1, :], sub,
-                              temperature=self.temperature, top_p=self.top_p)
-        cache = self._insert(cache, slot_cache, jnp.asarray(slot, jnp.int32))
-        return cache, int(t0[0])
+        if self._prefix is None:
+            self._call_counts["insert"] += 1
+            self._cache = self._insert_fn(self._cache, slot_cache,
+                                          jnp.asarray(slot, jnp.int32))
+        else:
+            row = self._private_rows[slot]
+            self._call_counts["insert"] += 1
+            self._cache = self._insert_fn(self._cache, slot_cache,
+                                          jnp.asarray(row))
+            self._set_row(slot, row)
+            self._register_prefix(key, L, row, logits)
+        return self._sample_t0(logits)
+
+    # -- paged plumbing ----------------------------------------------------
+    def _set_row(self, slot: int, row: np.ndarray):
+        self._call_counts["set_row"] += 1
+        self._cache = self._set_row_fn(self._cache,
+                                       jnp.asarray(slot, jnp.int32),
+                                       jnp.asarray(row, jnp.int32))
+
+    def _copy_pages(self, pairs: Sequence[tuple]):
+        """One fixed-shape copy dispatch for up to n_blocks (src, dst)
+        page pairs: unused entries repeat the first pair (duplicate dst
+        with identical src — a deterministic re-write), so every
+        registration/attach shares ONE compiled executable regardless of
+        how many pages the prompt spans."""
+        if not pairs:
+            return
+        self._call_counts["copy_page"] += 1
+        padded = list(pairs) + [pairs[0]] * (self._n_blocks - len(pairs))
+        src = jnp.asarray([p[0] for p in padded], jnp.int32)
+        dst = jnp.asarray([p[1] for p in padded], jnp.int32)
+        self._cache = self._copy_page_fn(self._cache, src, dst)
+
+    def _register_prefix(self, key, L, private_row, logits):
+        """Snapshot the freshly-prefilled prompt pages into the shared
+        region (device page copies — no model FLOPs) and store the
+        last-position logits so a future identical prompt skips prefill
+        entirely.  Opportunistic: silently skipped when the shared region
+        is full of in-use entries."""
+        alloc = self._prefix.reserve(key, L)
+        if alloc is None:
+            return
+        pages, tail = alloc
+        n_full = len(pages)
+        pairs = [(int(private_row[j]), int(dst))
+                 for j, dst in enumerate(pages)]
+        if tail is not None:
+            pairs.append((int(private_row[n_full]), int(tail)))
+        self._copy_pages(pairs)
+        self._prefix.register(key, PrefixEntry(
+            pages=pages, tail_page=tail, length=L,
+            logits=np.asarray(logits)))
+
+    def _attach_prefix(self, slot: int, entry: PrefixEntry) -> int:
+        """Full-prompt hit: point the slot's table row at the shared
+        pages; the partial tail page (decode's first append target) is
+        copied into the slot's private page so shared pages stay
+        immutable.  No prefill executable runs."""
+        row = self._private_rows[slot].copy()
+        n_full = len(entry.pages)
+        row[:n_full] = entry.pages
+        self._set_row(slot, row)
+        if entry.tail_page is not None:
+            self._copy_pages([(int(entry.tail_page),
+                               int(self._private_rows[slot][n_full]))])
+        return self._sample_t0(entry.logits)

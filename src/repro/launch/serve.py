@@ -1,21 +1,22 @@
-"""Serving driver: int8 FAT-quantized model, batched requests.
+"""Serving CLI: int8 FAT-quantized model, batched requests, one Engine.
 
-Pipeline: calibrate -> (optional FAT fine-tune) -> convert_to_int8 ->
-prefill each request batch -> decode N tokens.  The whole resident
+All assembly (calibrate -> convert_to_int8 -> step functions -> cache
+layout) lives in ``launch/engine.py::Engine``; this module only parses
+flags, builds requests, runs the engine, and prints.  The whole resident
 state is int8: weights (the paper's "ready to run on mobile phones"
 artifact, here TPU-shaped) AND the KV cache (per-head static thresholds
 from the same §2 calibration pass, frozen at finalize_calibration) — so
 BOTH attention phases stream half the HBM bytes and nothing is computed
 "on the fly".
 
-The engine is two fused Pallas kernels over the same int8 cache
-(``--pallas``): flash-prefill (kernels/prefill_attention.py — the prompt's
-K/V quantize once and are attended AND appended as the same tiles) and
-flash-decode (kernels/decode_attention.py).  The decode loop is a single
-compiled ``jax.lax.scan`` over the generation (steps.make_decode_loop): N
-tokens cost one dispatch instead of N, with (token, cache, position, PRNG
-key) carried as scan state.  ``--loop`` keeps the legacy per-token Python
-loop for comparison (benchmarks/serve_bench.py tracks the ratio).
+The engine is two fused Pallas kernels over the same int8 KV cache
+(``--pallas``): flash-prefill and flash-decode, both reading KV tiles
+through the cache's kernel view — an identity block table for the
+dense/ring layouts, the page table for ``--cache-layout paged``.  The
+decode loop is a single compiled ``jax.lax.scan`` over the generation
+(steps.make_decode_loop): N tokens cost one dispatch instead of N.
+``--loop`` keeps the legacy per-token Python loop for comparison
+(benchmarks/serve_bench.py tracks the ratio).
 
 ``--prefill-chunk N`` switches prefill to the chunked ragged pipeline:
 one lax.scan over fixed-size prompt chunks plus a per-request length
@@ -30,6 +31,14 @@ each admission runs the chunked prefill into a free slot's cache region,
 and decode blocks advance every live slot at its own position — one
 compiled decode executable for every admission pattern.
 
+``--cache-layout {dense,ring,paged}`` picks the KV-cache layout behind
+the ``repro.cache.KVCache`` protocol: ``ring`` (default) gives sliding-
+window layers a window-sized ring buffer and everything else a dense
+cache; ``dense`` forces absolute slots everywhere; ``paged`` switches to
+a page pool + per-slot block tables (``--page-size``), which with
+``--max-slots`` turns on prompt prefix sharing — a repeated prompt
+admits with zero prefill FLOPs through the scheduler's prefix store.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
       --requests 4 --prompt-len 32 --gen 16
@@ -40,6 +49,8 @@ Usage:
          --temperature T --top-p P --seed S (sampled decoding)
          --max-slots N (continuous-batching scheduler)
          --block-steps N --eos-id T (scheduler decode-block / EOS knobs)
+         --cache-layout {dense,ring,paged} --page-size N (KV layout)
+         --ckpt-dir DIR (restore trained params instead of random init)
 """
 from __future__ import annotations
 
@@ -50,29 +61,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
 from repro.configs.shapes import ShapeSpec
-from repro.core import api as A
 from repro.data import pipeline as DP
-from repro.launch import steps as ST
-from repro.models import build_model
-
-
-def prepare_int8(model, cfg, policy, params, calib_batches, *,
-                 convert: bool = True):
-    """Calibration + int8 conversion (the paper's deployment pipeline).
-
-    ``convert=False`` stops after calibration (bf16-weight ablations need
-    the thresholds but not a second, immediately-discarded param pytree).
-    """
-    qparams = A.init_qparams(model, params, policy)
-    calib = jax.jit(ST.make_calibrate_step(model, cfg, policy))
-    for b in calib_batches:
-        qparams = calib(params, qparams, b)
-    qparams = A.finalize_calibration(qparams, policy)
-    serve_params = (A.convert_to_int8(model, params, qparams, policy)
-                    if convert else params)
-    return serve_params, qparams
+# re-export: the deployment pipeline lives with the Engine now
+from repro.launch.engine import Engine, prepare_int8  # noqa: F401
 
 
 def ragged_requests(spec, n_requests, prompt_len, gen, *, seed=12345):
@@ -93,36 +85,38 @@ def ragged_requests(spec, n_requests, prompt_len, gen, *, seed=12345):
     return reqs
 
 
-def run_continuous(args, model, cfg, policy, serve_params, qparams, mode):
+def run_continuous(args, engine: Engine):
     """--max-slots path: stream --requests ragged requests through the
     slot scheduler and report aggregate throughput."""
-    from repro.launch.scheduler import SlotScheduler
-
-    sched = SlotScheduler(
-        model, cfg, policy, serve_params, qparams, mode=mode,
-        max_slots=args.max_slots, prompt_cap=args.prompt_len,
-        gen_cap=args.gen, prefill_chunk=args.prefill_chunk,
-        block_steps=args.block_steps, temperature=args.temperature,
-        top_p=args.top_p, eos_id=args.eos_id, seed=args.seed)
-
-    shape = ShapeSpec("cli", "train", args.prompt_len, args.requests)
-    spec = DP.spec_for(cfg, shape)
+    spec = DP.spec_for(engine.cfg, ShapeSpec("cli", "train",
+                                             args.prompt_len, args.requests))
     reqs = ragged_requests(spec, args.requests, args.prompt_len, args.gen)
     t0 = time.time()
-    completions = sched.run(reqs)
+    completions = engine.generate(
+        reqs, max_slots=args.max_slots, prompt_cap=args.prompt_len,
+        gen_cap=args.gen, block_steps=args.block_steps, eos_id=args.eos_id)
     wall = time.time() - t0
+    sched = engine.make_scheduler(
+        max_slots=args.max_slots, prompt_cap=args.prompt_len,
+        gen_cap=args.gen, block_steps=args.block_steps, eos_id=args.eos_id)
     n_new = sum(len(c.tokens) for c in completions)
     n_prompt = sum(c.prompt_len for c in completions)
-    print(f"[serve] continuous batching: {len(completions)} requests "
+    print(f"[serve] continuous batching ({sched.cache_layout}): "
+          f"{len(completions)} requests "
           f"through {args.max_slots} slots (block={args.block_steps}) | "
           f"prompt lens {sorted({c.prompt_len for c in completions})} | "
           f"{n_new} tokens in {wall*1e3:.1f} ms "
           f"({n_new/max(wall,1e-9):.0f} gen tok/s, "
           f"{(n_new+n_prompt)/max(wall,1e-9):.0f} total tok/s)")
     counts = sched.executable_counts()
-    print(f"[serve] executables: prefill={counts['prefill']} "
-          f"decode={counts['decode']} insert={counts['insert']} "
-          "(1 each == no retrace across the whole ragged run)")
+    print(f"[serve] executables: " +
+          " ".join(f"{k}={v}" for k, v in counts.items()) +
+          " (1 each == no retrace across the whole ragged run)")
+    if sched.cache_layout == "paged":
+        stats = sched.prefix_stats()
+        print(f"[serve] prefix store: {stats['hits']} hits / "
+              f"{stats['misses']} misses | {stats['shared_tokens']} prompt "
+              f"tokens served from shared pages (zero prefill FLOPs)")
     for c in completions[:2]:
         print(f"  req{c.rid}: prompt_len={c.prompt_len} "
               f"finished_by={c.finished_by} -> {c.tokens}")
@@ -166,131 +160,63 @@ def main():
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="EOS token id for the scheduler (< 0 disables; a "
                          "slot stops generating when it emits this)")
+    ap.add_argument("--cache-layout", default="ring",
+                    choices=["dense", "ring", "paged"],
+                    help="KV-cache layout (repro.cache): ring = SWA layers "
+                         "ring-buffered, rest dense (default); dense = "
+                         "absolute slots everywhere; paged = page pool + "
+                         "block tables (enables prompt prefix sharing "
+                         "under --max-slots)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="tokens per page for --cache-layout paged")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore trained params from a launch/train.py "
+                         "checkpoint directory (default: random init)")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    model = build_model(cfg)
-    kv_int8 = not args.no_kv_int8
     use_pallas = (jax.default_backend() == "tpu" if args.pallas is None
                   else args.pallas)
-    policy = A.QuantPolicy(kv_int8=kv_int8, use_pallas=use_pallas)
-    params = model.init(jax.random.PRNGKey(0))
-
-    shape = ShapeSpec("cli", "train", args.prompt_len, args.requests)
-    spec = DP.spec_for(cfg, shape)
-    calib = DP.calibration_batches(spec, 2)
-    for b in calib:
-        b.pop("labels", None)
-
-    mode = "none" if args.fp else "int8"
-    if args.fp and not kv_int8:
-        serve_params, qparams = params, A.finalize_calibration(
-            A.init_qparams(model, params, policy), policy)
-    else:
-        # int8 weights and/or int8 KV both need the calibration pass;
-        # bf16-weight ablations skip the weight conversion
-        serve_params, qparams = prepare_int8(model, cfg, policy, params,
-                                             calib, convert=not args.fp)
-        if not args.fp:
-            n_int8 = sum(1 for l in jax.tree.leaves(serve_params)
-                         if l.dtype == jnp.int8)
-            print(f"[serve] converted: {n_int8} int8 weight tensors resident")
+    engine = Engine.from_checkpoint(
+        args.arch, checkpoint_dir=args.ckpt_dir, smoke=args.smoke,
+        fp=args.fp, kv_int8=not args.no_kv_int8, use_pallas=use_pallas,
+        calib_batch=args.requests, calib_len=args.prompt_len,
+        cache_layout=args.cache_layout, page_size=args.page_size,
+        prefill_chunk=args.prefill_chunk, temperature=args.temperature,
+        top_p=args.top_p, seed=args.seed)
+    if not args.fp:
+        print(f"[serve] converted: {engine.n_int8_weights()} int8 weight "
+              "tensors resident")
 
     if args.max_slots:
-        return run_continuous(args, model, cfg, policy, serve_params,
-                              qparams, mode)
-
-    # cache (arg 3) is donated: the decode carry reuses the input buffer
-    # instead of keeping two copies of the (possibly huge) cache resident
-    prefill = jax.jit(ST.make_prefill_step(model, cfg, policy, mode=mode,
-                                           prefill_chunk=args.prefill_chunk),
-                      donate_argnums=(3,))
+        return run_continuous(args, engine)
 
     # batched requests from the pipeline (prompt = first prompt_len tokens)
+    spec = DP.spec_for(engine.cfg, ShapeSpec("cli", "train",
+                                             args.prompt_len, args.requests))
     batch = DP.make_batch(spec, 12345)
     batch.pop("labels", None)
-    prompt_cap = args.prompt_len
-    if args.prefill_chunk:
-        # the cache must hold the PADDED prompt: chunked prefill writes
-        # whole chunks (garbage tail slots are masked by the length vector)
-        prompt_cap = -(-args.prompt_len // args.prefill_chunk
-                       ) * args.prefill_chunk
-    max_len = prompt_cap + args.gen + (
-        cfg.mm_patches if cfg.modality == "vlm" else 0)
-    if use_pallas:
-        # tile the cache length for the fused decode kernel — a non-tiling
-        # length forces it to pad-copy the cache every step
-        max_len = -(-max_len // 128) * 128
-    cache = model.init_cache(args.requests, max_len, cfg.dtype,
-                             kv_int8=kv_int8)
-    if kv_int8:
-        n_kv8 = sum(1 for l in jax.tree.leaves(cache)
+    if not args.no_kv_int8:
+        # shape-only: count int8 KV leaves without allocating a cache
+        abstract = jax.eval_shape(
+            lambda: engine.init_cache(args.requests,
+                                      engine._cache_len(args.prompt_len,
+                                                        args.gen)))
+        n_kv8 = sum(1 for l in jax.tree.leaves(abstract)
                     if l.dtype == jnp.int8)
-        print(f"[serve] kv cache: {n_kv8} int8 KV tensors resident")
+        print(f"[serve] kv cache: {n_kv8} int8 KV tensors resident "
+              f"({engine.cache_layout} layout)")
 
-    if args.prefill_chunk:
-        # pad prompts to a chunk multiple; the per-request length vector
-        # masks the tail, so THIS executable serves any prompt length
-        batch["tokens"], lengths = ST.pad_for_chunked_prefill(
-            batch["tokens"], args.prefill_chunk)
-        prefill_args = (serve_params, qparams, batch, cache, lengths)
-    else:
-        prefill_args = (serve_params, qparams, batch, cache)
-
-    # AOT-compile (lower().compile()) and time the resulting executables:
-    # steady-state numbers with no warm-up execution — lowering never runs
-    # the computation or consumes donated buffers, so the cache is not
-    # copied or doubled during startup
-    prefill_x = prefill.lower(*prefill_args).compile()
-    t0 = time.time()
-    logits, cache = prefill_x(*prefill_args)
-    key = jax.random.PRNGKey(args.seed)
-    key, sub = jax.random.split(key)
-    next_tok = ST.sample_tokens(logits[:, -1, :], sub,
-                                temperature=args.temperature,
-                                top_p=args.top_p)
-    next_tok.block_until_ready()
-    prefill_s = time.time() - t0
-
-    pos0 = args.prompt_len + (cfg.mm_patches if cfg.modality == "vlm" else 0)
-    if args.loop:
-        decode = jax.jit(ST.make_serve_step(model, cfg, policy, mode=mode),
-                         donate_argnums=(3,))
-        decode_x = decode.lower(serve_params, qparams, next_tok[:, None],
-                                cache, pos0).compile()
-        t0 = time.time()
-        toks = [next_tok]
-        for i in range(args.gen - 1):
-            nxt, logits, cache = decode_x(
-                serve_params, qparams, toks[-1][:, None], cache, pos0 + i)
-            if args.temperature > 0:
-                key, sub = jax.random.split(key)
-                nxt = ST.sample_tokens(logits[:, -1, :], sub,
-                                       temperature=args.temperature,
-                                       top_p=args.top_p)
-            toks.append(nxt)
-        out = jnp.stack(toks, axis=1)
-    else:
-        decode_loop = jax.jit(
-            ST.make_decode_loop(model, cfg, policy, mode=mode,
-                                n_steps=args.gen,
-                                temperature=args.temperature,
-                                top_p=args.top_p),
-            donate_argnums=(3,))
-        loop_x = decode_loop.lower(serve_params, qparams, next_tok, cache,
-                                   pos0, key).compile()
-        t0 = time.time()
-        out, cache = loop_x(serve_params, qparams, next_tok, cache, pos0, key)
-    out.block_until_ready()
-    decode_s = time.time() - t0
+    res = engine.generate_batch(batch, args.gen,
+                                prompt_len=args.prompt_len, loop=args.loop)
     kind = "loop" if args.loop else "scan"
     pf_kind = (f"chunked/{args.prefill_chunk}" if args.prefill_chunk
                else "one-shot")
-    pf_tps = args.requests * args.prompt_len / max(prefill_s, 1e-9)
+    pf_tps = res.prompt_tokens / max(res.prefill_s, 1e-9)
     print(f"[serve] {args.requests} requests | prefill ({pf_kind}) "
-          f"{prefill_s*1e3:.1f} ms ({pf_tps:.0f} tok/s) "
-          f"| {args.gen} tokens ({kind}) in {decode_s*1e3:.1f} ms "
-          f"({decode_s/max(args.gen-1,1)*1e3:.1f} ms/tok)")
+          f"{res.prefill_s*1e3:.1f} ms ({pf_tps:.0f} tok/s) "
+          f"| {args.gen} tokens ({kind}) in {res.decode_s*1e3:.1f} ms "
+          f"({res.decode_s/max(args.gen-1,1)*1e3:.1f} ms/tok)")
+    out = res.tokens
     for r in range(min(args.requests, 2)):
         print(f"  req{r}: prompt={batch['tokens'][r, :8].tolist()}... "
               f"-> generated={out[r].tolist()}")

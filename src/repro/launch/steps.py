@@ -179,10 +179,17 @@ def pad_for_chunked_prefill(tokens, chunk: int, lengths=None):
 
 
 def _attn_cache_len(cache):
-    """Sequence capacity of the first attention cache in a cache pytree
-    (k is (..., S, KV, D) in every layout, stacked or per-layer)."""
+    """Logical sequence capacity of the first attention cache in a cache
+    pytree — a ``repro.cache.KVCache`` object (any layout, stacked or
+    per-layer; paged capacity is blocks * page_size) or, for stub caches
+    in tests, a plain dict with a (..., S, KV, D) "k" leaf."""
+    from repro.cache import KVCache
+
+    if isinstance(cache, KVCache):
+        return cache.capacity
     if isinstance(cache, dict):
-        if "attn" in cache and "k" in cache["attn"]:
+        if "attn" in cache and isinstance(cache["attn"], dict) \
+                and "k" in cache["attn"]:
             return cache["attn"]["k"].shape[-3]
         for sub in cache.values():
             n = _attn_cache_len(sub)

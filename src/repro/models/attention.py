@@ -13,16 +13,23 @@ decode):
     sequence-sharded cache GSPMD turns the softmax reductions into the
     flash-decode partial-max/partial-sum combine automatically.
 
+The KV cache is consumed ONLY through the ``repro.cache.KVCache``
+protocol: ``init_cache`` picks a layout (dense / SWA ring / paged),
+``cache.ready`` is the single quantize-on-append point (K/V quantize ONCE
+against the frozen calibrated per-head thresholds — paper §2 — and the
+same tiles feed attention and the cache write), ``append`` /
+``append_slots`` do the layout-appropriate writes, and ``kernel_view`` /
+``dense_view`` feed the fused Pallas kernels and the jnp reference paths
+respectively.  This file contains no layout math: ring rolls live in
+``RingCache``, page-table scatters in ``PagedCache``.
+
 Serving runs a TWO-KERNEL fused engine when policy.use_pallas: prefill
-attends through kernels/prefill_attention.py (the prompt's K/V quantize
-once against the frozen calibrated thresholds and the SAME int8 tiles are
-appended to the cache and attended), decode through
-kernels/decode_attention.py.  ``quantize_for_cache``/``cache_write`` are
-the single quantize-on-append point shared by the dense cache and the SWA
-ring buffer across both phases; ``cache_write_slots`` is the per-slot
-decode append of the continuous-batching scheduler, where ``decode``
-takes a (B,) position vector + active mask instead of one scalar
-position (launch/scheduler.py, docs/serving.md).
+attends through kernels/prefill_attention.py, decode through
+kernels/decode_attention.py — both read KV tiles through the cache's
+kernel view (an identity block table for dense/ring, the page table for
+paged), so one compiled kernel serves every layout.  ``decode`` takes a
+(B,) position vector + active mask for continuous batching
+(launch/scheduler.py, docs/serving.md).
 
 All paths share GQA head grouping: Hq = KV * G, computed as einsum over a
 (B, S, KV, G, D) view so no materialized head replication occurs.
@@ -36,93 +43,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.cache import (DenseCache, KVCache, KV_LEVELS, RingCache,
+                         dequantize_kv, make_cache, quantize_kv)
 from repro.models.layers import apply_rotary, rotary_angles
 from repro.models.module import Dense, Module
 
 NEG_INF = -1e30
-
-# int8 KV cache uses the symmetric signed-8-bit grid (paper eq. 4); the
-# per-head dequant scale T/127 is frozen at finalize_calibration
-KV_LEVELS = 127.0
-
-
-def quantize_kv(x, scale):
-    """(B, S, KV, D) float -> int8 with per-head dequant ``scale`` (KV,)."""
-    s = scale.reshape(1, 1, -1, 1)
-    return jnp.clip(
-        jnp.round(x.astype(jnp.float32) / s), -KV_LEVELS, KV_LEVELS
-    ).astype(jnp.int8)
-
-
-def dequantize_kv(x_q, scale):
-    """int8 cache -> f32 with per-head dequant ``scale`` (KV,)."""
-    return x_q.astype(jnp.float32) * scale.reshape(1, 1, -1, 1)
-
-
-def quantize_for_cache(cache, k, v):
-    """Cache-ready K/V: quantize against the cache's per-head scales when
-    the cache is int8, otherwise cast to the cache storage dtype.
-
-    The single quantize-on-append point shared by the dense cache and the
-    SWA ring buffer, for both prefill and decode — K/V quantize ONCE and
-    the same tiles feed attention and the cache write (seeds the ROADMAP
-    paged-cache unification).
-    """
-    if "k_scale" in cache:
-        return (quantize_kv(k, cache["k_scale"]),
-                quantize_kv(v, cache["v_scale"]))
-    return k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
-
-
-def cache_write(cache, kq, vq, start):
-    """Write cache-ready K/V tiles into slots [start, start + len) along
-    the sequence axis; scales and any other cache entries carry over."""
-    new = dict(cache)
-    new["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, start, 1)
-    new["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, start, 1)
-    return new
-
-
-def cache_write_slots(cache, kq, vq, starts, active=None):
-    """Per-slot decode append: batch row b writes its one-token K/V tile at
-    sequence index ``starts[b]`` (the continuous-batching write, where each
-    slot of the batch sits at its own position).
-
-    kq/vq: (B, 1, KV, D) cache-ready tiles; starts: (B,) int32.  ``active``
-    (B,) bool masks the write per slot: an inactive slot reads back the
-    tile currently at its (clamped) write index and writes it unchanged,
-    so a step over inactive slots is bit-exact cache-neutral — no
-    requantization drift, and an all-slots-inactive scheduler step is a
-    true no-op.  Out-of-range starts clamp (XLA dynamic-slice semantics);
-    the slot decode loop deactivates capacity-full slots before they
-    could clamp while active.
-    """
-    starts = jnp.asarray(starts, jnp.int32)
-
-    def write_one(c, u, st):          # c: (S, KV, D), u: (1, KV, D)
-        return jax.lax.dynamic_update_slice_in_dim(c, u, st, 0)
-
-    if active is not None:
-        def read_one(c, st):
-            return jax.lax.dynamic_slice_in_dim(c, st, 1, 0)
-
-        sel = active[:, None, None, None]
-        kq = jnp.where(sel, kq, jax.vmap(read_one)(cache["k"], starts))
-        vq = jnp.where(sel, vq, jax.vmap(read_one)(cache["v"], starts))
-    new = dict(cache)
-    new["k"] = jax.vmap(write_one)(cache["k"], kq, starts)
-    new["v"] = jax.vmap(write_one)(cache["v"], vq, starts)
-    return new
-
-
-def cache_scales(cache):
-    """Per-head dequant scales of a cache (ones for a float cache) — the
-    kernels accept a float cache through the same code path."""
-    if "k_scale" in cache:
-        return cache["k_scale"], cache["v_scale"]
-    n_kv = cache["k"].shape[2]
-    ones = jnp.ones((n_kv,), jnp.float32)
-    return ones, ones
 
 
 def _gqa_scores(q, k):
@@ -365,22 +291,22 @@ class Attention(Module):
 
     # -- cache ------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
-                   kv_int8: bool = False) -> dict:
-        """KV cache; ``kv_int8`` stores entries as int8 + per-head f32
-        dequant scales (half the bf16 HBM stream — the decode bandwidth
-        win).  Scales start at 1 and are written from the calibrated
-        thresholds during prefill.  Cross-attention memory stays float
-        (computed once per request, not the decode bottleneck)."""
-        cache_len = min(max_len, self.window) if self.window else max_len
-        kd = (batch, cache_len, self.n_kv, self.head_dim)
-        if kv_int8 and not self.cross:
-            return {
-                "k": jnp.zeros(kd, jnp.int8),
-                "v": jnp.zeros(kd, jnp.int8),
-                "k_scale": jnp.ones((self.n_kv,), jnp.float32),
-                "v_scale": jnp.ones((self.n_kv,), jnp.float32),
-            }
-        return {"k": jnp.zeros(kd, dtype), "v": jnp.zeros(kd, dtype)}
+                   kv_int8: bool = False, layout: str = "ring",
+                   page_size: int = 64, extra_pages: int = 0) -> KVCache:
+        """Build this layer's ``KVCache`` (repro.cache.make_cache picks
+        dense / SWA-ring / paged from ``layout`` and the layer's window).
+        ``kv_int8`` stores entries as int8 + per-head f32 dequant scales
+        (half the bf16 HBM stream — the decode bandwidth win); scales
+        start at 1 and are written from the calibrated thresholds during
+        prefill.  Cross-attention memory stays float and dense (computed
+        once per request, not the decode bottleneck)."""
+        if self.cross:
+            return DenseCache.init(batch, max_len, self.n_kv, self.head_dim,
+                                   dtype=dtype, quantized=False)
+        return make_cache(batch, max_len, self.n_kv, self.head_dim,
+                          dtype=dtype, quantized=kv_int8, layout=layout,
+                          window=self.window, page_size=page_size,
+                          extra_pages=extra_pages)
 
     def _observe_kv(self, ctx, k, v):
         """Feed post-rope K / raw V into the KV calibration observers
@@ -492,25 +418,27 @@ class Attention(Module):
         o = o.reshape(b, s, self.n_heads * self.head_dim)
         return self.wo(params["wo"], o, ctx)
 
-    def prefill(self, params, x, cache, ctx=None, *, memory=None,
+    def prefill(self, params, x, cache: KVCache, ctx=None, *, memory=None,
                 q_offset=0, lengths=None, kv_limit=None):
         """Forward + populate the KV cache (returns (y, cache)).
 
-        K/V quantize ONCE against the frozen calibrated per-head
-        thresholds (int8 cache) and the same cache-ready tiles feed both
-        the cache write and — on the fused path (policy.use_pallas) — the
-        Pallas flash-prefill kernel, which attends directly over the int8
-        stream (dense and SWA ring cases alike).  The jnp fallback keeps
-        the exact-K/V attention of the reference path.
+        K/V quantize ONCE via ``cache.ready`` (frozen calibrated per-head
+        thresholds for an int8 cache) and the same cache-ready tiles feed
+        both ``cache.append`` and — on the fused path (policy.use_pallas)
+        — the Pallas flash-prefill kernel, which attends directly over
+        the int8 stream through the cache's kernel view (identity block
+        table for dense/ring, the page table for paged).  The jnp
+        fallback reads ``dense_view`` and keeps the exact-K/V attention
+        of the reference path.
 
         ``q_offset``/``lengths`` enable chunked ragged prefill: positions
-        shift by ``q_offset``, the chunk's K/V append at slot ``q_offset``
-        of a dense cache, and attention runs against the updated cache
-        masked to each request's valid length.  ``kv_limit`` (static int)
-        bounds the cache extent attention reads — the step passes the
-        padded prompt length so per-chunk work scales with the prompt,
-        not the cache capacity.  ``lengths is None`` is the one-shot
-        whole-prompt case."""
+        shift by ``q_offset``, the chunk's K/V append at position
+        ``q_offset``, and attention runs against the updated cache masked
+        to each request's valid length.  ``kv_limit`` (static int) bounds
+        the cache extent attention reads — the step passes the padded
+        prompt length so per-chunk work scales with the prompt, not the
+        cache capacity.  ``lengths is None`` is the one-shot whole-prompt
+        case."""
         b, s, _ = x.shape
         chunked = lengths is not None
         q, k, v = self._qkv(params, x, ctx, kv_src=memory)
@@ -518,72 +446,71 @@ class Attention(Module):
             pos = q_offset + jnp.arange(s)
             q, k = self._rope(q, k, pos, pos)
             self._observe_kv(ctx, k, v)
-        cache_len = cache["k"].shape[1]
         if self.cross:
-            new_cache = {"k": k[:, :cache_len], "v": v[:, :cache_len]}
+            # cross memory: written once per request, truncated to the
+            # cache capacity; replaces the cache contents wholesale
+            cap = min(cache.capacity, k.shape[1])
+            kq, vq = cache.ready(k[:, :cap], v[:, :cap])
+            new_cache = dataclasses.replace(cache, k=kq, v=vq)
             o = flash_attention(q, k, v, causal=False, q_chunk=self.q_chunk,
                                 kv_chunk=self.kv_chunk)
             o = o.reshape(b, s, self.n_heads * self.head_dim)
             return self.wo(params["wo"], o, ctx), new_cache
 
-        if "k_scale" in cache:
-            k_s, v_s = self._kv_scales(ctx)
-            cache = {**cache, "k_scale": k_s, "v_scale": v_s}
+        if cache.quantized:
+            cache = cache.with_scales(*self._kv_scales(ctx))
         # quantize once: the same tiles are appended AND (kernel path)
         # attended — no bf16 K/V re-materialization between the two
-        kq, vq = quantize_for_cache(cache, k, v)
+        kq, vq = cache.ready(k, v)
         use_kernel = (ctx is not None and ctx.policy.use_pallas
                       and self.causal)
 
         if chunked:
-            if self.window is not None and cache_len == self.window:
+            if cache.layout == "ring":
                 raise ValueError(
-                    f"{self.path}: chunked prefill needs a dense cache; the "
-                    "SWA ring buffer drops absolute slots (size the cache "
-                    ">= max_len or prefill one-shot)")
-            new_cache = cache_write(cache, kq, vq, q_offset)
+                    f"{self.path}: chunked prefill needs absolute slots (a "
+                    "dense cache or paged layout); the SWA ring buffer "
+                    "drops them (size the cache >= max_len or prefill "
+                    "one-shot)")
+            new_cache = cache.append(kq, vq, q_offset)
             kv_len = jnp.clip(jnp.asarray(lengths, jnp.int32), 0,
                               q_offset + s)
             # attend only the cache prefix that can hold prompt K/V —
             # without this every chunk pays for max_len (prompt + full
             # generation budget) worth of dequant + scores
-            limit = cache_len if kv_limit is None else min(kv_limit,
-                                                           cache_len)
-            k_src, v_src = new_cache["k"][:, :limit], new_cache["v"][:, :limit]
+            limit = (cache.capacity if kv_limit is None
+                     else min(kv_limit, cache.capacity))
             if use_kernel:
                 from repro.kernels import ops as kops
 
-                ks_, vs_ = cache_scales(new_cache)
-                o = kops.prefill_attention(
-                    q, k_src, v_src, ks_, vs_,
+                o = kops.prefill_attention_view(
+                    q, new_cache.kernel_view(limit), *new_cache.scales(),
                     q_offset, kv_len, causal=True, window=self.window,
                 ).astype(x.dtype)
             else:
-                if "k_scale" in new_cache:
-                    k_eff = dequantize_kv(k_src, new_cache["k_scale"])
-                    v_eff = dequantize_kv(v_src, new_cache["v_scale"])
-                else:
-                    k_eff, v_eff = k_src, v_src
+                k_eff, v_eff = new_cache.dequantize(
+                    *new_cache.dense_view(limit))
+                # cast back to the residual dtype: the dequantized f32
+                # stream must not promote the carry (the fused path's
+                # astype(x.dtype) contract; layer-scanned stacks require
+                # a dtype-stable residual)
                 o = flash_attention(q, k_eff, v_eff, causal=True,
                                     q_chunk=self.q_chunk,
                                     kv_chunk=self.kv_chunk,
-                                    q_offset=q_offset, window=self.window)
+                                    q_offset=q_offset,
+                                    window=self.window).astype(x.dtype)
         else:
-            # keep the last cache_len entries; ring invariant: position p
-            # lives at slot p % cache_len (decode relies on this)
-            keep = min(s, cache_len)
-            kk, vv = kq[:, s - keep:], vq[:, s - keep:]
-            if keep == cache_len:
-                shift = (s - keep) % cache_len
-                kk = jnp.roll(kk, shift, axis=1)
-                vv = jnp.roll(vv, shift, axis=1)
-            new_cache = cache_write(cache, kk, vv, 0)
+            # one-shot prompt write: the layout places the tiles (dense
+            # at absolute slots, ring keeps the last `window` rolled,
+            # paged scatters through the block table)
+            new_cache = cache.append(kq, vq, 0)
             if use_kernel:
                 from repro.kernels import ops as kops
 
-                ks_, vs_ = cache_scales(cache)
+                # attend the prompt's own cache-ready stream (identical
+                # tiles to what append just wrote)
                 o = kops.prefill_attention(
-                    q, kq, vq, ks_, vs_, jnp.int32(0),
+                    q, kq, vq, *cache.scales(), jnp.int32(0),
                     jnp.full((b,), s, jnp.int32), causal=True,
                     window=self.window,
                 ).astype(x.dtype)
@@ -598,8 +525,8 @@ class Attention(Module):
         o = o.reshape(b, s, self.n_heads * self.head_dim)
         return self.wo(params["wo"], o, ctx), new_cache
 
-    def decode(self, params, x, cache, cur_pos, ctx=None, *, memory=None,
-               slot_mask=None):
+    def decode(self, params, x, cache: KVCache, cur_pos, ctx=None, *,
+               memory=None, slot_mask=None):
         """Single-token decode. x: (B,1,d); cur_pos: tokens already cached
         — a scalar (uniform batch, the single-stream path) or a (B,)
         per-slot vector (continuous batching: each batch slot decodes at
@@ -607,67 +534,52 @@ class Attention(Module):
         its own valid prefix).  ``slot_mask`` (B,) bool marks active slots
         when a scheduler drives the batch: inactive slots write nothing
         (bit-exact cache-neutral) and attend over zero keys (output rows
-        zero).  The per-slot path needs a dense cache — SWA ring buffers
-        keep the scalar contract.
-
-        For SWA layers the cache is a ring buffer of size ``window``; the
-        write index wraps and masking uses absolute positions.
+        zero).  The per-slot path needs absolute slots (dense or paged
+        layout) — SWA ring buffers keep the scalar contract.
 
         With an int8 cache the new K/V quantize on append using the scales
         stored in the cache (written at prefill), so decode needs no
         threshold state.  The non-windowed int8 path can run the fused
-        Pallas flash-decode kernel (policy.use_pallas), which streams int8
-        tiles and dequantizes in VMEM; otherwise the cache dequantizes
-        into the jnp reference attention.
+        Pallas flash-decode kernel (policy.use_pallas), which streams the
+        cache's kernel-view tiles (block-table-mapped for paged) and
+        dequantizes in VMEM; otherwise the cache dequantizes into the jnp
+        reference attention.
         """
         b, s, _ = x.shape
         q, k, v = self._qkv(params, x, ctx, kv_src=None if not self.cross else memory)
         if self.cross:
-            o = decode_attention(q, cache["k"], cache["v"],
-                                 cache["k"].shape[1])
+            o = decode_attention(q, cache.k, cache.v, cache.capacity)
             o = o.reshape(b, s, self.n_heads * self.head_dim)
             return self.wo(params["wo"], o, ctx), cache
         per_slot = jnp.ndim(cur_pos) > 0 or slot_mask is not None
-        cache_len = cache["k"].shape[1]
-        quantized = "k_scale" in cache
-        ring = self.window is not None and cache_len == self.window
+        ring = cache.layout == "ring"
         if per_slot and ring:
             raise ValueError(
                 f"{self.path}: per-slot decode (vector cur_pos / slot_mask) "
-                "needs a dense cache; the SWA ring buffer drops absolute "
-                "slots — size the cache >= max_len or decode with a scalar "
-                "position")
+                "needs absolute slots (a dense cache or paged layout); the "
+                "SWA ring buffer drops them — size the cache >= max_len or "
+                "decode with a scalar position")
         if per_slot:
             pos_vec = jnp.broadcast_to(
                 jnp.asarray(cur_pos, jnp.int32).reshape(-1), (b,))
             # per-slot rotary: positions (B, 1) batch the angle tables
             q, k = self._rope(q, k, pos_vec[:, None], pos_vec[:, None])
-            k, v = quantize_for_cache(cache, k, v)
-            upd = cache_write_slots(cache, k, v, pos_vec, active=slot_mask)
+            kq, vq = cache.ready(k, v)
+            upd = cache.append_slots(kq, vq, pos_vec, active=slot_mask)
         else:
             pos = jnp.full((s,), 0) + cur_pos
             q, k = self._rope(q, k, pos, pos)
-            # same quantize-on-append helper as prefill: the new token's
-            # K/V become cache-ready tiles once, then a single slot write
-            k, v = quantize_for_cache(cache, k, v)
-            idx = cur_pos % cache_len if ring else cur_pos
-            upd = cache_write(cache, k, v, idx)
-        k_cache, v_cache = upd["k"], upd["v"]
-
-        def dequant(k_cache, v_cache):
-            if not quantized:
-                return k_cache, v_cache
-            return (dequantize_kv(k_cache, cache["k_scale"]),
-                    dequantize_kv(v_cache, cache["v_scale"]))
+            # same quantize-on-append point as prefill: the new token's
+            # K/V become cache-ready tiles once, then a single write (the
+            # ring layout wraps the index internally)
+            kq, vq = cache.ready(k, v)
+            upd = cache.append(kq, vq, cur_pos)
 
         if ring:
-            # ring buffer: absolute decode against rotated positions
-            k_eff, v_eff = dequant(k_cache, v_cache)
-            # absolute position of ring slot i given cur_pos
-            slot = jnp.arange(cache_len)
-            abs_pos = jnp.where(
-                slot <= idx, cur_pos - (idx - slot), cur_pos - (idx + cache_len - slot)
-            )
+            # ring buffer: absolute decode against the layout's slot ->
+            # position mapping
+            k_eff, v_eff = upd.dequantize(upd.k, upd.v)
+            abs_pos = upd.abs_positions(cur_pos)
             sc = _gqa_scores(
                 q.astype(jnp.float32) / jnp.sqrt(jnp.asarray(self.head_dim, jnp.float32)),
                 k_eff.astype(jnp.float32),
@@ -686,7 +598,7 @@ class Attention(Module):
             else:
                 valid = cur_pos + 1
             use_kernel = (
-                quantized
+                cache.quantized
                 and self.window is None
                 and ctx is not None
                 and ctx.policy.use_pallas
@@ -694,13 +606,15 @@ class Attention(Module):
             if use_kernel:
                 from repro.kernels import ops as kops
 
-                o = kops.decode_attention(
-                    q[:, 0], k_cache, v_cache,
-                    cache["k_scale"], cache["v_scale"], valid,
+                o = kops.decode_attention_view(
+                    q[:, 0], upd.kernel_view(), *upd.scales(), valid,
                 )[:, None].astype(x.dtype)
             else:
-                k_eff, v_eff = dequant(k_cache, v_cache)
+                k_eff, v_eff = upd.dequantize(*upd.dense_view())
+                # same dtype-stable-residual contract as the fused path
                 o = decode_attention(q, k_eff, v_eff, valid,
-                                     window=self.window)
+                                     window=self.window).astype(x.dtype)
         o = o.reshape(b, s, self.n_heads * self.head_dim)
         return self.wo(params["wo"], o, ctx), upd
+
+

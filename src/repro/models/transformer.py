@@ -133,11 +133,14 @@ class Block(Module):
 
     # -- caches -------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
-                   kv_int8: bool = False) -> dict:
+                   kv_int8: bool = False, layout: str = "ring",
+                   page_size: int = 64, extra_pages: int = 0) -> dict:
         c = {}
         if hasattr(self, "attn"):
             c["attn"] = self.attn.init_cache(batch, max_len, dtype,
-                                             kv_int8=kv_int8)
+                                             kv_int8=kv_int8, layout=layout,
+                                             page_size=page_size,
+                                             extra_pages=extra_pages)
         if hasattr(self, "mamba"):
             c["mamba"] = self.mamba.init_cache(batch)
         if self.cross:
@@ -457,10 +460,12 @@ class Stack(Module):
 
     # -- caches -------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
-                   kv_int8: bool = False):
+                   kv_int8: bool = False, layout: str = "ring",
+                   page_size: int = 64, extra_pages: int = 0):
+        kw = dict(kv_int8=kv_int8, layout=layout, page_size=page_size,
+                  extra_pages=extra_pages)
         if self.scanned and self.serve_homogeneous:
-            one = self.template.init_cache(batch, max_len, dtype,
-                                           kv_int8=kv_int8)
+            one = self.template.init_cache(batch, max_len, dtype, **kw)
             # scale leaves init to ones, not zeros: a layer whose prefill
             # never runs (impossible today, defensive) must still dequant
             # to finite values
@@ -470,7 +475,7 @@ class Stack(Module):
             )
         blocks = self._serve_blocks() if self.scanned else self.blocks
         return {
-            f"layer{i}": b.init_cache(batch, max_len, dtype, kv_int8=kv_int8)
+            f"layer{i}": b.init_cache(batch, max_len, dtype, **kw)
             for i, b in enumerate(blocks)
         }
 

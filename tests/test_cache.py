@@ -1,0 +1,390 @@
+"""The KVCache protocol: layout units, dense↔paged parity, ring parity,
+prefix-sharing admission, and the extended no-retrace contract.
+
+Acceptance (ISSUE 4): the DenseCache/RingCache refactor is bit-exact vs
+the pre-refactor behavior (scheduler/fastpath suites pin that), the
+PagedCache matches dense logits bit-for-bit (the identity block table is
+literally a reshape of the dense layout, and a permuted table only moves
+storage), and a shared prompt admits with ZERO prefill executions —
+verified on the scheduler's call counters while the trace counters stay
+pinned at one executable per piece.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import (DenseCache, PagedCache, RingCache, make_cache,
+                         set_table_row, splice_dense_into_pages)
+from repro.configs import get_config
+from repro.core import api as A
+from repro.launch import steps as ST
+from repro.launch.scheduler import Request, SlotScheduler
+from repro.models import build_model
+from repro.models.attention import Attention
+
+B, S, GEN = 2, 32, 6
+CHUNK = 8
+
+
+def _calibrated(arch="smollm-135m", kv_int8=True, **pol):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    policy = A.QuantPolicy(kv_int8=kv_int8, **pol)
+    qp = A.init_qparams(model, params, policy)
+    qp = ST.make_calibrate_step(model, cfg, policy)(params, qp,
+                                                    {"tokens": toks})
+    qp = A.finalize_calibration(qp, policy)
+    return cfg, model, params, qp, policy, toks
+
+
+def _tiles(key, b, s, kv=2, d=8):
+    return jax.random.randint(key, (b, s, kv, d), -127, 127, jnp.int8)
+
+
+class TestLayoutUnits:
+    def test_make_cache_layout_selection(self):
+        kw = dict(n_kv=2, head_dim=8, dtype=jnp.bfloat16)
+        assert isinstance(make_cache(1, 64, layout="dense", **kw),
+                          DenseCache)
+        assert isinstance(make_cache(1, 64, layout="ring", window=16, **kw),
+                          RingCache)
+        # window >= max_len needs no ring
+        assert isinstance(make_cache(1, 16, layout="ring", window=16, **kw),
+                          DenseCache)
+        c = make_cache(1, 64, layout="paged", page_size=16, **kw)
+        assert isinstance(c, PagedCache) and c.capacity == 64
+        with pytest.raises(ValueError, match="layout"):
+            make_cache(1, 64, layout="torus", **kw)
+
+    def test_dense_append_slots_inactive_readback(self):
+        cache = DenseCache.init(B, 16, 2, 8, dtype=jnp.int8, quantized=True)
+        cache = cache.append(_tiles(jax.random.PRNGKey(0), B, 16),
+                             _tiles(jax.random.PRNGKey(1), B, 16), 0)
+        new_k = _tiles(jax.random.PRNGKey(2), B, 1)
+        new_v = _tiles(jax.random.PRNGKey(3), B, 1)
+        starts = jnp.asarray([3, 7], jnp.int32)
+        upd = cache.append_slots(new_k, new_v, starts,
+                                 active=jnp.asarray([True, False]))
+        np.testing.assert_array_equal(np.asarray(upd.k[0, 3]),
+                                      np.asarray(new_k[0, 0]))
+        # inactive slot 1 is bit-identical everywhere
+        np.testing.assert_array_equal(np.asarray(upd.k[1]),
+                                      np.asarray(cache.k[1]))
+
+    def test_ring_position_invariant(self):
+        """Position p lives at slot p % window after a one-shot prompt
+        write and stays there through single-token appends."""
+        win, s = 8, 13
+        cache = RingCache.init(1, win, 1, 4, dtype=jnp.float32)
+        k = jnp.arange(s, dtype=jnp.float32).reshape(1, s, 1, 1) \
+            * jnp.ones((1, s, 1, 4))
+        cache = cache.append(k, k, 0)
+        for p in range(s - win, s):           # surviving positions
+            assert float(cache.k[0, p % win, 0, 0]) == p
+        tok = jnp.full((1, 1, 1, 4), float(s))
+        cache = cache.append(tok, tok, s)
+        assert float(cache.k[0, s % win, 0, 0]) == s
+        abs_pos = np.asarray(cache.abs_positions(s))
+        assert abs_pos[s % win] == s
+
+    def test_paged_dense_view_roundtrip(self):
+        """Token-scatter append through a PERMUTED table gathers back to
+        exactly the dense contents."""
+        dense = DenseCache.init(B, 32, 2, 8, dtype=jnp.int8, quantized=True)
+        paged = PagedCache.init(B, 32, 2, 8, dtype=jnp.int8, quantized=True,
+                                page_size=8)
+        # scramble the private pages (still per-slot distinct)
+        perm = np.random.RandomState(0).permutation(B * 4)
+        paged = dataclasses.replace(
+            paged, table=jnp.asarray(perm.reshape(B, 4), jnp.int32))
+        kq = _tiles(jax.random.PRNGKey(0), B, 20)
+        vq = _tiles(jax.random.PRNGKey(1), B, 20)
+        dense = dense.append(kq, vq, 5)
+        paged = paged.append(kq, vq, 5)
+        dk, dv = dense.dense_view()
+        pk, pv = paged.dense_view()
+        np.testing.assert_array_equal(np.asarray(dk[:, 5:25]),
+                                      np.asarray(pk[:, 5:25]))
+        np.testing.assert_array_equal(np.asarray(dv[:, 5:25]),
+                                      np.asarray(pv[:, 5:25]))
+
+    def test_paged_append_slots_matches_dense(self):
+        dense = DenseCache.init(B, 32, 2, 8, dtype=jnp.int8, quantized=True)
+        paged = PagedCache.init(B, 32, 2, 8, dtype=jnp.int8, quantized=True,
+                                page_size=8)
+        kq = _tiles(jax.random.PRNGKey(0), B, 1)
+        vq = _tiles(jax.random.PRNGKey(1), B, 1)
+        starts = jnp.asarray([9, 31], jnp.int32)
+        active = jnp.asarray([True, True])
+        d = dense.append_slots(kq, vq, starts, active=active)
+        p = paged.append_slots(kq, vq, starts, active=active)
+        np.testing.assert_array_equal(np.asarray(d.k),
+                                      np.asarray(p.dense_view()[0]))
+
+    def test_splice_and_table_ops_stacked_layers(self):
+        """The scheduler-side page ops tolerate a leading (L,) layer axis
+        (scanned stacks): splice + row write + gather round-trips."""
+        L, nb, ps = 3, 4, 8
+        paged = PagedCache.init(B, nb * ps, 2, 8, dtype=jnp.int8,
+                                quantized=True, page_size=ps)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (L,) + a.shape), paged)
+        slot_dense = DenseCache.init(1, nb * ps, 2, 8, dtype=jnp.int8,
+                                     quantized=True)
+        kq = _tiles(jax.random.PRNGKey(0), 1, nb * ps)
+        slot_dense = dataclasses.replace(slot_dense, k=kq, v=kq)
+        sl_stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (L,) + a.shape), slot_dense)
+        row = jnp.asarray([1, 0, 3, 2], jnp.int32)   # slot 0's pages, permuted
+        out = splice_dense_into_pages(stacked, sl_stacked, row)
+        out = set_table_row(out, 1, row)
+        # layer 2, slot 1 now maps the spliced tiles through `row`
+        got = np.asarray(out.k[2])[np.asarray(row)].reshape(nb * ps, 2, 8)
+        np.testing.assert_array_equal(got, np.asarray(kq[0]))
+
+
+class TestDensePagedParity:
+    """Same tokens through the full model: dense and paged caches must
+    produce bit-identical logits and greedy generations (acceptance)."""
+
+    def _serve(self, layout, model, cfg, params, qp, policy, toks,
+               chunked=False):
+        cache = model.init_cache(B, S + GEN, cfg.dtype, kv_int8=True,
+                                 layout=layout, page_size=8)
+        if chunked:
+            pre = jax.jit(ST.make_prefill_step(model, cfg, policy,
+                                               mode="none",
+                                               prefill_chunk=CHUNK))
+            lg, cache = pre(params, qp, {"tokens": toks}, cache,
+                            jnp.full((B,), S, jnp.int32))
+        else:
+            pre = jax.jit(ST.make_prefill_step(model, cfg, policy,
+                                               mode="none"))
+            lg, cache = pre(params, qp, {"tokens": toks}, cache)
+        loop = jax.jit(ST.make_decode_loop(model, cfg, policy, mode="none",
+                                           n_steps=GEN))
+        tok0 = jnp.argmax(lg[:, -1, :], -1).astype(jnp.int32)
+        out, _ = loop(params, qp, tok0, cache, S)
+        return np.asarray(lg), np.asarray(out)
+
+    def test_one_shot_bit_identical(self):
+        cfg, model, params, qp, policy, toks = _calibrated()
+        lg_d, out_d = self._serve("dense", model, cfg, params, qp, policy,
+                                  toks)
+        lg_p, out_p = self._serve("paged", model, cfg, params, qp, policy,
+                                  toks)
+        np.testing.assert_array_equal(lg_d, lg_p)
+        np.testing.assert_array_equal(out_d, out_p)
+
+    def test_chunked_prefill_bit_identical(self):
+        cfg, model, params, qp, policy, toks = _calibrated()
+        lg_d, out_d = self._serve("dense", model, cfg, params, qp, policy,
+                                  toks, chunked=True)
+        lg_p, out_p = self._serve("paged", model, cfg, params, qp, policy,
+                                  toks, chunked=True)
+        np.testing.assert_array_equal(lg_d, lg_p)
+        np.testing.assert_array_equal(out_d, out_p)
+
+    def test_fused_kernels_paged_matches_dense(self):
+        """policy.use_pallas: both kernels read through the block table
+        (identity for dense) — same compiled body, same numbers."""
+        cfg, model, params, qp, policy, toks = _calibrated(
+            use_pallas=True)
+        # cache length must tile for the fused decode kernel
+        cap = -(-(S + GEN) // 128) * 128
+        outs = {}
+        for layout in ("dense", "paged"):
+            cache = model.init_cache(B, cap, cfg.dtype, kv_int8=True,
+                                     layout=layout, page_size=128)
+            pre = jax.jit(ST.make_prefill_step(model, cfg, policy,
+                                               mode="none",
+                                               prefill_chunk=CHUNK))
+            lg, cache = pre(params, qp, {"tokens": toks}, cache,
+                            jnp.full((B,), S, jnp.int32))
+            loop = jax.jit(ST.make_decode_loop(model, cfg, policy,
+                                               mode="none", n_steps=GEN))
+            tok0 = jnp.argmax(lg[:, -1, :], -1).astype(jnp.int32)
+            out, _ = loop(params, qp, tok0, cache, S)
+            outs[layout] = (np.asarray(lg), np.asarray(out))
+        np.testing.assert_array_equal(outs["dense"][0], outs["paged"][0])
+        np.testing.assert_array_equal(outs["dense"][1], outs["paged"][1])
+
+
+class TestRingParity:
+    def test_ring_decode_matches_forced_dense_window(self):
+        """An SWA layer decoding through its ring buffer must match the
+        same layer decoding through a forced-dense cache with window
+        masking (two code paths, one contraction)."""
+        win, d_model = 8, 32
+        attn = Attention(d_model, 4, 2, 8, path="t/attn", window=win,
+                         dtype=jnp.float32)
+        params = attn.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d_model),
+                              jnp.float32)
+        ring = attn.init_cache(B, S + 4, jnp.float32, layout="ring")
+        dense = attn.init_cache(B, S + 4, jnp.float32, layout="dense")
+        assert isinstance(ring, RingCache) and isinstance(dense, DenseCache)
+        y_r, ring = attn.prefill(params, x, ring)
+        y_d, dense = attn.prefill(params, x, dense)
+        np.testing.assert_allclose(np.asarray(y_r), np.asarray(y_d),
+                                   atol=1e-5)
+        for step in range(3):
+            xt = jax.random.normal(jax.random.PRNGKey(2 + step),
+                                   (B, 1, d_model), jnp.float32)
+            o_r, ring = attn.decode(params, xt, ring, S + step)
+            o_d, dense = attn.decode(params, xt, dense, S + step)
+            np.testing.assert_allclose(np.asarray(o_r), np.asarray(o_d),
+                                       atol=1e-5,
+                                       err_msg=f"decode step {step}")
+
+
+class TestPrefixSharing:
+    def _sched(self, layout, model, cfg, policy, params, qp, **kw):
+        kw.setdefault("mode", "none")
+        kw.setdefault("max_slots", 2)
+        kw.setdefault("prompt_cap", S)
+        kw.setdefault("gen_cap", GEN + 2)
+        kw.setdefault("prefill_chunk", CHUNK)
+        kw.setdefault("block_steps", 3)
+        kw.setdefault("page_size", 8)
+        return SlotScheduler(model, cfg, policy, params, qp,
+                             cache_layout=layout, **kw)
+
+    def test_shared_prompt_zero_prefill(self):
+        """ISSUE acceptance: a repeated prompt admits with ZERO prefill
+        executions (call-counter-verified), generates exactly the tokens
+        the dense scheduler generates, and leaves one compiled executable
+        per piece."""
+        cfg, model, params, qp, policy, toks = _calibrated()
+        same = [Request(rid=r, tokens=np.asarray(toks[0, :S]), max_gen=GEN)
+                for r in range(3)]
+        ref = {c.rid: c for c in self._sched(
+            "dense", model, cfg, policy, params, qp).run(list(same))}
+        sched = self._sched("paged", model, cfg, policy, params, qp)
+        done = {c.rid: c for c in sched.run(list(same))}
+        for r in ref:
+            assert done[r].tokens == ref[r].tokens, r
+        assert sched.call_counts()["prefill"] == 1   # 3 admissions, 1 run
+        stats = sched.prefix_stats()
+        assert stats["hits"] == 2 and stats["misses"] == 1
+        assert stats["shared_tokens"] == 2 * S
+
+    def test_partial_tail_page_is_private(self):
+        """A prompt that does NOT fill its last page still shares the full
+        pages; the tail page is copied, not shared, so the sharer's
+        decode writes can't corrupt the original (tokens stay equal to
+        the dense run for both residents)."""
+        cfg, model, params, qp, policy, toks = _calibrated()
+        L = 27                                  # 3 full pages of 8 + tail 3
+        same = [Request(rid=r, tokens=np.asarray(toks[1, :L]), max_gen=GEN)
+                for r in range(2)]
+        ref = {c.rid: c for c in self._sched(
+            "dense", model, cfg, policy, params, qp).run(list(same))}
+        sched = self._sched("paged", model, cfg, policy, params, qp)
+        done = {c.rid: c for c in sched.run(list(same))}
+        for r in ref:
+            assert done[r].tokens == ref[r].tokens, r
+        assert sched.call_counts()["prefill"] == 1
+        assert sched.prefix_stats()["hits"] == 1
+
+    def test_paged_ragged_matches_dense(self):
+        """Mixed-length DISTINCT prompts (all misses): the paged layout
+        is pure storage indirection — token-for-token equal to dense."""
+        cfg, model, params, qp, policy, toks = _calibrated()
+        reqs = lambda: [Request(rid=r, tokens=np.asarray(toks[r % B, :n]),
+                                max_gen=GEN)
+                        for r, n in enumerate([32, 20, 9])]
+        ref = {c.rid: c for c in self._sched(
+            "dense", model, cfg, policy, params, qp).run(reqs())}
+        sched = self._sched("paged", model, cfg, policy, params, qp)
+        done = {c.rid: c for c in sched.run(reqs())}
+        for r in ref:
+            assert done[r].tokens == ref[r].tokens, r
+
+    def test_paged_no_retrace_across_patterns(self):
+        """Extended no-retrace acceptance: ragged patterns, repeated
+        prompts, and shared-prefix admissions all ride the SAME compiled
+        executables — including the paged splice/table/copy pieces."""
+        cfg, model, params, qp, policy, toks = _calibrated()
+        sched = self._sched("paged", model, cfg, policy, params, qp)
+        sched.run([Request(rid=r, tokens=np.asarray(toks[r % B, :n]),
+                           max_gen=GEN)
+                   for r, n in enumerate([32, 20, 16])])
+        sched.run([Request(rid=r, tokens=np.asarray(toks[0, :27]),
+                           max_gen=GEN - 2) for r in range(3)])
+        counts = sched.executable_counts()
+        assert counts == {"prefill": 1, "decode": 1, "insert": 1,
+                          "set_row": 1, "copy_page": 1}, counts
+        assert sched.prefix_stats()["hits"] >= 2
+
+    def test_scanned_stack_paged_matches_dense(self):
+        """scan_layers=True stacks a leading (L,) axis on every cache
+        leaf; the paged splice/table ops must still land pages correctly
+        (token parity with the dense scheduler)."""
+        cfg, model, params, qp, policy, toks = _calibrated()
+        cfg_s = cfg.replace(scan_layers=True)
+        model_s = build_model(cfg_s)
+        params_s = model_s.init(jax.random.PRNGKey(0))
+        qp_s = A.init_qparams(model_s, params_s, policy)
+        qp_s = ST.make_calibrate_step(model_s, cfg_s, policy)(
+            params_s, qp_s, {"tokens": toks})
+        qp_s = A.finalize_calibration(qp_s, policy)
+        reqs = lambda: [Request(rid=r, tokens=np.asarray(toks[0, :n]),
+                                max_gen=GEN) for r, n in enumerate([32, 32])]
+        ref = {c.rid: c for c in self._sched(
+            "dense", model_s, cfg_s, policy, params_s, qp_s).run(reqs())}
+        sched = self._sched("paged", model_s, cfg_s, policy, params_s, qp_s)
+        done = {c.rid: c for c in sched.run(reqs())}
+        for r in ref:
+            assert done[r].tokens == ref[r].tokens, r
+        assert sched.prefix_stats()["hits"] == 1
+
+
+class TestEngineFacade:
+    def test_engine_generate_batch_matches_cli_pipeline(self):
+        """Engine.from_checkpoint + generate_batch reproduces the
+        hand-assembled prefill + scanned-decode pipeline token for
+        token."""
+        from repro.launch.engine import Engine
+
+        cfg, model, params, qp, policy, toks = _calibrated(kv_int8=True)
+        engine = Engine(model, cfg, policy, params, qp, mode="none",
+                        cache_layout="dense")
+        res = engine.generate_batch({"tokens": toks}, GEN)
+        pre = jax.jit(ST.make_prefill_step(model, cfg, policy, mode="none"))
+        cache = model.init_cache(B, S + GEN, cfg.dtype, kv_int8=True,
+                                 layout="dense")
+        lg, cache = pre(params, qp, {"tokens": toks}, cache)
+        loop = jax.jit(ST.make_decode_loop(model, cfg, policy, mode="none",
+                                           n_steps=GEN))
+        tok0 = jnp.argmax(lg[:, -1, :], -1).astype(jnp.int32)
+        want, _ = loop(params, qp, tok0, cache, S)
+        np.testing.assert_array_equal(np.asarray(res.tokens),
+                                      np.asarray(want))
+
+    def test_engine_paged_prefix_generate(self):
+        """engine.generate with the paged layout: repeated prompts hit
+        the prefix store across CALLS too (the scheduler — and its shared
+        pages — persists on the engine)."""
+        from repro.launch.engine import Engine
+
+        cfg, model, params, qp, policy, toks = _calibrated(kv_int8=True)
+        engine = Engine(model, cfg, policy, params, qp, mode="none",
+                        cache_layout="paged", page_size=8,
+                        prefill_chunk=CHUNK)
+        req = lambda r: Request(rid=r, tokens=np.asarray(toks[0, :S]),
+                                max_gen=GEN)
+        a = engine.generate([req(0)], max_slots=2, prompt_cap=S,
+                            gen_cap=GEN + 2)
+        b = engine.generate([req(1)], max_slots=2, prompt_cap=S,
+                            gen_cap=GEN + 2)
+        assert a[0].tokens == b[0].tokens
+        sched = engine.make_scheduler(max_slots=2, prompt_cap=S,
+                                      gen_cap=GEN + 2)
+        assert sched.call_counts()["prefill"] == 1
+        assert sched.prefix_stats()["hits"] == 1
