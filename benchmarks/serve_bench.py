@@ -15,6 +15,10 @@ configurations of the two-kernel engine:
     admissions ride the prefix store's shared pages instead of running
     prefill (the ``paged_prefix_reuse`` entry records hits and skipped
     prefill calls; CI requires it)
+  * speculative decoding: repetitive prompts through the prompt-lookup
+    ``SpeculativeStrategy`` vs greedy (the ``speculative_decode`` entry
+    records draft acceptance rate, tok/s vs greedy, and the
+    tokens-match-greedy bit; CI requires it well-formed)
 
 Each grid point is one ``Engine`` (launch/engine.py) — the same assembly
 the serving CLI runs, so the bench measures the served configuration,
@@ -42,6 +46,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.configs.shapes import ShapeSpec
@@ -186,6 +191,56 @@ def bench_ragged_traffic(engine: Engine, *, requests, max_slots, prompt_len,
     }
 
 
+def bench_speculative_decode(greedy_eng: Engine, spec_eng: Engine, *,
+                             requests, max_slots, prompt_len, gen,
+                             block_steps=8):
+    """Prompt-lookup speculative decoding vs greedy through the slot
+    scheduler, on REPETITIVE prompts (a short token pattern tiled to the
+    prompt length — the lookup needs recurring n-grams to draft from).
+    Records the draft acceptance rate, tok/s for both strategies, and
+    ``tokens_match`` — speculative output must be BIT-IDENTICAL to
+    greedy under the deterministic accept rule, so the bench doubles as
+    an end-to-end correctness check.  On this CPU container the verify
+    window runs emulated, so treat the speedup as a dispatch-count
+    proxy, not an HBM-bandwidth number (that is what the int8 cache
+    halves on real hardware)."""
+    shape = ShapeSpec("bench", "train", prompt_len, requests)
+    spec = DP.spec_for(greedy_eng.cfg, shape)
+    reqs = []
+    for r in ragged_requests(spec, requests, prompt_len, gen):
+        t = np.asarray(r.tokens)
+        pat = t[:min(8, len(t))]
+        tiled = np.tile(pat, -(-len(t) // len(pat)))[:len(t)]
+        reqs.append(dataclasses.replace(r, tokens=tiled.astype(np.int32)))
+
+    g_done, g_wall, _ = _run_sched(
+        greedy_eng, reqs, max_slots=max_slots, prompt_len=prompt_len,
+        gen=gen, block_steps=block_steps)
+    s_done, s_wall, sched = _run_sched(
+        spec_eng, reqs, max_slots=max_slots, prompt_len=prompt_len,
+        gen=gen, block_steps=block_steps)
+    g_tokens = {c.rid: c.tokens for c in g_done}
+    s_tokens = {c.rid: c.tokens for c in s_done}
+    n_new = sum(len(t) for t in s_tokens.values())
+    stats = sched.spec_stats()
+    return {
+        "requests": requests,
+        "max_slots": max_slots,
+        "spec_k": stats["draft_k"],
+        "spec_ngram": spec_eng.spec_ngram,
+        "generated_tokens": n_new,
+        "wall_ms": s_wall * 1e3,
+        "gen_tokens_per_s": n_new / s_wall,
+        "greedy_gen_tokens_per_s":
+            sum(len(t) for t in g_tokens.values()) / g_wall,
+        "speedup_vs_greedy": g_wall / s_wall,
+        "acceptance_rate": stats["acceptance_rate"],
+        "tokens_per_window": stats["tokens_per_window"],
+        "tokens_match": g_tokens == s_tokens,
+        "executables": sched.executable_counts(),
+    }
+
+
 def bench_paged_prefix_reuse(engine: Engine, *, requests, max_slots,
                              prompt_len, gen, block_steps=8):
     """Prefix sharing under the paged layout: a queue where every request
@@ -234,6 +289,10 @@ def main():
                          "(default: requests // 2, min 2)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="page size for the paged prefix-reuse scenario")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft-window length for the speculative scenario")
+    ap.add_argument("--spec-ngram", type=int, default=2,
+                    help="prompt-lookup n-gram for the speculative scenario")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
@@ -311,6 +370,26 @@ def main():
           f"| lens {rt['prompt_lens']} | {rt['generated_tokens']} tokens in "
           f"{rt['wall_ms']:.1f} ms ({rt['gen_tokens_per_s']:.0f} gen tok/s) "
           f"| executables {rt['executables']}")
+
+    # speculative decoding: repetitive prompts through the prompt-lookup
+    # strategy vs greedy — a fresh engine (own scheduler) sharing the
+    # memoized int8 preparation; tokens must match greedy bit-for-bit
+    spec_eng = Engine(eng.model, eng.cfg, eng.policy, eng.serve_params,
+                      eng.qparams, mode=eng.mode,
+                      decode_strategy="speculative", spec_k=args.spec_k,
+                      spec_ngram=args.spec_ngram,
+                      prefill_chunk=args.prefill_chunk)
+    sd = bench_speculative_decode(
+        eng, spec_eng, requests=n_reqs, max_slots=slots,
+        prompt_len=args.prompt_len, gen=args.gen, block_steps=block)
+    report["speculative_decode"] = sd
+    print(f"speculative decode: {sd['requests']} reqs / {sd['max_slots']} "
+          f"slots | k={sd['spec_k']} ngram={sd['spec_ngram']} | acceptance "
+          f"{sd['acceptance_rate']:.2f} ({sd['tokens_per_window']:.2f} "
+          f"tok/window) | {sd['gen_tokens_per_s']:.0f} vs greedy "
+          f"{sd['greedy_gen_tokens_per_s']:.0f} gen tok/s "
+          f"({sd['speedup_vs_greedy']:.2f}x) | tokens_match="
+          f"{sd['tokens_match']} | executables {sd['executables']}")
 
     # paged prefix reuse: the SAME prompt repeated — a fresh paged engine
     # (own scheduler/prefix store) sharing the memoized int8 preparation

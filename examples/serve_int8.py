@@ -25,6 +25,11 @@ reference for the full list):
                       every slot decodes at its own position, and ONE
                       compiled decode executable serves the whole ragged
                       run (--block-steps / --eos-id tune the scheduler)
+  --strategy speculative --spec-k K --spec-ngram N
+                      prompt-lookup speculative decoding (launch/
+                      strategies.py): draft K tokens from the token
+                      history, verify them in one batched pass —
+                      bit-identical tokens to greedy, fewer dispatches
   --cache-layout paged --page-size N
                       page-pool KV cache: block tables are data, and with
                       --max-slots a repeated prompt rides shared pages
@@ -64,6 +69,19 @@ def main():
                 "--requests", "6", "--prompt-len", "32", "--gen", "8",
                 "--max-slots", "2", "--prefill-chunk", "8",
                 "--block-steps", "4"]
+    serve.main()
+
+    # speculative decoding (DecodeStrategy protocol): prompt-lookup
+    # drafting + ONE batched verify pass per window over the int8 cache.
+    # Deterministic acceptance makes the tokens BIT-IDENTICAL to greedy
+    # — speculation only changes how many decode dispatches they cost
+    # (the printed acceptance rate is the payoff; repetitive text
+    # accepts more)
+    sys.argv = ["serve", "--arch", "smollm-135m", "--smoke",
+                "--requests", "4", "--prompt-len", "32", "--gen", "8",
+                "--max-slots", "2", "--prefill-chunk", "8",
+                "--strategy", "speculative", "--spec-k", "4",
+                "--spec-ngram", "2"]
     serve.main()
 
     # the Engine facade + paged prefix sharing: three IDENTICAL prompts

@@ -141,8 +141,23 @@ class KVCache(abc.ABC):
 
     @abc.abstractmethod
     def append_slots(self, kq, vq, starts, active=None) -> "KVCache":
-        """Per-slot decode append: batch row b writes its one-token tile
-        at position ``starts[b]``; ``active`` masks rows bit-neutrally."""
+        """Per-slot append: batch row b writes its (B, s, KV, D) tiles at
+        positions ``starts[b] + [0, s)`` (s == 1 is the decode step; s > 1
+        is the speculative verify window); ``active`` masks rows
+        bit-neutrally."""
+
+    def rollback(self, pos, private_row=None) -> "KVCache":
+        """Logically rewind slot b to ``pos[b]`` valid entries (the
+        speculative-decode reject path).  Dense/ring: a no-op — entries at
+        positions >= pos are DEAD data that the masks never read and the
+        next append overwrites, so the rewind is pure position
+        bookkeeping in the caller's carry.  ``PagedCache`` overrides:
+        with ``private_row`` it re-points rewound table blocks at the
+        slot's private pages, copy-on-rewind for the boundary block, so a
+        rewind into a SHARED prefix page never lets a later append mutate
+        refcounted storage."""
+        del pos, private_row
+        return self
 
     # -- reads -------------------------------------------------------------
     @abc.abstractmethod
@@ -262,20 +277,22 @@ class DenseCache(KVCache):
             v=jax.lax.dynamic_update_slice_in_dim(self.v, vq, start, ax))
 
     def append_slots(self, kq, vq, starts, active=None):
-        """kq/vq: (B, 1, KV, D); starts: (B,) int32.  An inactive slot
-        reads back the tile at its (clamped) write index and writes it
+        """kq/vq: (B, s, KV, D); starts: (B,) int32 (s == 1 is the decode
+        step, s > 1 the speculative verify window).  An inactive slot
+        reads back the tiles at its (clamped) write index and writes them
         unchanged — a masked step is bit-exact cache-neutral.  Out-of-
-        range starts clamp (XLA dynamic-slice semantics); the slot decode
-        loop deactivates capacity-full slots before they could clamp
+        range starts clamp (XLA dynamic-slice semantics); the decode
+        loops deactivate capacity-full slots before they could clamp
         while active."""
         starts = jnp.asarray(starts, jnp.int32)
+        s = kq.shape[1]
 
-        def write_one(c, u, st):          # c: (S, KV, D), u: (1, KV, D)
+        def write_one(c, u, st):          # c: (S, KV, D), u: (s, KV, D)
             return jax.lax.dynamic_update_slice_in_dim(c, u, st, 0)
 
         if active is not None:
             def read_one(c, st):
-                return jax.lax.dynamic_slice_in_dim(c, st, 1, 0)
+                return jax.lax.dynamic_slice_in_dim(c, st, s, 0)
 
             sel = active[:, None, None, None]
             kq = jnp.where(sel, kq, jax.vmap(read_one)(self.k, starts))

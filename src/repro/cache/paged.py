@@ -131,21 +131,23 @@ class PagedCache(KVCache):
             v=self.v.at[pages, offs].set(vq, mode="drop"))
 
     def append_slots(self, kq, vq, starts, active=None):
-        """Per-slot one-token scatter (kq/vq: (B, 1, KV, D)); inactive
-        slots read back their mapped tile and write it unchanged —
+        """Per-slot token scatter (kq/vq: (B, s, KV, D) — s == 1 for the
+        decode step, s > 1 for the speculative verify window; a row's s
+        tokens may span a page boundary, the table maps each); inactive
+        slots read back their mapped tiles and write them unchanged —
         bit-exact cache-neutral, matching DenseCache."""
+        s = kq.shape[1]
         starts = jnp.asarray(starts, jnp.int32).reshape(-1, 1)     # (B, 1)
-        pages, offs = self._page_of(starts)
-        pages, offs = pages[:, 0], offs[:, 0]
-        kq1, vq1 = kq[:, 0], vq[:, 0]                              # (B, KV, D)
+        pos = starts + jnp.arange(s, dtype=jnp.int32)[None]        # (B, s)
+        pages, offs = self._page_of(pos)
         if active is not None:
-            sel = active[:, None, None]
-            kq1 = jnp.where(sel, kq1, self.k[pages, offs])
-            vq1 = jnp.where(sel, vq1, self.v[pages, offs])
+            sel = active[:, None, None, None]
+            kq = jnp.where(sel, kq, self.k[pages, offs])
+            vq = jnp.where(sel, vq, self.v[pages, offs])
         return dataclasses.replace(
             self,
-            k=self.k.at[pages, offs].set(kq1, mode="drop"),
-            v=self.v.at[pages, offs].set(vq1, mode="drop"))
+            k=self.k.at[pages, offs].set(kq, mode="drop"),
+            v=self.v.at[pages, offs].set(vq, mode="drop"))
 
     # -- reads -------------------------------------------------------------
     def _blocks_for(self, limit: Optional[int]):
@@ -177,6 +179,48 @@ class PagedCache(KVCache):
             "paged splices go through splice_dense_into_pages (the "
             "scheduler prefills admissions into a dense batch-1 cache and "
             "scatters it into the slot's private pages)")
+
+    def rollback(self, pos, private_row=None):
+        """Rewind slot b's table cursor to ``pos[b]`` valid entries.
+
+        Without ``private_row`` this is the dense no-op (entries at
+        positions >= pos are dead through the table exactly as they are
+        through a contiguous layout — masks never read them, the next
+        append overwrites them) and appends stay wherever the table
+        points, which the engine guarantees is private storage.
+
+        With ``private_row`` (B, NB) — the slot's own page ids — the
+        rewound region is RE-POINTED at private pages so a rewind into a
+        SHARED prefix page can never let a later append mutate refcounted
+        storage: blocks strictly after the boundary hold only dead data
+        and just swap their table entry; the boundary block (the one
+        containing ``pos``, partially live) is copy-on-rewind — its
+        current page's contents are copied into the private page before
+        the table swap, so the live prefix survives and the shared page
+        is never written.  Shared pages' refcounts are host-side
+        (PrefixStore) state; this device op never frees or mutates them.
+        """
+        if private_row is None:
+            return self
+        ps, nb = self.page_size, self.n_blocks
+        pos = jnp.asarray(pos, jnp.int32).reshape(-1)              # (B,)
+        prow = jnp.asarray(private_row, jnp.int32)                 # (B, NB)
+        blk = jnp.clip(pos // ps, 0, nb - 1)                       # boundary
+        rewind = jnp.arange(nb, dtype=jnp.int32)[None] >= blk[:, None]
+        new_table = jnp.where(rewind, prow, self.table)  # broadcasts (L,...)
+        # copy-on-rewind the boundary block (a self-copy when it is
+        # already private — identity, since the gather reads pre-scatter
+        # contents).  Scanned stacks keep one table per layer with
+        # identical entries (the scheduler writes rows uniformly), so one
+        # (B,)-vector page copy serves every layer's pool slice.
+        tb2 = self.table.reshape((-1,) + self.table.shape[-2:])[0]  # (B, NB)
+        src = jnp.take_along_axis(tb2, blk[:, None], axis=-1)[:, 0]
+        dst = jnp.take_along_axis(prow, blk[:, None], axis=-1)[:, 0]
+        return dataclasses.replace(
+            self,
+            k=_put_pages(self.k, dst, _take_pages(self.k, src)),
+            v=_put_pages(self.v, dst, _take_pages(self.v, src)),
+            table=new_table)
 
 
 # -- scheduler-side page ops (stacked-layer aware) --------------------------

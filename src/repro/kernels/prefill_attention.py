@@ -51,16 +51,29 @@ Positional and block-skipped, always in LOGICAL positions (block index *
 block_k + offset — the table only relocates storage): causal and
 sliding-window predicates are evaluated per TILE first and a fully-masked
 tile skips its matmuls entirely via ``pl.when`` — a sliding-window layer
-therefore costs O(S * window) compute, not O(S^2).  (Skipped tiles are
-still DMA'd; see the ROADMAP "prefill DMA skip" item.)  ``q_start``
-(scalar: chunk offset of query row 0) and ``kv_len`` (per-request valid
-KV count) make the same executable serve chunked, ragged prefill:
-element masks re-apply after the running-max update (an all-masked tile
-has s == m_new == NEG_INF and exp(0) == 1), and padded/garbage rows end
+therefore costs O(S * window) compute, not O(S^2).  ``q_start`` (chunk
+offset of query row 0 — a scalar, or a (B,) vector for the per-slot
+speculative-verify pass) and ``kv_len`` (per-request valid KV count)
+make the same executable serve chunked, ragged prefill: element masks
+re-apply after the running-max update (an all-masked tile has
+s == m_new == NEG_INF and exp(0) == 1), and padded/garbage rows end
 with l == 0, normalizing to exact zeros like the decode kernel's
 empty-cache case.  The decode kernel's per-slot ``cur_pos`` vector and
 the slot scheduler's inactive slots (kv_len == 0) reuse this same
 convention.
+
+DMA skip (index-map clamp)
+--------------------------
+``q_start`` / ``kv_len`` ride the scalar-prefetch path next to the block
+table, so the K/V index maps can see them: a KV block whose every (q, k)
+pair is masked (beyond the causal frontier, past ``kv_len``, or left of
+the sliding-window band) has its block index CLAMPED to the nearest live
+block — Pallas elides the copy when a block's index repeats between grid
+steps, so fully-dead tiles cost neither MXU time (``pl.when``, as
+before) nor DMA bandwidth.  The clamp predicate is exactly the kernel
+body's ``live`` predicate, so a clamped tile is never read.
+``dma_skip=False`` keeps the unclamped maps (the parity oracle in
+tests/test_prefill_fastpath.py).
 
 A bf16/f32 K/V stream runs through the same kernel with scales == 1.
 The pure-jnp oracle is kernels/ref.py::prefill_attention_ref.
@@ -79,13 +92,16 @@ from repro.kernels.tpu_compat import tpu_compiler_params
 NEG_INF = -1e30
 
 
-def _kernel(tab_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, qs_ref, kl_ref,
+def _kernel(tab_ref, qs_ref, kl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
             o_ref, acc_ref, m_ref, l_ref, *, n_k: int, block_q: int,
             block_k: int, groups: int, dim: int, causal: bool,
             window: int | None):
     # tab_ref: scalar-prefetch block table — consumed by the K/V index
-    # maps only; positions below are logical
+    # maps only; positions below are logical.  qs_ref/kl_ref are the
+    # per-request (B,) q_start / kv_len vectors, shared with the index
+    # maps (the DMA-skip clamp) and read per batch row here.
     del tab_ref
+    bi = pl.program_id(0)
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -95,8 +111,8 @@ def _kernel(tab_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, qs_ref, kl_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q_start = qs_ref[0, 0]
-    kv_len = kl_ref[0, 0]
+    q_start = qs_ref[bi]
+    kv_len = kl_ref[bi]
     q_lo = q_start + qi * block_q      # absolute position of query row 0
     k_lo = ki * block_k                # absolute position of key col 0
 
@@ -162,7 +178,7 @@ def _fit_block(s: int, target: int) -> int:
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "block_q", "out_dtype",
-                     "interpret"))
+                     "interpret", "dma_skip"))
 def prefill_attention_tiles(
     q: jax.Array,          # (B, Sq, KV, G, D) float — prompt queries
     k_pool: jax.Array,     # (pages, block_k, KV, D) int8 or float tiles
@@ -170,7 +186,7 @@ def prefill_attention_tiles(
     block_tab: jax.Array,  # (B, KV-chunks) int32 page per logical block
     k_scale: jax.Array,    # (KV,) f32 per-head dequant scale
     v_scale: jax.Array,    # (KV,) f32 per-head dequant scale
-    q_start: jax.Array,    # scalar int32: absolute position of query row 0
+    q_start: jax.Array,    # scalar or (B,) int32: position of query row 0
     kv_len: jax.Array,     # (B,) int32: valid KV count per request
     *,
     causal: bool = True,
@@ -178,9 +194,17 @@ def prefill_attention_tiles(
     block_q: int = 256,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    dma_skip: bool = True,
 ):
     """Kernel core: fused multi-query-row flash attention over
-    block-table-mapped KV tiles.  Returns (B, Sq, KV, G, D)."""
+    block-table-mapped KV tiles.  Returns (B, Sq, KV, G, D).
+
+    ``q_start`` may be per-request (B,): the speculative-verify pass runs
+    each slot's draft window at its own offset through this one
+    executable (a scalar broadcasts — chunked prefill's uniform offset).
+    ``dma_skip=False`` disables the masked-tile index-map clamp (see
+    module docstring), for parity testing only.
+    """
     b, sq, kvh, g, d = q.shape
     bk = k_pool.shape[1]
     n_k = block_tab.shape[1]
@@ -201,23 +225,39 @@ def prefill_attention_tiles(
     kernel = functools.partial(
         _kernel, n_k=n_k, block_q=bq, block_k=bk, groups=g, dim=d,
         causal=causal, window=window)
+
+    def kv_index(bi, h, qi, ki, tab, qs, kl):
+        if dma_skip:
+            # clamp a fully-masked block to the nearest LIVE block: its
+            # page index then repeats a neighbouring grid step's, so the
+            # copy is elided.  The live range below mirrors the kernel
+            # body's ``live`` predicate exactly (see _kernel), so a
+            # clamped tile's (wrong) contents are never read.
+            q_lo = qs[bi] + qi * bq
+            last = jnp.minimum(n_k - 1,
+                               (jnp.maximum(kl[bi], 1) - 1) // bk)
+            if causal:
+                last = jnp.minimum(last, (q_lo + bq - 1) // bk)
+            first = 0
+            if window is not None:
+                first = jnp.maximum(0, (q_lo - (window - 1)) // bk)
+            ki = jnp.clip(ki, first, last)
+        return (tab[bi, ki], 0, h, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=3,
         grid=(b, kvh, n_q, n_k),
         in_specs=[
             pl.BlockSpec((1, 1, rows, d),
-                         lambda bi, h, qi, ki, tab: (bi, h, qi, 0)),
-            pl.BlockSpec((1, bk, 1, d),
-                         lambda bi, h, qi, ki, tab: (tab[bi, ki], 0, h, 0)),
-            pl.BlockSpec((1, bk, 1, d),
-                         lambda bi, h, qi, ki, tab: (tab[bi, ki], 0, h, 0)),
-            pl.BlockSpec((1, 1), lambda bi, h, qi, ki, tab: (h, 0)),
-            pl.BlockSpec((1, 1), lambda bi, h, qi, ki, tab: (h, 0)),
-            pl.BlockSpec((1, 1), lambda bi, h, qi, ki, tab: (0, 0)),
-            pl.BlockSpec((1, 1), lambda bi, h, qi, ki, tab: (bi, 0)),
+                         lambda bi, h, qi, ki, tab, qs, kl: (bi, h, qi, 0)),
+            pl.BlockSpec((1, bk, 1, d), kv_index),
+            pl.BlockSpec((1, bk, 1, d), kv_index),
+            pl.BlockSpec((1, 1), lambda bi, h, qi, ki, tab, qs, kl: (h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, qi, ki, tab, qs, kl: (h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, rows, d),
-                               lambda bi, h, qi, ki, tab: (bi, h, qi, 0)),
+        out_specs=pl.BlockSpec(
+            (1, 1, rows, d),
+            lambda bi, h, qi, ki, tab, qs, kl: (bi, h, qi, 0)),
         scratch_shapes=_scratch(rows, d),
     )
     out = pl.pallas_call(
@@ -229,13 +269,13 @@ def prefill_attention_tiles(
         interpret=interpret,
     )(
         block_tab.astype(jnp.int32),
+        jnp.broadcast_to(jnp.asarray(q_start, jnp.int32).reshape(-1), (b,)),
+        jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,)),
         q2,
         k_pool,
         v_pool,
         k_scale.reshape(kvh, 1).astype(jnp.float32),
         v_scale.reshape(kvh, 1).astype(jnp.float32),
-        jnp.reshape(q_start, (1, 1)).astype(jnp.int32),
-        jnp.reshape(jnp.broadcast_to(kv_len, (b,)), (b, 1)).astype(jnp.int32),
     )
     out = out.reshape(b, kvh, sq_p, g, d).transpose(0, 2, 1, 3, 4)
     return out[:, :sq]
@@ -244,14 +284,14 @@ def prefill_attention_tiles(
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "block_q", "block_k", "out_dtype",
-                     "interpret"))
+                     "interpret", "dma_skip"))
 def prefill_attention_int8(
     q: jax.Array,        # (B, Sq, KV, G, D) float — prompt queries, GQA view
     k: jax.Array,        # (B, Sk, KV, D) int8 (or float with scales == 1)
     v: jax.Array,        # (B, Sk, KV, D) int8 (or float with scales == 1)
     k_scale: jax.Array,  # (KV,) f32 per-head dequant scale
     v_scale: jax.Array,  # (KV,) f32 per-head dequant scale
-    q_start: jax.Array,  # scalar int32: absolute position of query row 0
+    q_start: jax.Array,  # scalar or (B,) int32: position of query row 0
     kv_len: jax.Array,   # (B,) int32: valid KV count per request
     *,
     causal: bool = True,
@@ -260,6 +300,7 @@ def prefill_attention_int8(
     block_k: int = 256,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    dma_skip: bool = True,
 ):
     """Dense entry point: a contiguous (B, Sk, KV, D) KV stream
     degenerates to the identity block table over a free leading-axis
@@ -281,7 +322,7 @@ def prefill_attention_int8(
     return prefill_attention_tiles(
         q, k_pool, v_pool, tab, k_scale, v_scale, q_start, kv_len,
         causal=causal, window=window, block_q=block_q, out_dtype=out_dtype,
-        interpret=interpret)
+        interpret=interpret, dma_skip=dma_skip)
 
 
 def _scratch(rows, d):

@@ -9,8 +9,16 @@ that assembly once:
     engine = Engine.from_checkpoint(arch="smollm-135m", smoke=True)
     # batched one-shot serving (prefill + scanned decode, AOT-compiled):
     result = engine.generate_batch(batch, gen=16)
+    # one prompt == generate_batch at B=1 (same executables, no drift):
+    result = engine.generate_one(prompt_tokens, gen=16)
     # continuous batching (slot scheduler; paged layout => prefix sharing):
     completions = engine.generate(requests, max_slots=4)
+
+The decode scheme is an Engine-level knob too (``decode_strategy`` in
+{"greedy", "sample", "speculative"} + ``spec_k``/``spec_ngram``): both
+serving paths run the same ``DecodeStrategy`` (launch/strategies.py),
+so speculative decoding — bit-identical tokens to greedy — is one
+constructor argument away on either.
 
 ``from_checkpoint`` restores params via repro.checkpoint.manager when a
 directory is given (the ``{"params": ...}`` tree train.py writes) and
@@ -76,12 +84,28 @@ class Engine:
                  qparams, *, mode: str = "int8", cache_layout: str = "ring",
                  page_size: int = 64, prefill_chunk: Optional[int] = None,
                  temperature: float = 0.0, top_p: float = 1.0,
-                 seed: int = 0):
+                 seed: int = 0, decode_strategy: Optional[str] = None,
+                 spec_k: int = 4, spec_ngram: int = 2):
+        """``decode_strategy`` picks the decode-loop scheme
+        (strategies.STRATEGIES: "greedy" | "sample" | "speculative");
+        None auto-selects from ``temperature`` (the historical behavior).
+        ``spec_k``/``spec_ngram`` are the speculative draft-window and
+        prompt-lookup n-gram sizes (static — no retrace across draft
+        contents)."""
         from repro.cache import LAYOUTS
+        from repro.launch import strategies as SG
 
         if cache_layout not in LAYOUTS:
             raise ValueError(f"cache_layout must be one of {LAYOUTS}, got "
                              f"{cache_layout!r}")
+        if decode_strategy is not None:
+            # eager validation through the single authority
+            # (strategies.make_strategy): unknown names,
+            # strategy/temperature conflicts, and attention-only-config
+            # violations all reject at construction, not first generate
+            SG.make_strategy(decode_strategy, model, cfg, policy, mode,
+                             temperature=temperature, top_p=top_p,
+                             spec_k=spec_k, spec_ngram=spec_ngram)
         self.model, self.cfg, self.policy = model, cfg, policy
         self.serve_params, self.qparams = serve_params, qparams
         self.mode = mode
@@ -89,6 +113,8 @@ class Engine:
         self.page_size = page_size
         self.prefill_chunk = prefill_chunk
         self.temperature, self.top_p, self.seed = temperature, top_p, seed
+        self.decode_strategy = decode_strategy
+        self.spec_k, self.spec_ngram = spec_k, spec_ngram
         self._scheduler = None
         self._scheduler_key = None
 
@@ -188,11 +214,25 @@ class Engine:
         twice."""
         model, cfg, policy = self.model, self.cfg, self.policy
         mode = self.mode
+        speculative = self.decode_strategy == "speculative"
+        if speculative and loop:
+            raise ValueError("the legacy per-token loop has no "
+                             "speculative variant (drop loop=True)")
         tokens = batch["tokens"]
         requests, s = tokens.shape
         if prompt_len is None:
             prompt_len = s
-        cache = self.init_cache(requests, self._cache_len(prompt_len, gen))
+        # a speculative verify window appends spec_k + 1 entries before
+        # accepting — reserve draft headroom past the generation budget.
+        # Speculation also needs absolute slots: map the ring default to
+        # dense (a max_len-sized dense cache serves SWA layers correctly
+        # through window masks — the same aliasing the scheduler does)
+        max_len = self._cache_len(prompt_len,
+                                  gen + (self.spec_k if speculative else 0))
+        cache_kw = {}
+        if speculative and self.cache_layout == "ring":
+            cache_kw["layout"] = "dense"
+        cache = self.init_cache(requests, max_len, **cache_kw)
 
         prefill = jax.jit(
             ST.make_prefill_step(model, cfg, policy, mode=mode,
@@ -240,6 +280,29 @@ class Engine:
                                            top_p=self.top_p)
                 toks_out.append(nxt)
             out = jnp.stack(toks_out, axis=1)
+        elif speculative:
+            from repro.launch import strategies as SG
+
+            strat = SG.make_strategy("speculative", model, cfg, policy,
+                                     mode, spec_k=self.spec_k,
+                                     spec_ngram=self.spec_ngram)
+            decode_loop = jax.jit(
+                SG.make_strategy_decode_loop(model, cfg, policy, strat,
+                                             mode=mode, n_steps=gen),
+                donate_argnums=(3,))
+            # prompt-lookup history: absolute position -> token, seeded
+            # with the prompt and the pending first generated token
+            hist = jnp.zeros((requests, max_len), jnp.int32)
+            hist = hist.at[:, :prompt_len].set(
+                tokens[:, :prompt_len].astype(jnp.int32))
+            hist = hist.at[:, prompt_len].set(next_tok)
+            pos_v = jnp.full((requests,), pos0, jnp.int32)
+            loop_x = decode_loop.lower(self.serve_params, self.qparams,
+                                       next_tok, cache, pos_v, key,
+                                       hist).compile()
+            t0 = time.time()
+            out, cache = loop_x(self.serve_params, self.qparams, next_tok,
+                                cache, pos_v, key, hist)
         else:
             decode_loop = jax.jit(
                 ST.make_decode_loop(model, cfg, policy, mode=mode,
@@ -274,7 +337,8 @@ class Engine:
         # after a generate() call rebuilds instead of serving stale config
         key = (max_slots, prompt_cap, gen_cap, block_steps, eos_id,
                prefix_pages, self.cache_layout, self.page_size,
-               self.prefill_chunk, self.temperature, self.top_p, self.seed)
+               self.prefill_chunk, self.temperature, self.top_p, self.seed,
+               self.decode_strategy, self.spec_k, self.spec_ngram)
         if self._scheduler is None or self._scheduler_key != key:
             layout = ("paged" if self.cache_layout == "paged" else "dense")
             self._scheduler = SlotScheduler(
@@ -284,7 +348,9 @@ class Engine:
                 prefill_chunk=self.prefill_chunk, block_steps=block_steps,
                 cache_layout=layout, page_size=self.page_size,
                 prefix_pages=prefix_pages, temperature=self.temperature,
-                top_p=self.top_p, eos_id=eos_id, seed=self.seed)
+                top_p=self.top_p, eos_id=eos_id, seed=self.seed,
+                strategy=self.decode_strategy, spec_k=self.spec_k,
+                spec_ngram=self.spec_ngram)
             self._scheduler_key = key
         return self._scheduler
 
@@ -307,3 +373,19 @@ class Engine:
             max_slots=max_slots, prompt_cap=prompt_cap, gen_cap=gen_cap,
             block_steps=block_steps, eos_id=eos_id)
         return sched.run(reqs, max_blocks=max_blocks)
+
+    # -- single prompt -----------------------------------------------------
+    def generate_one(self, tokens, gen: int, **kw) -> GenerationResult:
+        """Serve ONE prompt — by delegating to ``generate_batch`` at
+        B == 1, never by re-deriving its own prefill/decode steps: the
+        single-prompt path runs the exact executables the batched path
+        runs (same strategy, same cache sizing, same AOT compile), so it
+        cannot drift from it.  ``tokens`` is a 1-D prompt (list/array);
+        returns the usual :class:`GenerationResult` with ``tokens`` of
+        shape (1, gen)."""
+        toks = jnp.asarray(tokens, jnp.int32)
+        if toks.ndim != 1:
+            raise ValueError(
+                f"generate_one takes a single 1-D prompt, got shape "
+                f"{toks.shape} (use generate_batch for batches)")
+        return self.generate_batch({"tokens": toks[None, :]}, gen, **kw)

@@ -66,6 +66,7 @@ from repro.cache import (KVCache, PrefixEntry, PrefixStore, copy_pages,
                          set_table_row, splice_dense_into_pages)
 from repro.core import api as A
 from repro.launch import steps as ST
+from repro.launch import strategies as SG
 
 
 @dataclasses.dataclass
@@ -131,6 +132,15 @@ class SlotScheduler:
     temperature, top_p, seed : sampling (greedy when temperature == 0).
     eos_id : generation stops for a slot when it emits this token
         (< 0 disables).
+    strategy : decode strategy — a name from ``strategies.STRATEGIES``
+        ("greedy" | "sample" | "speculative"), a ``DecodeStrategy``
+        instance, or None (auto: sample when temperature > 0, else
+        greedy — the pre-redesign behavior).  Speculative slots drain at
+        different rates (1..spec_k+1 tokens per verify window); their
+        raggedness is data, so the no-retrace contract is unchanged.
+    spec_k, spec_ngram : speculative knobs — draft window length and the
+        prompt-lookup n-gram size (both static: one compiled decode
+        executable serves every draft/acceptance pattern).
     """
 
     def __init__(self, model, cfg, policy: A.QuantPolicy, serve_params,
@@ -140,7 +150,8 @@ class SlotScheduler:
                  cache_layout: str = "dense", page_size: int = 64,
                  prefix_pages: int | None = None,
                  temperature: float = 0.0, top_p: float = 1.0,
-                 eos_id: int = -1, seed: int = 0):
+                 eos_id: int = -1, seed: int = 0,
+                 strategy=None, spec_k: int = 4, spec_ngram: int = 2):
         kinds = {cfg.layer_kind(i) for i in range(cfg.n_layers)}
         wins = {cfg.attn_window(i) for i in range(cfg.n_layers)}
         if kinds - {"attn", "attn_local"} or cfg.modality != "text":
@@ -170,7 +181,18 @@ class SlotScheduler:
         self.eos_id = eos_id
         self.cache_layout = cache_layout
         self.page_size = page_size
-        cache_len = self.prompt_cap + gen_cap
+        if isinstance(strategy, SG.DecodeStrategy):
+            self._strategy = strategy
+        else:
+            self._strategy = SG.make_strategy(
+                strategy, model, cfg, policy, mode,
+                temperature=temperature, top_p=top_p, spec_k=spec_k,
+                spec_ngram=spec_ngram)
+        self._emit_w = self._strategy.emit_width
+        # a speculative window appends emit_width entries before the
+        # accept — reserve headroom so a slot can still fill its whole
+        # generation budget (greedy: emit_width == 1, zero extra)
+        cache_len = self.prompt_cap + gen_cap + (self._emit_w - 1)
         if policy.use_pallas:
             # tile the cache length for the fused decode kernel — a
             # non-tiling length pad-copies the cache every step
@@ -236,10 +258,18 @@ class SlotScheduler:
 
         self._prefill_fn = jax.jit(counted("prefill", ST.make_prefill_step(
             model, cfg, policy, mode=mode, prefill_chunk=prefill_chunk)))
-        self._decode_fn = jax.jit(counted("decode", ST.make_slot_decode_loop(
-            model, cfg, policy, mode=mode, n_steps=block_steps,
-            temperature=temperature, top_p=top_p, eos_id=eos_id)),
+        self._decode_fn = jax.jit(counted("decode", SG.make_strategy_slot_loop(
+            model, cfg, policy, self._strategy, mode=mode,
+            n_steps=block_steps, eos_id=eos_id)),
             donate_argnums=(3,))
+        # strategy state: absolute-position -> token history for prompt
+        # lookup (seeded per slot at admission); empty for stateless
+        # strategies.  Host-resident between blocks, device during.
+        hist_w = cache_len if self._strategy.stateful else 0
+        self._hist = np.zeros((max_slots, hist_w), np.int32)
+        # speculative observability: emitted tokens per verify window
+        self._spec_emitted = 0
+        self._spec_windows = 0
         if cache_layout == "paged":
             self._insert_fn = jax.jit(
                 counted("insert", lambda c, sc, row: _cache_map(
@@ -276,6 +306,23 @@ class SlotScheduler:
     def prefix_stats(self) -> dict:
         """Prefix-sharing counters (paged layout; empty dict for dense)."""
         return self._prefix.stats() if self._prefix is not None else {}
+
+    def spec_stats(self) -> dict:
+        """Speculative-decoding counters (empty dict for one-token
+        strategies).  ``acceptance_rate`` is accepted drafts per drafted
+        token: a verify window emits 1 + accepted tokens, so the rate is
+        (emitted/windows - 1) / spec_k in [0, 1]."""
+        if self._emit_w == 1:
+            return {}
+        k = self._emit_w - 1
+        wins = max(self._spec_windows, 1)
+        return {
+            "emitted_tokens": int(self._spec_emitted),
+            "verify_windows": int(self._spec_windows),
+            "draft_k": k,
+            "tokens_per_window": self._spec_emitted / wins,
+            "acceptance_rate": max(self._spec_emitted / wins - 1.0, 0.0) / k,
+        }
 
     # -- counted invocation helpers ---------------------------------------
     def _prefill(self, *args):
@@ -324,6 +371,14 @@ class SlotScheduler:
                     continue
                 req = queue.popleft()
                 t0 = self._admit(slot, req)
+                if self._strategy.stateful:
+                    # seed the prompt-lookup history: absolute position ->
+                    # token, prompt then the pending first generation
+                    L = len(req.tokens)
+                    self._hist[slot] = 0
+                    self._hist[slot, :L] = np.asarray(req.tokens, np.int32)
+                    if L < self._hist.shape[1]:
+                        self._hist[slot, L] = int(t0)
                 slot_req[slot] = req
                 slot_out[slot] = [int(t0)]
                 pos[slot] = len(req.tokens)
@@ -337,26 +392,37 @@ class SlotScheduler:
                 continue
 
             # -- one decode block over the slot batch ----------------------
-            toks, emitted, self._cache, pos_d, active_d, self._key = \
+            toks, emitted, self._cache, pos_d, active_d, self._key, hist = \
                 self._decode(
                     self.serve_params, self.qparams, jnp.asarray(last_tok),
                     self._cache, jnp.asarray(pos), jnp.asarray(active),
-                    self._key)
+                    self._key, jnp.asarray(self._hist))
             toks = np.asarray(toks)
             emitted = np.asarray(emitted)
             pos_new = np.asarray(pos_d)
             active_new = np.asarray(active_d)
+            # host copy: admission mutates rows in place (np.asarray of a
+            # device buffer is read-only)
+            self._hist = np.array(hist)
+            if self._emit_w > 1:
+                # a window with any emission ran a live verify pass
+                win = emitted.reshape(B, self.block_steps, self._emit_w)
+                self._spec_windows += int(win.any(-1).sum())
+                self._spec_emitted += int(emitted.sum())
 
             # -- collect emissions, retire finished slots ------------------
+            # emission lanes are RAGGED within a speculative window (a
+            # partial accept leaves un-emitted tail lanes, then the next
+            # window emits again) — skip gaps instead of stopping at one
             for slot in range(B):
                 req = slot_req[slot]
                 if req is None or not active[slot]:
                     continue
-                for i in range(self.block_steps):
-                    if not emitted[slot, i]:
-                        break
+                for i in range(self.block_steps * self._emit_w):
                     if len(slot_out[slot]) >= req.max_gen:
                         break
+                    if not emitted[slot, i]:
+                        continue
                     slot_out[slot].append(int(toks[slot, i]))
                 pos[slot] = pos_new[slot]
                 last_tok[slot] = (slot_out[slot][-1]

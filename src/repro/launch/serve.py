@@ -47,6 +47,12 @@ Usage:
          --pallas (fused kernels; defaults on for TPU backends)
          --prefill-chunk N (chunked ragged prefill)
          --temperature T --top-p P --seed S (sampled decoding)
+         --strategy {greedy,sample,speculative} (decode strategy; the
+             DecodeStrategy protocol in launch/strategies.py —
+             speculative = prompt-lookup drafting + one batched verify
+             pass per window, bit-identical tokens to greedy)
+         --spec-k N --spec-ngram N (speculative draft window / lookup
+             n-gram; static, so no retrace across draft contents)
          --max-slots N (continuous-batching scheduler)
          --block-steps N --eos-id T (scheduler decode-block / EOS knobs)
          --cache-layout {dense,ring,paged} --page-size N (KV layout)
@@ -117,6 +123,12 @@ def run_continuous(args, engine: Engine):
         print(f"[serve] prefix store: {stats['hits']} hits / "
               f"{stats['misses']} misses | {stats['shared_tokens']} prompt "
               f"tokens served from shared pages (zero prefill FLOPs)")
+    spec = sched.spec_stats()
+    if spec:
+        print(f"[serve] speculative: {spec['emitted_tokens']} tokens over "
+              f"{spec['verify_windows']} verify windows "
+              f"({spec['tokens_per_window']:.2f} tok/window, "
+              f"draft acceptance {spec['acceptance_rate']:.2f})")
     for c in completions[:2]:
         print(f"  req{c.rid}: prompt_len={c.prompt_len} "
               f"finished_by={c.finished_by} -> {c.tokens}")
@@ -150,6 +162,21 @@ def main():
                     help="nucleus sampling mass (with --temperature > 0)")
     ap.add_argument("--seed", type=int, default=0,
                     help="PRNG seed for sampled decoding")
+    ap.add_argument("--strategy", default=None,
+                    choices=["greedy", "sample", "speculative"],
+                    help="decode strategy (launch/strategies.py); default "
+                         "auto-picks sample when --temperature > 0, else "
+                         "greedy.  speculative drafts --spec-k tokens by "
+                         "prompt-lookup n-gram matching and verifies them "
+                         "in ONE batched pass over the int8 cache — "
+                         "bit-identical tokens to greedy, fewer decode "
+                         "dispatches when the text repeats")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative draft-window length (tokens drafted "
+                         "per verify pass)")
+    ap.add_argument("--spec-ngram", type=int, default=2,
+                    help="prompt-lookup n-gram size for speculative "
+                         "drafting")
     ap.add_argument("--max-slots", type=int, default=None,
                     help="continuous batching: serve --requests ragged "
                          "requests through N cache slots with streaming "
@@ -182,7 +209,8 @@ def main():
         calib_batch=args.requests, calib_len=args.prompt_len,
         cache_layout=args.cache_layout, page_size=args.page_size,
         prefill_chunk=args.prefill_chunk, temperature=args.temperature,
-        top_p=args.top_p, seed=args.seed)
+        top_p=args.top_p, seed=args.seed, decode_strategy=args.strategy,
+        spec_k=args.spec_k, spec_ngram=args.spec_ngram)
     if not args.fp:
         print(f"[serve] converted: {engine.n_int8_weights()} int8 weight "
               "tensors resident")

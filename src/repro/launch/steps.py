@@ -23,6 +23,14 @@
                        so one executable serves every admission pattern
                        (driven by launch/scheduler.py).
 
+The decode loops are thin compatibility wrappers now: the scan bodies
+live in ``launch/strategies.py`` behind the ``DecodeStrategy`` protocol
+(propose/verify/accept over an explicit ``DecodeState`` carry), with
+``GreedyStrategy``/``SamplingStrategy`` as bit-exact ports of the old
+bodies and ``SpeculativeStrategy`` (prompt-lookup drafting + batched
+verify) as the first new scheme.  These wrappers keep the historical
+signatures — (temperature, top_p) knobs in, (toks, ...) shapes out.
+
 Masking semantics shared by the serving steps: a request's raggedness is
 always DATA (length vectors, per-slot positions, active masks), never
 SHAPE — that is what keeps each step a single compiled executable.  A
@@ -43,6 +51,11 @@ import jax.numpy as jnp
 
 from repro.core import api as A
 from repro.core.distill import chunked_ce_loss, chunked_sq_err
+from repro.launch.strategies import (  # noqa: F401  (re-exports: the
+    DecodeState, DecodeStrategy, GreedyStrategy,  # pre-redesign public
+    SamplingStrategy, SpeculativeStrategy,        # home of sample_tokens
+    _attn_cache_len, _serve_ctx, make_strategy,
+    make_strategy_decode_loop, make_strategy_slot_loop, sample_tokens)
 from repro.optim.adam import AdamState, adam_init, adam_update, cosine_restarts
 
 
@@ -153,18 +166,6 @@ def make_pretrain_step(model, cfg, hp: TrainHParams = TrainHParams()):
     return pretrain_step
 
 
-def _serve_ctx(mode: str, policy: A.QuantPolicy, qparams):
-    """Serving ctx.  A ctx is built even for mode='none' when the policy
-    quantizes the KV cache or enables the Pallas kernels (Dense layers
-    still run full precision — enabled() is False): the
-    int8-KV-over-bf16-weights ablation needs the KV thresholds in qparams
-    to reach attention, and the fused bf16-KV attention kernels (unit
-    scales) need the policy flag to reach it."""
-    if mode == "none" and not (policy.kv_int8 or policy.use_pallas):
-        return None
-    return A.make_ctx(mode, policy, qparams)
-
-
 def pad_for_chunked_prefill(tokens, chunk: int, lengths=None):
     """Pad (B, S) tokens up to a ``chunk`` multiple and build the
     per-request length vector the chunked prefill step consumes
@@ -176,26 +177,6 @@ def pad_for_chunked_prefill(tokens, chunk: int, lengths=None):
     if lengths is None:
         lengths = jnp.full((b,), s, jnp.int32)
     return tokens, jnp.asarray(lengths, jnp.int32)
-
-
-def _attn_cache_len(cache):
-    """Logical sequence capacity of the first attention cache in a cache
-    pytree — a ``repro.cache.KVCache`` object (any layout, stacked or
-    per-layer; paged capacity is blocks * page_size) or, for stub caches
-    in tests, a plain dict with a (..., S, KV, D) "k" leaf."""
-    from repro.cache import KVCache
-
-    if isinstance(cache, KVCache):
-        return cache.capacity
-    if isinstance(cache, dict):
-        if "attn" in cache and isinstance(cache["attn"], dict) \
-                and "k" in cache["attn"]:
-            return cache["attn"]["k"].shape[-3]
-        for sub in cache.values():
-            n = _attn_cache_len(sub)
-            if n is not None:
-                return n
-    return None
 
 
 def make_prefill_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8",
@@ -271,30 +252,6 @@ def make_prefill_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8",
     return prefill_step
 
 
-def sample_tokens(logits, key, *, temperature: float = 1.0,
-                  top_p: float = 1.0):
-    """Temperature / nucleus (top-p) sampling over (B, V) logits.
-
-    ``temperature <= 0`` is greedy argmax.  ``top_p < 1`` keeps the
-    smallest prefix of probability-sorted tokens whose mass reaches
-    top_p (always at least the argmax) and renormalizes over it.
-    """
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    l = logits.astype(jnp.float32) / max(temperature, 1e-6)
-    if top_p < 1.0:
-        sorted_l = jnp.sort(l, axis=-1)[..., ::-1]
-        probs = jax.nn.softmax(sorted_l, axis=-1)
-        # exclusive cumulative mass: a token stays while the mass BEFORE
-        # it is < top_p, so the argmax always survives
-        cum = jnp.cumsum(probs, axis=-1) - probs
-        keep = cum < top_p
-        thresh = jnp.min(jnp.where(keep, sorted_l, jnp.inf), axis=-1,
-                         keepdims=True)
-        l = jnp.where(l >= thresh, l, -jnp.inf)
-    return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)
-
-
 def make_serve_step(model, cfg, policy: A.QuantPolicy, mode: str = "int8"):
     def serve_step(serve_params, qparams, tokens, cache, cur_pos,
                    slot_mask=None):
@@ -315,47 +272,25 @@ def make_decode_loop(model, cfg, policy: A.QuantPolicy, mode: str = "int8",
                      top_p: float = 1.0):
     """Whole-generation decode as ONE compiled call (the serving fast path).
 
-    The per-token Python loop re-dispatches the jitted step every token —
-    at decode shapes the dispatch overhead rivals the compute.  Here the
-    decode body rolls into a single ``jax.lax.scan`` carrying (token,
-    cache, position, PRNG key): N tokens cost one dispatch and XLA keeps
-    the cache resident across steps.  Callers should jit with
+    Compatibility wrapper over ``strategies.make_strategy_decode_loop``:
+    ``temperature`` picks ``GreedyStrategy`` (0.0, the default — bit-
+    identical greedy decoding) or ``SamplingStrategy`` (per-step key
+    split, optional nucleus ``top_p``).  The scan carries (token, cache,
+    position, PRNG key); N tokens cost one dispatch and XLA keeps the
+    cache resident across steps.  Callers should jit with
     ``donate_argnums=(3,)`` so the input cache buffer is reused for the
     scan carry instead of doubling resident cache HBM (serve.py does).
 
-    ``temperature > 0`` samples each token (optionally nucleus-filtered by
-    ``top_p``) with a per-step key split from the carried key; the default
-    0.0 keeps greedy decoding bit-identical to before.
-
     Returns (tokens (B, n_steps), final cache); tokens[:, 0] is ``tok0``
     (the caller's prefill argmax/sample), the rest come from the scan.
+    For speculative decoding build the loop directly via
+    ``strategies.make_strategy_decode_loop(...,  SpeculativeStrategy)``
+    (Engine.generate_batch does).
     """
-
-    step = make_serve_step(model, cfg, policy, mode=mode)
-    sampled = temperature > 0.0
-
-    def decode_loop(serve_params, qparams, tok0, cache, pos0, key=None):
-        if key is None:
-            key = jax.random.PRNGKey(0)
-
-        def body(carry, _):
-            tok, cache, pos, key = carry
-            nxt, logits, cache = step(serve_params, qparams, tok[:, None],
-                                      cache, pos)
-            if sampled:
-                key, sub = jax.random.split(key)
-                nxt = sample_tokens(logits[:, -1, :], sub,
-                                    temperature=temperature, top_p=top_p)
-            return (nxt, cache, pos + 1, key), nxt
-
-        carry0 = (tok0, cache, jnp.asarray(pos0, jnp.int32), key)
-        (_, cache, _, _), toks = jax.lax.scan(body, carry0, None,
-                                              length=n_steps - 1)
-        toks = jnp.concatenate([tok0[:, None], jnp.moveaxis(toks, 0, 1)],
-                               axis=1)
-        return toks, cache
-
-    return decode_loop
+    strategy = make_strategy(None, model, cfg, policy, mode,
+                             temperature=temperature, top_p=top_p)
+    return make_strategy_decode_loop(model, cfg, policy, strategy,
+                                     mode=mode, n_steps=n_steps)
 
 
 def make_slot_decode_loop(model, cfg, policy: A.QuantPolicy,
@@ -365,78 +300,31 @@ def make_slot_decode_loop(model, cfg, policy: A.QuantPolicy,
     """One continuous-batching decode BLOCK: ``n_steps`` scanned steps over
     a slot batch where every slot sits at its own position.
 
-    The single-stream loop above carries a scalar position; here the carry
-    is per-slot — (token (B,), cache, pos (B,), active (B,) bool, key) —
-    and each step:
-
-      * decodes all slots at their own positions (vector ``cur_pos``
-        through the decode kernel), with inactive slots masked in
-        attention (zero visible keys) and in the cache write (bit-exact
-        no-op append), so an all-slots-inactive step changes nothing;
-      * samples/argmaxes the next token for every slot, then freezes any
-        slot that emitted ``eos_id`` — EOS mid-scan stops THAT slot only
-        (its position stops advancing, its emissions mask off) while the
-        rest of the batch keeps decoding;
-      * deactivates slots whose position reached the cache capacity
-        before they could clamp-write over the last valid entry.
+    Compatibility wrapper over ``strategies.make_strategy_slot_loop``
+    with the one-token strategies (greedy / sampled by ``temperature``),
+    keeping the historical signature and shapes:
 
     Returns ``(toks (B, n_steps), emitted (B, n_steps) bool, cache,
     pos, active, key)``: ``emitted[b, i]`` marks real tokens (the EOS
     itself is emitted; everything after is padding).  The scheduler
-    (launch/scheduler.py) runs this block between admission rounds; all
-    shapes are fixed by (max_slots, cache_len, n_steps), so ONE compiled
-    executable serves every admission pattern — which slots are live,
-    at which positions, is data, not shape.
+    (launch/scheduler.py) runs strategy loops directly (so it can thread
+    speculative windows and the history carry); this wrapper serves the
+    tests and tooling that pin the one-token block semantics.
 
     ``eos_id < 0`` disables EOS detection (fixed-budget generation).
     Callers should jit with ``donate_argnums=(3,)`` like the
     single-stream loop.
     """
-    kinds = {cfg.layer_kind(i) for i in range(cfg.n_layers)}
-    if kinds - {"attn", "attn_local"} or cfg.modality != "text":
-        # same guard as chunked prefill: SSM decode advances its state for
-        # every batch row — a frozen slot's state would silently drift
-        raise ValueError(
-            "slot decode covers attention-only text stacks: SSM state "
-            "stepping has no per-slot freeze yet "
-            f"(got kinds={sorted(kinds)}, modality={cfg.modality})")
-
-    step = make_serve_step(model, cfg, policy, mode=mode)
-    sampled = temperature > 0.0
+    strategy = make_strategy(None, model, cfg, policy, mode,
+                             temperature=temperature, top_p=top_p)
+    inner = make_strategy_slot_loop(model, cfg, policy, strategy,
+                                    mode=mode, n_steps=n_steps,
+                                    eos_id=eos_id)
 
     def slot_decode_loop(serve_params, qparams, tok0, cache, pos0, active0,
                          key=None):
-        if key is None:
-            key = jax.random.PRNGKey(0)
-        cache_len = _attn_cache_len(cache)
-
-        def body(carry, _):
-            tok, cache, pos, active, key = carry
-            # capacity guard BEFORE the write: a slot at pos == cache_len
-            # has nowhere to append — freeze it instead of clamping over
-            # the last valid entry
-            if cache_len is not None:
-                active = active & (pos < cache_len)
-            nxt, logits, cache = step(serve_params, qparams, tok[:, None],
-                                      cache, pos, active)
-            if sampled:
-                key, sub = jax.random.split(key)
-                nxt = sample_tokens(logits[:, -1, :], sub,
-                                    temperature=temperature, top_p=top_p)
-            nxt = jnp.where(active, nxt, tok)      # frozen slots hold
-            emitted = active
-            if eos_id >= 0:
-                # the EOS token itself is emitted; the slot freezes after
-                active = active & (nxt != eos_id)
-            pos = jnp.where(emitted, pos + 1, pos)
-            return (nxt, cache, pos, active, key), (nxt, emitted)
-
-        pos0 = jnp.asarray(pos0, jnp.int32)
-        active0 = jnp.asarray(active0, bool)
-        carry0 = (jnp.asarray(tok0, jnp.int32), cache, pos0, active0, key)
-        (tok, cache, pos, active, key), (toks, emitted) = jax.lax.scan(
-            body, carry0, None, length=n_steps)
-        return (jnp.moveaxis(toks, 0, 1), jnp.moveaxis(emitted, 0, 1),
-                cache, pos, active, key)
+        toks, emitted, cache, pos, active, key, _ = inner(
+            serve_params, qparams, tok0, cache, pos0, active0, key)
+        return toks, emitted, cache, pos, active, key
 
     return slot_decode_loop

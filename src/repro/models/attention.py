@@ -239,6 +239,35 @@ def decode_attention(q, k_cache, v_cache, cur_pos, *, window: int | None = None)
     return _gqa_out(p, v_cache.astype(jnp.float32)).astype(q.dtype)
 
 
+def verify_attention(q, k_cache, v_cache, pos_vec, *, window: int | None = None):
+    """Speculative-verify attention: s draft-window queries per slot, each
+    slot at its own position.  q: (B, s, KV, G, D) — query j of slot b
+    sits at absolute position ``pos_vec[b] + j`` and sees cache keys
+    ``<= pos_vec[b] + j`` (the just-appended draft window included, causal
+    within it).  The s == 1 case is exactly ``decode_attention`` with
+    ``cur_pos = pos_vec + 1`` — same contraction order, same mask
+    convention — which is what makes speculative decoding bit-identical
+    to greedy under deterministic acceptance.  A slot with
+    ``pos_vec < 0`` (the inactive-slot encoding) sees no key and returns
+    exact zeros."""
+    b, s, kvh, g, d = q.shape
+    smax = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    sc = _gqa_scores(q.astype(jnp.float32) * scale,
+                     k_cache.astype(jnp.float32))      # (B, KV, G, s, Smax)
+    pos = jnp.broadcast_to(jnp.asarray(pos_vec, jnp.int32).reshape(-1), (b,))
+    q_pos = pos[:, None] + jnp.arange(s)               # (B, s)
+    k_pos = jnp.arange(smax)
+    mask = k_pos[None, None, :] <= q_pos[..., None]    # (B, s, Smax)
+    if window is not None:
+        mask &= (q_pos[..., None] - k_pos[None, None, :]) < window
+    mask &= (pos >= 0)[:, None, None]
+    sc = jnp.where(mask[:, None, None, :, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    p = p * (pos >= 0)[:, None, None, None, None]
+    return _gqa_out(p, v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
 class Attention(Module):
     """GQA attention block with rotary embedding and optional SWA."""
 
@@ -614,6 +643,71 @@ class Attention(Module):
                 # same dtype-stable-residual contract as the fused path
                 o = decode_attention(q, k_eff, v_eff, valid,
                                      window=self.window).astype(x.dtype)
+        o = o.reshape(b, s, self.n_heads * self.head_dim)
+        return self.wo(params["wo"], o, ctx), upd
+
+    def verify(self, params, x, cache: KVCache, cur_pos, ctx=None, *,
+               slot_mask=None):
+        """Speculative-verify pass: s draft-window tokens per slot, each
+        slot at its own position.  x: (B, s, d); ``cur_pos`` (B,) is the
+        number of valid cache entries per slot — the window occupies
+        absolute positions ``cur_pos[b] + [0, s)``, its K/V quantize once
+        via ``cache.ready`` and append at those slots
+        (``cache.append_slots``, the multi-token form), and attention is
+        per-slot causal over the updated cache: query j sees keys
+        ``<= cur_pos[b] + j``.  This is exactly a short per-slot chunked
+        prefill: the fused path reuses the Pallas flash-prefill kernel
+        through its per-request ``q_start`` vector, so one compiled
+        verify executable serves every draft content and acceptance
+        pattern (drafts are data, never shape).  ``slot_mask`` inactive
+        slots write nothing (bit-exact cache-neutral) and return zero
+        rows, matching ``decode``.  Rejected drafts need no physical
+        erase — entries beyond the accepted position are dead until the
+        next window overwrites them (``KVCache.rollback`` documents the
+        layout contract).  Per-slot writes need absolute slots, so SWA
+        ring buffers are rejected (same contract as ``decode``)."""
+        b, s, _ = x.shape
+        if self.cross:
+            raise ValueError(
+                f"{self.path}: speculative verify covers causal "
+                "self-attention only")
+        if cache.layout == "ring":
+            raise ValueError(
+                f"{self.path}: speculative verify needs absolute slots (a "
+                "dense cache or paged layout); the SWA ring buffer drops "
+                "them — size the cache >= max_len")
+        q, k, v = self._qkv(params, x, ctx)
+        pos_vec = jnp.broadcast_to(
+            jnp.asarray(cur_pos, jnp.int32).reshape(-1), (b,))
+        positions = pos_vec[:, None] + jnp.arange(s)            # (B, s)
+        q, k = self._rope(q, k, positions, positions)
+        kq, vq = cache.ready(k, v)
+        upd = cache.append_slots(kq, vq, pos_vec, active=slot_mask)
+
+        use_kernel = (
+            cache.quantized
+            and self.window is None
+            and ctx is not None
+            and ctx.policy.use_pallas
+        )
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            # keys visible to the window: the prefix + the window itself,
+            # causally restricted per row by the kernel's q_start vector
+            kv_len = pos_vec + s
+            if slot_mask is not None:
+                kv_len = jnp.where(slot_mask, kv_len, 0)
+            o = kops.prefill_attention_view(
+                q, upd.kernel_view(), *upd.scales(), pos_vec, kv_len,
+                causal=True, window=None,
+            ).astype(x.dtype)
+        else:
+            k_eff, v_eff = upd.dequantize(*upd.dense_view())
+            pos_eff = (pos_vec if slot_mask is None
+                       else jnp.where(slot_mask, pos_vec, -1))
+            o = verify_attention(q, k_eff, v_eff, pos_eff,
+                                 window=self.window).astype(x.dtype)
         o = o.reshape(b, s, self.n_heads * self.head_dim)
         return self.wo(params["wo"], o, ctx), upd
 

@@ -137,6 +137,22 @@ class CausalLM(Module):
                                      slot_mask=slot_mask)
         return self.readout_fn(params, ctx)(h), cache
 
+    def verify_step(self, params, tokens, cache, cur_pos, ctx=None, *,
+                    slot_mask=None):
+        """Speculative-verify pass: tokens (B, s) — the pending token plus
+        s - 1 drafted tokens — run as one batched window at per-slot
+        offsets ``cur_pos`` (B,).  Returns (logits (B, s, V), new cache):
+        position j's logits are the model's next-token distribution after
+        token j, which is what the accept rule compares drafts against.
+        The window's K/V append into the cache at ``cur_pos + [0, s)``;
+        rejected tail entries are logically dead (``KVCache.rollback``).
+        With s == 1 this is exactly ``decode_step`` at vector positions —
+        the bit-parity anchor for speculative == greedy."""
+        x = self.embed(params["embed"], tokens)
+        h, cache = self.stack.verify(params["stack"], x, cache, cur_pos, ctx,
+                                     slot_mask=slot_mask)
+        return self.readout_fn(params, ctx)(h), cache
+
     # -- quantization plans ---------------------------------------------------
     def fold_plan(self):
         """Pre-norm gamma folds into the projections that consume it

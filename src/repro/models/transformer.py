@@ -272,6 +272,33 @@ class Block(Module):
         return x, new_cache
 
 
+    def verify(self, params, x, cache, cur_pos, ctx=None, *,
+               slot_mask=None):
+        """Speculative-verify: s draft tokens per slot at per-slot
+        offsets — the multi-token sibling of ``decode``.  Attention-only
+        (SSM state stepping has no rewind, so strategies guard the config
+        upstream, same as the slot decode loop)."""
+        if self.kind not in ("attn", "attn_local") or self.cross:
+            raise ValueError(
+                f"{self.path}: speculative verify covers attention-only "
+                f"causal stacks (got kind={self.kind!r}, "
+                f"cross={self.cross})")
+        h = self.pre_norm(params["pre_norm"], x)
+        new_cache = dict(cache)
+        mix, new_cache["attn"] = self.attn.verify(
+            params["attn"], h, cache["attn"], cur_pos, ctx,
+            slot_mask=slot_mask)
+        x = x + mix
+        if self.ffn_kind != "none":
+            h = self.ffn_norm(params["ffn_norm"], x)
+            if self.ffn_kind == "moe":
+                y, _ = self.ffn(params["ffn"], h, ctx)
+            else:
+                y = self.ffn(params["ffn"], h, ctx)
+            x = x + y
+        return x, new_cache
+
+
 class Stack(Module):
     """A stack of Blocks with optional remat and a final norm.
 
@@ -546,5 +573,42 @@ class Stack(Module):
             x, new_cache[f"layer{i}"] = blk.decode(
                 params[f"layer{i}"], x, cache[f"layer{i}"], cur_pos, ctx,
                 memory=memory, slot_mask=slot_mask,
+            )
+        return self.final_norm(params["final_norm"], x), new_cache
+
+    def verify(self, params, x, cache, cur_pos, ctx=None, *,
+               slot_mask=None):
+        """Speculative-verify over the stack: the same three layouts as
+        ``decode`` (scanned-homogeneous lax.scan, scanned-unrolled,
+        unrolled), with each block running its multi-token per-slot
+        verify window."""
+        if self.scanned and self.serve_homogeneous:
+            from repro.core.api import QuantCtx
+
+            qs = self._stack_qparams(ctx)
+            mode = ctx.mode if ctx is not None else "none"
+            policy = ctx.policy if ctx is not None else None
+
+            def body(x, xs):
+                lp, lc, lq = xs
+                lctx = QuantCtx(mode, policy, lq) if ctx is not None else None
+                return self.template.verify(lp, x, lc, cur_pos, lctx,
+                                            slot_mask=slot_mask)
+
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache, qs))
+            return self.final_norm(params["final_norm"], x), new_cache
+        if self.scanned:
+            new_cache = {}
+            for i, blk in enumerate(self._serve_blocks()):
+                lp, lctx = self._layer_view(params, ctx, i)
+                x, new_cache[f"layer{i}"] = blk.verify(
+                    lp, x, cache[f"layer{i}"], cur_pos, lctx,
+                    slot_mask=slot_mask)
+            return self.final_norm(params["final_norm"], x), new_cache
+        new_cache = {}
+        for i, blk in enumerate(self.blocks):
+            x, new_cache[f"layer{i}"] = blk.verify(
+                params[f"layer{i}"], x, cache[f"layer{i}"], cur_pos, ctx,
+                slot_mask=slot_mask,
             )
         return self.final_norm(params["final_norm"], x), new_cache

@@ -388,3 +388,136 @@ class TestEngineFacade:
                                       gen_cap=GEN + 2)
         assert sched.call_counts()["prefill"] == 1
         assert sched.prefix_stats()["hits"] == 1
+
+
+class TestRollback:
+    """``KVCache.rollback`` (ISSUE 5): the speculative-decode rewind.
+
+    Dense/ring rewinds are pure position bookkeeping (entries past the
+    rollback point are dead data the masks never read); the paged layout
+    additionally re-points rewound table blocks at private pages,
+    copy-on-rewind for the partially-live boundary block, so a rewind
+    into a SHARED prefix page can never let a later append mutate
+    refcounted storage."""
+
+    def test_dense_and_ring_are_noops(self):
+        for cache in (DenseCache.init(B, 16, 2, 8, dtype=jnp.int8,
+                                      quantized=True),
+                      RingCache.init(B, 16, 2, 8)):
+            cache = dataclasses.replace(
+                cache, k=jnp.ones_like(cache.k), v=jnp.ones_like(cache.v))
+            rolled = cache.rollback(jnp.asarray([3, 7], jnp.int32))
+            for a, b in zip(jax.tree.leaves(rolled), jax.tree.leaves(cache)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def _paged(self, extra=2, ps=8, nb=4):
+        cache = PagedCache.init(1, nb * ps, 1, 8, dtype=jnp.int8,
+                                quantized=True, page_size=ps,
+                                extra_pages=extra)
+        # distinct content per pool cell so copies are traceable
+        n = cache.k.size
+        fill = (jnp.arange(n, dtype=jnp.int32) % 101 - 50).astype(jnp.int8)
+        return dataclasses.replace(cache, k=fill.reshape(cache.k.shape),
+                                   v=(-fill).reshape(cache.v.shape))
+
+    def test_paged_rollback_into_shared_page_copies_on_rewind(self):
+        """A slot whose table block 0 points at a SHARED page rolls back
+        to a position INSIDE that page: the shared page must stay
+        bit-identical (other residents reference it), the slot's private
+        page receives the live prefix, and the table re-points — so the
+        next append lands in private storage."""
+        ps, nb = 8, 4
+        cache = self._paged(extra=2, ps=ps, nb=nb)
+        shared_page = nb  # first extra page
+        private = jnp.arange(nb, dtype=jnp.int32)[None]       # (1, NB)
+        cache = set_table_row(cache, 0, private.at[0, 0].set(shared_page)[0])
+        shared_k = np.asarray(cache.k[shared_page]).copy()
+        rolled = cache.rollback(jnp.asarray([2], jnp.int32),
+                                private_row=private)
+        # shared page bit-identical; private page 0 holds its copy
+        np.testing.assert_array_equal(np.asarray(rolled.k[shared_page]),
+                                      shared_k)
+        np.testing.assert_array_equal(np.asarray(rolled.k[0]), shared_k)
+        np.testing.assert_array_equal(np.asarray(rolled.table[0]),
+                                      np.arange(nb))
+        # an append at the rolled-back position mutates ONLY private
+        # storage: the live prefix [0, 2) and the shared page survive
+        kq = _tiles(jax.random.PRNGKey(7), 1, 2, kv=1, d=8)
+        after = rolled.append_slots(kq, kq, jnp.asarray([2], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(after.k[shared_page]),
+                                      shared_k)
+        np.testing.assert_array_equal(np.asarray(after.k[0, :2]),
+                                      shared_k[:2])
+        np.testing.assert_array_equal(np.asarray(after.k[0, 2:4]),
+                                      np.asarray(kq[0]))
+
+    def test_paged_rollback_at_boundary_keeps_shared_prefix(self):
+        """Rolling back to a page boundary leaves fully-live shared pages
+        attached by reference (no copy, no table change for them) — only
+        blocks at/after the boundary re-point."""
+        ps, nb = 8, 4
+        cache = self._paged(extra=2, ps=ps, nb=nb)
+        shared_page = nb
+        private = jnp.arange(nb, dtype=jnp.int32)[None]
+        cache = set_table_row(cache, 0, private.at[0, 0].set(shared_page)[0])
+        rolled = cache.rollback(jnp.asarray([ps], jnp.int32),
+                                private_row=private)
+        # block 0 still points at the shared page (its tokens are live)
+        assert int(rolled.table[0, 0]) == shared_page
+        np.testing.assert_array_equal(np.asarray(rolled.table[0, 1:]),
+                                      np.arange(1, nb))
+
+    def test_paged_rollback_without_rows_is_noop(self):
+        cache = self._paged()
+        rolled = cache.rollback(jnp.asarray([2], jnp.int32))
+        for a, b in zip(jax.tree.leaves(rolled), jax.tree.leaves(cache)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_paged_rollback_stacked_layers(self):
+        """A scanned-stack cache (leading (L,) axis on every leaf, one
+        table per layer with identical entries) rolls back through the
+        same trailing-axes math."""
+        ps, nb, L = 8, 2, 3
+        one = self._paged(extra=1, ps=ps, nb=nb)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (L,) + a.shape), one)
+        shared_page = nb
+        private = jnp.arange(nb, dtype=jnp.int32)[None]
+        stacked = set_table_row(stacked, 0,
+                                private.at[0, 0].set(shared_page)[0])
+        rolled = stacked.rollback(jnp.asarray([1], jnp.int32),
+                                  private_row=private)
+        assert rolled.table.shape == (L, 1, nb)
+        np.testing.assert_array_equal(np.asarray(rolled.table[:, 0, 0]),
+                                      np.zeros(L))
+        for l in range(L):
+            np.testing.assert_array_equal(
+                np.asarray(rolled.k[l, 0]), np.asarray(stacked.k[l,
+                                                                 shared_page]))
+
+
+class TestMultiTokenAppendSlots:
+    """The speculative verify window writes s > 1 tokens per slot in one
+    ``append_slots`` — must equal s sequential one-token appends, per
+    layout, including inactive-slot read-back neutrality and page-
+    boundary-crossing windows."""
+
+    @pytest.mark.parametrize("layout", ["dense", "paged"])
+    def test_window_equals_sequential_single_appends(self, layout):
+        if layout == "dense":
+            mk = lambda: DenseCache.init(B, 16, 2, 8, dtype=jnp.int8,
+                                         quantized=True)
+        else:
+            mk = lambda: PagedCache.init(B, 16, 2, 8, dtype=jnp.int8,
+                                         quantized=True, page_size=8)
+        kq = _tiles(jax.random.PRNGKey(0), B, 3)
+        vq = _tiles(jax.random.PRNGKey(1), B, 3)
+        starts = jnp.asarray([2, 7], jnp.int32)   # slot 1 crosses a page
+        active = jnp.asarray([True, False])
+        win = mk().append_slots(kq, vq, starts, active=active)
+        seq = mk()
+        for j in range(3):
+            seq = seq.append_slots(kq[:, j:j + 1], vq[:, j:j + 1],
+                                   starts + j, active=active)
+        for a, b in zip(jax.tree.leaves(win), jax.tree.leaves(seq)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -70,6 +70,45 @@ class TestPrefillKernel:
         np.testing.assert_array_equal(np.asarray(got[1]),
                                       np.zeros_like(got[1]))
 
+    @pytest.mark.parametrize("window", [None, 12])
+    @pytest.mark.parametrize("q_start,kv_len", [
+        (0, [40, 17]),            # ragged tail -> dead trailing KV blocks
+        (16, [40, 30]),           # chunk offset -> dead causal blocks
+        ([5, 23], [29, 47]),      # per-request offsets (verify windows)
+        (0, [24, 0]),             # an empty request (inactive slot)
+    ])
+    def test_dma_skip_clamp_matches_unclamped(self, window, q_start, kv_len):
+        """ISSUE 5 satellite: the masked-tile index-map clamp (fully-dead
+        KV blocks re-fetch a live block instead of DMAing dead tiles)
+        must be output-invariant — the clamp predicate mirrors the kernel
+        body's ``live`` predicate, so a clamped tile is never read."""
+        q, k, v, ks, vs = _rand_kv_case(3)
+        kw = dict(window=window, block_q=8, block_k=8)
+        clamped = ops.prefill_attention(
+            q, k, v, ks, vs, jnp.asarray(q_start, jnp.int32),
+            jnp.asarray(kv_len, jnp.int32), dma_skip=True, **kw)
+        plain = ops.prefill_attention(
+            q, k, v, ks, vs, jnp.asarray(q_start, jnp.int32),
+            jnp.asarray(kv_len, jnp.int32), dma_skip=False, **kw)
+        np.testing.assert_array_equal(np.asarray(clamped),
+                                      np.asarray(plain))
+
+    def test_per_request_q_start_matches_per_row_runs(self):
+        """The (B,) ``q_start`` vector (the speculative-verify entry
+        point) equals running each row alone at its scalar offset."""
+        q, k, v, ks, vs = _rand_kv_case(4, b=3, sq=8, sk=48)
+        qs = jnp.asarray([5, 17, 40], jnp.int32)
+        kl = qs + 8
+        got = ops.prefill_attention(q, k, v, ks, vs, qs, kl,
+                                    block_q=8, block_k=16)
+        for i in range(3):
+            want = ops.prefill_attention(
+                q[i:i + 1], k[i:i + 1], v[i:i + 1], ks, vs,
+                jnp.int32(int(qs[i])), kl[i:i + 1], block_q=8, block_k=16)
+            np.testing.assert_allclose(np.asarray(got[i]),
+                                       np.asarray(want[0]),
+                                       rtol=1e-6, atol=1e-6)
+
     @pytest.mark.parametrize("block_k", [8, 16, 40])
     def test_online_softmax_invariant_to_kv_chunk(self, block_k):
         """Property (ISSUE): the online-softmax accumulation is exact, so
