@@ -19,6 +19,11 @@ configurations of the two-kernel engine:
     ``SpeculativeStrategy`` vs greedy (the ``speculative_decode`` entry
     records draft acceptance rate, tok/s vs greedy, and the
     tokens-match-greedy bit; CI requires it well-formed)
+  * degraded traffic: mixed-priority staggered arrivals under a
+    deterministic fault plan (launch/faults.py) — one injected fault per
+    class, a bounded admission queue, deadlines, and preemption; the
+    ``degraded_traffic`` entry records goodput, the per-status census,
+    deadline hit rate, and re-admit overhead (CI requires it)
 
 Each grid point is one ``Engine`` (launch/engine.py) — the same assembly
 the serving CLI runs, so the bench measures the served configuration,
@@ -274,6 +279,95 @@ def bench_paged_prefix_reuse(engine: Engine, *, requests, max_slots,
     }
 
 
+def bench_degraded_traffic(engine: Engine, *, prompt_len, gen,
+                           block_steps=4):
+    """Resilience scenario: fixed-seed staggered arrivals with mixed
+    priorities and deadlines through a 2-slot scheduler under a
+    deterministic :class:`repro.launch.faults.FaultPlan` — one injected
+    fault per class (bad request, NaN logits mid-decode, forced prefix
+    exhaustion, forced preemption) plus a bounded admission queue that
+    sheds under overload and a virtual clock (``ms_per_block``) that
+    makes the deadline/arrival interleaving bit-reproducible.
+
+    Records GOODPUT (tokens from requests that finished ok, per second),
+    the per-status census, the deadline hit rate, and the preemption
+    re-admit overhead (``resume`` prefill calls) — the numbers that show
+    faults stay contained to the requests that own them."""
+    n = 9
+    shape = ShapeSpec("bench", "train", prompt_len, n)
+    spec = DP.spec_for(engine.cfg, shape)
+    base = ragged_requests(spec, n, prompt_len, gen)
+    half = max(1, prompt_len // 2)
+
+    def mk(r, **kw):
+        return dataclasses.replace(base[r], **kw)
+
+    reqs = [
+        # long-running low-priority resident: forced-preempted at block 1,
+        # priority-preempted when rid4 arrives, re-admitted both times
+        mk(0, tokens=np.asarray(base[0].tokens)[:half], max_gen=2 * gen,
+           arrive_ms=0.0),
+        # same shape but with a generous deadline it makes -> the "hit"
+        mk(1, tokens=np.asarray(base[1].tokens)[:half], max_gen=2 * gen,
+           deadline_ms=500.0, arrive_ms=0.0),
+        # malformed arrival: empty prompt -> rejected at admission
+        mk(2, tokens=np.zeros((0,), np.int32), arrive_ms=0.0),
+        # NaN logits injected at its decode step 1 -> failed, isolated
+        mk(3, arrive_ms=0.0),
+        # priority arrival mid-run -> preempts the lowest-priority slot
+        mk(4, priority=1, arrive_ms=15.0),
+        # tight deadline spent waiting in the queue -> timeout
+        mk(5, deadline_ms=15.0, arrive_ms=0.0),
+        mk(6, arrive_ms=5.0),
+        mk(7, arrive_ms=5.0),
+        # ninth arrival against queue_cap=5 -> shed
+        mk(8, arrive_ms=5.0),
+    ]
+
+    sched = engine.make_scheduler(max_slots=2, prompt_cap=prompt_len,
+                                  gen_cap=2 * gen, block_steps=block_steps)
+    # warm run compiles the executables; the fault plan is a pure function
+    # of (rid, block, step) so both runs see identical injections
+    engine.generate(list(reqs), max_slots=2, prompt_cap=prompt_len,
+                    gen_cap=2 * gen, block_steps=block_steps)
+    h0, c0 = dict(sched.health_stats()), dict(sched.call_counts())
+    t0 = time.perf_counter()
+    completions = engine.generate(list(reqs), max_slots=2,
+                                  prompt_cap=prompt_len, gen_cap=2 * gen,
+                                  block_steps=block_steps)
+    wall = time.perf_counter() - t0
+    h1, c1 = sched.health_stats(), sched.call_counts()
+    dh = {k: h1[k] - h0.get(k, 0) for k in h1}
+
+    statuses: dict = {}
+    for c in completions:
+        statuses[c.status] = statuses.get(c.status, 0) + 1
+    ok_tokens = sum(len(c.tokens) for c in completions if c.status == "ok")
+    with_deadline = [c for c in completions
+                     if next(r for r in reqs if r.rid == c.rid).deadline_ms
+                     is not None]
+    hits = sum(1 for c in with_deadline if c.status == "ok")
+    return {
+        "requests": n,
+        "max_slots": 2,
+        "block_steps": block_steps,
+        "queue_cap": engine.queue_cap,
+        "shed_policy": engine.shed_policy,
+        "fault_plan": engine.fault_plan.describe(),
+        "statuses": statuses,
+        "generated_ok_tokens": ok_tokens,
+        "wall_ms": wall * 1e3,
+        "goodput_tokens_per_s": ok_tokens / wall,
+        "deadline_hit_rate": hits / max(len(with_deadline), 1),
+        "preemptions": dh.get("preemptions", 0),
+        "readmits": dh.get("readmits", 0),
+        "resume_prefill_calls": c1.get("resume", 0) - c0.get("resume", 0),
+        "deadline_misses": dh.get("deadline_misses", 0),
+        "prefix_exhausted": dh.get("prefix_exhausted", 0),
+        "executables": sched.executable_counts(),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -406,6 +500,29 @@ def main():
           f"({pr['prefill_calls_saved']} saved, {pr['shared_tokens']} "
           f"tokens from shared pages) | {pr['gen_tokens_per_s']:.0f} gen "
           f"tok/s | executables {pr['executables']}")
+
+    # degraded traffic: staggered mixed-priority arrivals under a
+    # deterministic fault plan — a fresh paged engine with a bounded
+    # admission queue (own scheduler) sharing the int8 preparation
+    from repro.launch.faults import FaultPlan
+    deg_eng = Engine(eng.model, eng.cfg, eng.policy, eng.serve_params,
+                     eng.qparams, mode=eng.mode, cache_layout="paged",
+                     page_size=args.page_size,
+                     prefill_chunk=args.prefill_chunk,
+                     queue_cap=5, shed_policy="shed",
+                     fault_plan=FaultPlan(nan_decode=((3, 1),),
+                                          preempt=((1, 0),),
+                                          exhaust_prefix=True,
+                                          ms_per_block=10.0))
+    dg = bench_degraded_traffic(deg_eng, prompt_len=args.prompt_len,
+                                gen=args.gen)
+    report["degraded_traffic"] = dg
+    print(f"degraded traffic: {dg['requests']} reqs / {dg['max_slots']} "
+          f"slots under faults | statuses {dg['statuses']} | goodput "
+          f"{dg['goodput_tokens_per_s']:.0f} tok/s | deadline hit rate "
+          f"{dg['deadline_hit_rate']:.2f} | {dg['preemptions']} preemptions "
+          f"/ {dg['readmits']} readmits ({dg['resume_prefill_calls']} "
+          f"resume prefills) | executables {dg['executables']}")
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)

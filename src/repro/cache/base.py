@@ -48,6 +48,22 @@ import jax.numpy as jnp
 # per-head dequant scale T/127 is frozen at finalize_calibration
 KV_LEVELS = 127.0
 
+# a dead channel (all-zero calibration activations) would hand the cache
+# a zero — or, through a NaN-poisoned observer, non-finite — threshold;
+# dividing by it in quantize_kv turns the whole int8 cache into inf/NaN.
+# Floor at the same 1e-8 threshold floor the matmul path uses, expressed
+# as a dequant scale (T / 127).
+_SCALE_FLOOR = 1e-8 / KV_LEVELS
+
+
+def _safe_scale(scale):
+    """Clamp per-head dequant scales to a positive finite floor.  The
+    ``where`` (not ``maximum``) makes it NaN-robust: maximum(NaN, f) is
+    NaN, where(NaN > f, ...) picks the floor.  Healthy calibrated scales
+    (>= 1e-8/127 by the observer floor) pass through bit-identically."""
+    s = jnp.asarray(scale, jnp.float32)
+    return jnp.where(s > _SCALE_FLOOR, s, _SCALE_FLOOR)
+
 
 def quantize_kv(x, scale):
     """(B, S, KV, D) float -> int8 with per-head dequant ``scale`` (KV,)."""
@@ -113,9 +129,11 @@ class KVCache(abc.ABC):
         return self.k_scale, self.v_scale
 
     def with_scales(self, k_scale, v_scale) -> "KVCache":
+        """Install calibrated per-head dequant scales — the single entry
+        point where thresholds reach a cache, so the dead-channel floor
+        (``_safe_scale``) is applied here once for every layout."""
         return dataclasses.replace(
-            self, k_scale=k_scale.astype(jnp.float32),
-            v_scale=v_scale.astype(jnp.float32))
+            self, k_scale=_safe_scale(k_scale), v_scale=_safe_scale(v_scale))
 
     def ready(self, k, v):
         """Cache-ready K/V tiles: quantize against the frozen per-head

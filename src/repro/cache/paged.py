@@ -313,13 +313,17 @@ class PrefixStore:
         self.hits = 0
         self.misses = 0
         self.shared_tokens = 0   # prompt tokens served from shared pages
+        self.evictions = 0       # LRU entries reclaimed for new prompts
+        self.exhausted = 0       # reserves denied: no free/evictable pages
 
     # -- stats -------------------------------------------------------------
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "shared_tokens": self.shared_tokens,
                 "entries": len(self._entries),
-                "free_pages": len(self._free)}
+                "free_pages": len(self._free),
+                "evictions": self.evictions,
+                "exhausted": self.exhausted}
 
     # -- lookup / reference counting --------------------------------------
     def lookup(self, key: tuple, slot: int):
@@ -354,18 +358,22 @@ class PrefixStore:
             if ent.tail_page is not None:
                 self._free.append(ent.tail_page)
             del self._entries[key]
+            self.evictions += 1
 
     def reserve(self, key: tuple, length: int):
         """Allocate shared pages for a prompt of ``length`` tokens:
         returns (full_page_ids, tail_page_id | None) or None when the
-        shared region can't fit it."""
+        shared region can't fit it (counted in ``exhausted``)."""
         if key in self._entries:
             return None
         n_full, rem = divmod(length, self.page_size)
         need = n_full + (1 if rem else 0)
         if need == 0 or len(self._free) < need:
             self._reclaim(need)
-        if len(self._free) < need or need == 0:
+        if need == 0:
+            return None
+        if len(self._free) < need:
+            self.exhausted += 1
             return None
         pages = [self._free.pop() for _ in range(n_full)]
         tail = self._free.pop() if rem else None

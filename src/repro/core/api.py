@@ -225,8 +225,12 @@ def finalize_calibration(qparams: dict, policy: QuantPolicy) -> dict:
     out = {}
     for path, entry in qparams.items():
         if is_kv_path(path):  # KV observer entry: {"k": obs, "v": obs}
+            # where(), not maximum(): a NaN-poisoned observer (e.g. a
+            # non-finite calibration batch) must still floor — maximum
+            # propagates the NaN straight into every cache scale
             out[path] = {
-                kk: {"t_max": jnp.maximum(obs["t_max"], 1e-8)}
+                kk: {"t_max": jnp.where(obs["t_max"] > 1e-8,
+                                        obs["t_max"], 1e-8)}
                 for kk, obs in entry.items()
             }
             continue

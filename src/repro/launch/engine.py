@@ -85,19 +85,34 @@ class Engine:
                  page_size: int = 64, prefill_chunk: Optional[int] = None,
                  temperature: float = 0.0, top_p: float = 1.0,
                  seed: int = 0, decode_strategy: Optional[str] = None,
-                 spec_k: int = 4, spec_ngram: int = 2):
+                 spec_k: int = 4, spec_ngram: int = 2,
+                 queue_cap: Optional[int] = None, shed_policy: str = "shed",
+                 fault_plan=None):
         """``decode_strategy`` picks the decode-loop scheme
         (strategies.STRATEGIES: "greedy" | "sample" | "speculative");
         None auto-selects from ``temperature`` (the historical behavior).
         ``spec_k``/``spec_ngram`` are the speculative draft-window and
         prompt-lookup n-gram sizes (static — no retrace across draft
-        contents)."""
+        contents).
+
+        Resilience knobs (continuous batching; see launch/scheduler.py):
+        ``queue_cap`` bounds the admission queue and ``shed_policy``
+        ("shed" | "block") picks the overload behavior; ``fault_plan``
+        (a :class:`repro.launch.faults.FaultPlan`, or anything its
+        ``parse`` accepts) injects deterministic faults for chaos testing
+        and the degraded-traffic benchmark."""
         from repro.cache import LAYOUTS
         from repro.launch import strategies as SG
+        from repro.launch.faults import FaultPlan
 
         if cache_layout not in LAYOUTS:
             raise ValueError(f"cache_layout must be one of {LAYOUTS}, got "
                              f"{cache_layout!r}")
+        if shed_policy not in ("shed", "block"):
+            raise ValueError(f"shed_policy must be 'shed' or 'block', got "
+                             f"{shed_policy!r}")
+        if fault_plan is not None:
+            fault_plan = FaultPlan.parse(fault_plan)
         if decode_strategy is not None:
             # eager validation through the single authority
             # (strategies.make_strategy): unknown names,
@@ -115,6 +130,8 @@ class Engine:
         self.temperature, self.top_p, self.seed = temperature, top_p, seed
         self.decode_strategy = decode_strategy
         self.spec_k, self.spec_ngram = spec_k, spec_ngram
+        self.queue_cap, self.shed_policy = queue_cap, shed_policy
+        self.fault_plan = fault_plan
         self._scheduler = None
         self._scheduler_key = None
 
@@ -338,7 +355,8 @@ class Engine:
         key = (max_slots, prompt_cap, gen_cap, block_steps, eos_id,
                prefix_pages, self.cache_layout, self.page_size,
                self.prefill_chunk, self.temperature, self.top_p, self.seed,
-               self.decode_strategy, self.spec_k, self.spec_ngram)
+               self.decode_strategy, self.spec_k, self.spec_ngram,
+               self.queue_cap, self.shed_policy, self.fault_plan)
         if self._scheduler is None or self._scheduler_key != key:
             layout = ("paged" if self.cache_layout == "paged" else "dense")
             self._scheduler = SlotScheduler(
@@ -350,7 +368,8 @@ class Engine:
                 prefix_pages=prefix_pages, temperature=self.temperature,
                 top_p=self.top_p, eos_id=eos_id, seed=self.seed,
                 strategy=self.decode_strategy, spec_k=self.spec_k,
-                spec_ngram=self.spec_ngram)
+                spec_ngram=self.spec_ngram, queue_cap=self.queue_cap,
+                shed_policy=self.shed_policy, fault_plan=self.fault_plan)
             self._scheduler_key = key
         return self._scheduler
 
@@ -373,6 +392,16 @@ class Engine:
             max_slots=max_slots, prompt_cap=prompt_cap, gen_cap=gen_cap,
             block_steps=block_steps, eos_id=eos_id)
         return sched.run(reqs, max_blocks=max_blocks)
+
+    def health_report(self) -> dict:
+        """Engine-level outcome aggregation for the continuous-batching
+        path: the scheduler's ``health_stats()`` (terminal statuses,
+        retirement causes, preemption/readmit/shed/deadline counters),
+        accumulated across ``generate`` calls.  Empty before the first
+        ``generate``."""
+        if self._scheduler is None:
+            return {}
+        return self._scheduler.health_stats()
 
     # -- single prompt -----------------------------------------------------
     def generate_one(self, tokens, gen: int, **kw) -> GenerationResult:

@@ -1,0 +1,169 @@
+"""Deterministic fault injection for the serving stack.
+
+The resilience layer (per-request isolation, deadlines, preemption,
+load shedding — see ``launch/scheduler.py``) is only trustworthy if its
+degraded paths are *exercised*, and they are exactly the paths that
+never fire in a healthy smoke run.  A :class:`FaultPlan` is a frozen,
+hashable schedule of injected faults that the ``SlotScheduler`` consults
+at fixed points of its host loop, so every degraded path can be driven
+bit-reproducibly — in unit tests, in the ``degraded_traffic`` benchmark
+scenario, and from the CLI (``serve.py --fault-plan``).
+
+Fault classes (one knob per degraded path):
+
+``reject``          admission fails for these request ids before any
+                    device work runs — the simulated "prefill raised"
+                    path (the request retires ``status='failed'``).
+``nan_prefill``     the admission prefill's sampling logits are forced
+                    non-finite for these request ids, exercising the
+                    NaN-rejection guard without needing a genuinely
+                    broken checkpoint.
+``nan_decode``      ``(rid, step)`` pairs: request ``rid``'s decode
+                    logits turn NaN at its ``step``-th decode scan step.
+                    The injection happens INSIDE the compiled decode
+                    loop, driven by a per-slot step vector — data, never
+                    shape, so a faulted run reuses the clean run's
+                    executable (the no-retrace contract).
+``preempt``         ``(block, rid)`` pairs: at decode-block boundary
+                    ``block`` the scheduler force-preempts request
+                    ``rid`` (snapshot + park + later re-admit), as if a
+                    higher-priority request had demanded its slot.
+``exhaust_prefix``  every ``PrefixStore.reserve`` is treated as
+                    pool-exhausted, forcing the fall-back-to-private-
+                    pages path on every paged admission.
+``ms_per_block``    > 0 switches the scheduler to a VIRTUAL clock that
+                    advances exactly this many milliseconds per decode
+                    block — deadlines, arrivals, and shedding become
+                    deterministic functions of the block schedule
+                    instead of wall time.
+
+Injection is host-driven or data-driven by construction: no fault ever
+changes a compiled executable's shape, which is what makes "non-faulted
+requests are bit-identical to the fault-free run" a testable property
+(tests/test_resilience.py pins it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+
+class InjectedFault(RuntimeError):
+    """Raised by the scheduler at an injection point; caught by the
+    per-request isolation layer like any real admission failure."""
+
+
+def _int_tuple(xs):
+    return tuple(sorted(int(x) for x in xs))
+
+
+def _pair_tuple(xs):
+    """Normalize {key: val} dicts (JSON) or (a, b) pair iterables into a
+    sorted tuple of int pairs."""
+    if isinstance(xs, dict):
+        xs = [(k, v) for k, v in xs.items()]
+    return tuple(sorted((int(a), int(b)) for a, b in xs))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic, hashable fault schedule (see module docstring).
+
+    Frozen with tuple-valued fields so a plan can sit directly in the
+    Engine's scheduler cache key — two generates under different plans
+    never share a stale scheduler, while re-running the same plan reuses
+    the compiled executables.
+    """
+
+    reject: tuple = ()          # rids: admission fails before device work
+    nan_prefill: tuple = ()     # rids: prefill sampling logits -> NaN
+    nan_decode: tuple = ()      # ((rid, step), ...): decode logits -> NaN
+    preempt: tuple = ()         # ((block, rid), ...): forced preemption
+    exhaust_prefix: bool = False
+    ms_per_block: float = 0.0   # > 0: virtual clock, ms per decode block
+
+    def __post_init__(self):
+        object.__setattr__(self, "reject", _int_tuple(self.reject))
+        object.__setattr__(self, "nan_prefill",
+                           _int_tuple(self.nan_prefill))
+        object.__setattr__(self, "nan_decode",
+                           _pair_tuple(self.nan_decode))
+        object.__setattr__(self, "preempt", _pair_tuple(self.preempt))
+        object.__setattr__(self, "exhaust_prefix",
+                           bool(self.exhaust_prefix))
+        object.__setattr__(self, "ms_per_block",
+                           float(self.ms_per_block))
+        if self.ms_per_block < 0:
+            raise ValueError("ms_per_block must be >= 0")
+
+    # -- queries (the scheduler's injection points) -----------------------
+    def rejects(self, rid: int) -> bool:
+        return int(rid) in self.reject
+
+    def nans_prefill(self, rid: int) -> bool:
+        return int(rid) in self.nan_prefill
+
+    def nan_decode_step(self, rid: int):
+        """The absolute decode scan step at which ``rid``'s logits turn
+        non-finite, or None."""
+        for r, step in self.nan_decode:
+            if r == int(rid):
+                return step
+        return None
+
+    def preempts_at(self, block: int) -> tuple:
+        """Request ids force-preempted at decode-block boundary
+        ``block``."""
+        return tuple(rid for blk, rid in self.preempt if blk == int(block))
+
+    @property
+    def empty(self) -> bool:
+        return self == FaultPlan()
+
+    # -- (de)serialization -------------------------------------------------
+    @classmethod
+    def parse(cls, spec) -> "FaultPlan":
+        """Build a plan from a dict, a JSON string, or a path to a JSON
+        file (the ``serve.py --fault-plan`` formats).  JSON keys match
+        the field names; ``nan_decode``/``preempt`` accept either pair
+        lists or ``{"rid": step}`` / ``{"block": rid}`` objects."""
+        if isinstance(spec, cls):
+            return spec
+        if isinstance(spec, str):
+            if os.path.exists(spec):
+                with open(spec) as f:
+                    spec = json.load(f)
+            else:
+                spec = json.loads(spec)
+        if not isinstance(spec, dict):
+            raise ValueError(
+                f"fault plan must be a JSON object, got {type(spec).__name__}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(spec) - known
+        if unknown:
+            raise ValueError(
+                f"unknown fault plan keys {sorted(unknown)} "
+                f"(known: {sorted(known)})")
+        return cls(**spec)
+
+    def describe(self) -> str:
+        """One-line human summary for CLI / bench logs."""
+        bits = []
+        if self.reject:
+            bits.append(f"reject rids {list(self.reject)}")
+        if self.nan_prefill:
+            bits.append(f"nan prefill rids {list(self.nan_prefill)}")
+        if self.nan_decode:
+            bits.append("nan decode " +
+                        ", ".join(f"rid {r}@step {s}"
+                                  for r, s in self.nan_decode))
+        if self.preempt:
+            bits.append("preempt " +
+                        ", ".join(f"rid {r}@block {b}"
+                                  for b, r in self.preempt))
+        if self.exhaust_prefix:
+            bits.append("prefix pool exhausted")
+        if self.ms_per_block:
+            bits.append(f"virtual clock {self.ms_per_block:g} ms/block")
+        return "; ".join(bits) if bits else "no faults"

@@ -34,11 +34,49 @@ into the slot's private page, and the first token samples from the
 stored logits.  ``prefix_stats()`` / ``call_counts()`` expose the hit
 and skipped-prefill counters the acceptance test pins.
 
+Resilience (fault isolation, deadlines, preemption, degradation)
+----------------------------------------------------------------
+``run()`` never aborts because one request is bad.  Every request
+retires with a terminal ``Completion.status``:
+
+    ok         finished normally (``finished_by``: eos | budget | capacity)
+    rejected   failed admission validation (never touched the device)
+    failed     prefill raised, or produced/decoded non-finite logits
+    timeout    missed its ``deadline_ms`` (resident or still queued)
+    preempted  evicted for a higher-priority request and the run ended
+               before it could be re-admitted
+    shed       dropped by the bounded admission queue under overload
+
+Deadlines are checked at block boundaries against a per-request arrival
+time.  A higher-priority waiter preempts the lowest-priority resumable
+resident: the victim's host state (tokens generated so far, sampling
+key, position) is parked on a re-admit queue and its slot is handed
+over; re-admission rebuilds the victim's KV state with ONE ragged
+prefill over prompt + generated-so-far tokens (the ``resume``
+executable) — cheap and bit-valid precisely because the paper's frozen
+thresholds make int8 cache state a pure function of the token sequence.
+Under the paged layout the victim's shared-prefix references are
+released and its block-table row is reclaimed onto its private pages
+before the new resident moves in.
+
+Per-request PRNG keys (``fold_in(seed_key, rid)``, advanced only on a
+request's own active steps) make sampled outputs a function of (seed,
+rid, tokens emitted) — independent of arrival order, slot placement,
+and preemption.
+
+All degraded paths are driveable deterministically through a
+:class:`repro.launch.faults.FaultPlan` (see launch/faults.py); injection
+is host-driven or data-driven, so faulted and clean runs share the same
+compiled executables.  ``health_stats()`` exposes per-status and
+per-event counters.
+
 Slot lifecycle (see docs/serving.md for the full diagram)::
 
     FREE --admit(prefill into slot region | attach shared prefix)--> ACTIVE
-    ACTIVE --EOS token / gen budget / cache full--> DRAINED
-    DRAINED --collect output--> FREE
+    ACTIVE --EOS token / gen budget / cache full / deadline / NaN--> DRAINED
+    ACTIVE --preempted (park host state, free the slot)--> PARKED
+    PARKED --re-admit (one ``resume`` ragged prefill)--> ACTIVE
+    DRAINED --collect output + terminal status--> FREE
 
 Which slots are live, at which positions, with which arrival order —
 and, for paged, which pages a slot's table points at — is DATA
@@ -55,6 +93,7 @@ requests costs masked lanes within a block, not recompiles.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Iterable, Optional, Sequence
 
@@ -67,14 +106,26 @@ from repro.cache import (KVCache, PrefixEntry, PrefixStore, copy_pages,
 from repro.core import api as A
 from repro.launch import steps as ST
 from repro.launch import strategies as SG
+from repro.launch.faults import FaultPlan, InjectedFault
 
 
 @dataclasses.dataclass
 class Request:
-    """One generation request: prompt tokens + a generation budget."""
+    """One generation request: prompt tokens + a generation budget.
+
+    ``priority`` orders admission and picks preemption victims (higher
+    wins; residents only yield to strictly higher waiters).
+    ``deadline_ms`` is a completion deadline relative to ``arrive_ms``
+    (None = none).  ``arrive_ms`` places the request on the run's clock
+    (wall ms from run start, or virtual ms under a fault plan's
+    ``ms_per_block``); requests are invisible to the scheduler before
+    they arrive."""
     rid: int
     tokens: np.ndarray          # (prompt_len,) int32
     max_gen: int = 16           # generated-token budget (incl. first token)
+    priority: int = 0
+    deadline_ms: Optional[float] = None
+    arrive_ms: float = 0.0
 
 
 @dataclasses.dataclass
@@ -82,7 +133,28 @@ class Completion:
     rid: int
     prompt_len: int
     tokens: list                # generated tokens (includes EOS if hit)
-    finished_by: str            # 'eos' | 'budget' | 'capacity'
+    finished_by: str            # 'eos' | 'budget' | 'capacity' when ok,
+                                # else mirrors ``status``
+    status: str = "ok"          # ok | rejected | timeout | preempted |
+                                # shed | failed
+    reason: Optional[str] = None    # human-readable failure detail
+
+
+@dataclasses.dataclass
+class _Parked:
+    """A preempted resident awaiting re-admission: everything needed to
+    rebuild its device state (the tokens) plus the host state that must
+    survive verbatim (sampling key carry, decode-step count)."""
+    req: Request
+    out: list                   # generated so far (incl. pending token)
+    key: np.ndarray             # (2,) uint32 per-request key carry
+    steps: int                  # decode scan steps consumed so far
+
+
+_STATUSES = ("ok", "rejected", "timeout", "preempted", "shed", "failed")
+_HEALTH_KEYS = _STATUSES + (
+    "eos", "budget", "capacity",            # ok retirement causes
+    "preemptions", "readmits", "deadline_misses", "prefix_exhausted")
 
 
 def _cache_map(fn, *trees):
@@ -130,6 +202,9 @@ class SlotScheduler:
     prefix_pages : size of the pool's shared prefix region, in pages
         (None = room for two full-capacity prompts).
     temperature, top_p, seed : sampling (greedy when temperature == 0).
+        Sampled requests draw from per-request key streams
+        (``fold_in(PRNGKey(seed), rid)``), so outputs are reproducible
+        across arrival orders and preemptions.
     eos_id : generation stops for a slot when it emits this token
         (< 0 disables).
     strategy : decode strategy — a name from ``strategies.STRATEGIES``
@@ -141,6 +216,14 @@ class SlotScheduler:
     spec_k, spec_ngram : speculative knobs — draft window length and the
         prompt-lookup n-gram size (both static: one compiled decode
         executable serves every draft/acceptance pattern).
+    queue_cap : bound on the admission queue (None = unbounded).  When
+        full, ``shed_policy`` decides: "shed" retires the newest arrival
+        immediately with status 'shed'; "block" leaves arrivals waiting
+        upstream until the queue drains.
+    shed_policy : "shed" (default) or "block" — see ``queue_cap``.
+    fault_plan : a :class:`repro.launch.faults.FaultPlan` injecting
+        deterministic faults (and/or the virtual clock); None = no
+        faults, wall clock.
     """
 
     def __init__(self, model, cfg, policy: A.QuantPolicy, serve_params,
@@ -151,7 +234,9 @@ class SlotScheduler:
                  prefix_pages: int | None = None,
                  temperature: float = 0.0, top_p: float = 1.0,
                  eos_id: int = -1, seed: int = 0,
-                 strategy=None, spec_k: int = 4, spec_ngram: int = 2):
+                 strategy=None, spec_k: int = 4, spec_ngram: int = 2,
+                 queue_cap: int | None = None, shed_policy: str = "shed",
+                 fault_plan: FaultPlan | None = None):
         kinds = {cfg.layer_kind(i) for i in range(cfg.n_layers)}
         wins = {cfg.attn_window(i) for i in range(cfg.n_layers)}
         if kinds - {"attn", "attn_local"} or cfg.modality != "text":
@@ -168,6 +253,12 @@ class SlotScheduler:
             raise ValueError(
                 f"slot scheduler cache_layout must be dense or paged, got "
                 f"{cache_layout!r}")
+        if shed_policy not in ("shed", "block"):
+            raise ValueError(
+                f"shed_policy must be 'shed' or 'block', got "
+                f"{shed_policy!r}")
+        if queue_cap is not None and queue_cap < 1:
+            raise ValueError(f"queue_cap must be >= 1, got {queue_cap}")
         self.model, self.cfg = model, cfg
         self.policy, self.mode = policy, mode
         self.serve_params, self.qparams = serve_params, qparams
@@ -181,6 +272,9 @@ class SlotScheduler:
         self.eos_id = eos_id
         self.cache_layout = cache_layout
         self.page_size = page_size
+        self.queue_cap = queue_cap
+        self.shed_policy = shed_policy
+        self._plan = fault_plan if fault_plan is not None else FaultPlan()
         if isinstance(strategy, SG.DecodeStrategy):
             self._strategy = strategy
         else:
@@ -202,7 +296,15 @@ class SlotScheduler:
             # batch-1 prefill result reshapes into whole pages
             cache_len = -(-cache_len // page_size) * page_size
         self.cache_len = cache_len
-        self._key = jax.random.PRNGKey(seed)
+        # per-request sampling keys: each admission folds its rid into
+        # the seed key, so a request's stream is independent of arrival
+        # order and slot placement; the carried halves live per slot
+        self._base_key = jax.random.PRNGKey(seed)
+        self._slot_keys = np.zeros((max_slots, 2), np.uint32)
+        # re-admission ragged prefill covers positions [0, resume_cap):
+        # chunked prefill writes whole chunks, so the widest resumable
+        # state is the largest chunk multiple that fits the cache
+        self._resume_cap = (cache_len // prefill_chunk) * prefill_chunk
 
         kv_int8 = bool(policy.kv_int8)
         self._kv_int8 = kv_int8
@@ -244,11 +346,12 @@ class SlotScheduler:
         # behavior (and per instance: each wrapper is a fresh closure).
         # call counts tick on every invocation (host-side): the prefix-
         # sharing acceptance pins prefill CALLS, not just traces.
-        pieces = ["prefill", "decode", "insert"]
+        pieces = ["prefill", "decode", "insert", "resume"]
         if cache_layout == "paged":
             pieces += ["set_row", "copy_page"]
         self._trace_counts = {p: 0 for p in pieces}
         self._call_counts = {p: 0 for p in pieces}
+        self._health = {k: 0 for k in _HEALTH_KEYS}
 
         def counted(name, fn):
             def wrapper(*args):
@@ -257,6 +360,11 @@ class SlotScheduler:
             return wrapper
 
         self._prefill_fn = jax.jit(counted("prefill", ST.make_prefill_step(
+            model, cfg, policy, mode=mode, prefill_chunk=prefill_chunk)))
+        # the re-admission prefill is the same maker at the resume buffer
+        # width — its own jitted piece so a preempting run still leaves
+        # "prefill" at one trace (widths are shape)
+        self._resume_fn = jax.jit(counted("resume", ST.make_prefill_step(
             model, cfg, policy, mode=mode, prefill_chunk=prefill_chunk)))
         self._decode_fn = jax.jit(counted("decode", SG.make_strategy_slot_loop(
             model, cfg, policy, self._strategy, mode=mode,
@@ -293,19 +401,31 @@ class SlotScheduler:
     def executable_counts(self) -> dict:
         """Number of times each jitted piece was TRACED (== number of
         compiled variants) — the no-retrace contract says each stays at 1
-        across every admission pattern (including shared-prefix
-        admissions: block-table rows and page ids are data)."""
+        across every admission pattern AND every fault plan (including
+        shared-prefix admissions and preemption re-admissions: block-table
+        rows, masks, and nan-step vectors are data).  ``resume`` stays 0
+        until a preemption actually re-admits."""
         return dict(self._trace_counts)
 
     def call_counts(self) -> dict:
         """Host-side invocation counts per piece.  ``prefill`` is the
         number of admissions that actually ran the model — a prefix-store
-        hit admits without bumping it (the zero-prefill-FLOPs counter)."""
+        hit admits without bumping it (the zero-prefill-FLOPs counter);
+        ``resume`` counts preemption re-admissions."""
         return dict(self._call_counts)
 
     def prefix_stats(self) -> dict:
         """Prefix-sharing counters (paged layout; empty dict for dense)."""
         return self._prefix.stats() if self._prefix is not None else {}
+
+    def health_stats(self) -> dict:
+        """Resilience counters, accumulated across ``run()``s: terminal
+        statuses (``ok``/``rejected``/``timeout``/``preempted``/``shed``/
+        ``failed``), ok retirement causes (``eos``/``budget``/
+        ``capacity``), and events (``preemptions``, ``readmits``,
+        ``deadline_misses``, ``prefix_exhausted`` — prefix registrations
+        skipped because the shared pool had no evictable pages)."""
+        return dict(self._health)
 
     def spec_stats(self) -> dict:
         """Speculative-decoding counters (empty dict for one-token
@@ -329,6 +449,10 @@ class SlotScheduler:
         self._call_counts["prefill"] += 1
         return self._prefill_fn(*args)
 
+    def _resume(self, *args):
+        self._call_counts["resume"] += 1
+        return self._resume_fn(*args)
+
     def _decode(self, *args):
         self._call_counts["decode"] += 1
         return self._decode_fn(*args)
@@ -338,72 +462,266 @@ class SlotScheduler:
             max_blocks: Optional[int] = None) -> list[Completion]:
         """Serve ``requests`` to completion through the slot batch.
 
-        Admission is streaming: requests queue up and enter whenever a
-        slot frees, so the number of concurrent residents never exceeds
-        ``max_slots`` while raggedness (arrival time, prompt length,
-        budget) stays data.  Returns completions in finish order.
-        ``max_blocks`` bounds the decode blocks (None = drain fully).
+        Admission is streaming: requests become visible at their
+        ``arrive_ms``, wait in a (optionally bounded) pending queue, and
+        enter whenever a slot frees — highest priority first, FIFO within
+        a priority, parked re-admissions preferred on ties.  The number
+        of concurrent residents never exceeds ``max_slots`` while
+        raggedness (arrival time, prompt length, budget) stays data.
+
+        Every request retires with a terminal ``status`` (see the module
+        docstring's taxonomy); a bad request never aborts the run.
+        Returns completions in finish order.  ``max_blocks`` bounds the
+        decode blocks (None = drain fully); parked preemption victims
+        still waiting at the cut retire as 'preempted'.
         """
-        queue = deque(requests)
+        plan = self._plan
         B = self.max_slots
         pos = np.zeros((B,), np.int32)
         active = np.zeros((B,), bool)
         last_tok = np.zeros((B,), np.int32)
         slot_req: list[Optional[Request]] = [None] * B
         slot_out: list[list] = [[] for _ in range(B)]
+        slot_steps = [0] * B        # decode scan steps per resident
         done: list[Completion] = []
         n_blocks = 0
+        arrivals = deque(sorted(requests, key=lambda r: r.arrive_ms))
+        pending: deque[Request] = deque()
+        readmit: deque[_Parked] = deque()
+        t_start = time.monotonic()
+        vclock = 0.0                # virtual ms when plan.ms_per_block > 0
 
-        def retire(slot: int, why: str):
+        def now_ms() -> float:
+            if plan.ms_per_block > 0:
+                return vclock
+            return (time.monotonic() - t_start) * 1e3
+
+        def finish(req: Request, out: list, why: str, status: str = "ok",
+                   reason: Optional[str] = None):
+            done.append(Completion(req.rid, len(req.tokens), out, why,
+                                   status=status, reason=reason))
+            self._health[status] += 1
+            if status == "ok":
+                self._health[why] += 1
+
+        def retire(slot: int, why: str, status: str = "ok",
+                   reason: Optional[str] = None):
             req = slot_req[slot]
-            done.append(Completion(req.rid, len(req.tokens),
-                                   slot_out[slot], why))
+            finish(req, slot_out[slot], why, status, reason)
             slot_req[slot] = None
             slot_out[slot] = []
             active[slot] = False
             if self._prefix is not None:
                 self._prefix.release(slot)
 
-        while queue or active.any():
-            # -- admission: fill every free slot from the queue ------------
+        def overdue(req: Request) -> bool:
+            return (req.deadline_ms is not None
+                    and now_ms() - req.arrive_ms >= req.deadline_ms)
+
+        def resumable(slot: int) -> bool:
+            # the parked state (prompt + generated minus the pending
+            # token) must fit the resume prefill's buffer
+            return int(pos[slot]) <= self._resume_cap
+
+        def preempt(slot: int):
+            req = slot_req[slot]
+            readmit.append(_Parked(req=req, out=slot_out[slot],
+                                   key=self._slot_keys[slot].copy(),
+                                   steps=slot_steps[slot]))
+            self._health["preemptions"] += 1
+            slot_req[slot] = None
+            slot_out[slot] = []
+            active[slot] = False
+            if self._prefix is not None:
+                # drop shared-page references and reclaim the table row
+                # onto the slot's private pages before a new resident
+                # moves in
+                self._prefix.release(slot)
+                self._set_row(slot, self._private_rows[slot])
+
+        def reap_deadlines():
             for slot in range(B):
-                if slot_req[slot] is not None or not queue:
+                req = slot_req[slot]
+                if req is not None and overdue(req):
+                    self._health["deadline_misses"] += 1
+                    retire(slot, "timeout", status="timeout",
+                           reason=f"deadline {req.deadline_ms:g} ms "
+                                  "exceeded while decoding")
+            for q in (pending, readmit):
+                kept = []
+                for item in q:
+                    req = item.req if isinstance(item, _Parked) else item
+                    if overdue(req):
+                        self._health["deadline_misses"] += 1
+                        out = item.out if isinstance(item, _Parked) else []
+                        finish(req, out, "timeout", status="timeout",
+                               reason=f"deadline {req.deadline_ms:g} ms "
+                                      "exceeded while queued")
+                    else:
+                        kept.append(item)
+                q.clear()
+                q.extend(kept)
+
+        def ingest():
+            while arrivals and arrivals[0].arrive_ms <= now_ms():
+                if (self.queue_cap is not None
+                        and len(pending) >= self.queue_cap):
+                    if self.shed_policy == "shed":
+                        req = arrivals.popleft()
+                        finish(req, [], "shed", status="shed",
+                               reason=f"admission queue full "
+                                      f"(queue_cap={self.queue_cap})")
+                        continue
+                    break   # "block": arrivals wait upstream
+                pending.append(arrivals.popleft())
+
+        def next_waiter():
+            """Highest-priority waiter; FIFO within a priority, parked
+            re-admissions preferred on ties (their device work is already
+            partly spent).  Plain FIFO when every priority is equal —
+            the pre-resilience admission order."""
+            best = None     # (source, index, priority)
+            for i, p in enumerate(readmit):
+                if best is None or p.req.priority > best[2]:
+                    best = ("readmit", i, p.req.priority)
+            for i, r in enumerate(pending):
+                if best is None or r.priority > best[2]:
+                    best = ("pending", i, r.priority)
+            if best is None:
+                return None
+            src, i, _ = best
+            q = readmit if src == "readmit" else pending
+            item = q[i]
+            del q[i]
+            return item
+
+        def force_preempts():
+            for rid in plan.preempts_at(n_blocks):
+                for slot in range(B):
+                    req = slot_req[slot]
+                    if (req is not None and req.rid == rid
+                            and resumable(slot)):
+                        preempt(slot)
+
+        def priority_preempt():
+            """One preemption per boundary: when no slot is free and a
+            waiter strictly outranks the lowest-priority resumable
+            resident, evict that resident."""
+            if not (pending or readmit):
+                return
+            if any(slot_req[s] is None for s in range(B)):
+                return
+            waiter_pri = max(
+                [p.req.priority for p in readmit]
+                + [r.priority for r in pending])
+            victims = [s for s in range(B)
+                       if slot_req[s] is not None and resumable(s)]
+            if not victims:
+                return
+            s = min(victims, key=lambda s: (slot_req[s].priority, s))
+            if slot_req[s].priority < waiter_pri:
+                preempt(s)
+
+        def seed_host_state(slot: int, req: Request, out: list,
+                            key: np.ndarray, steps: int):
+            L = len(req.tokens)
+            if self._strategy.stateful:
+                seq = list(np.asarray(req.tokens, np.int32)) + list(out)
+                self._hist[slot] = 0
+                self._hist[slot, :len(seq)] = np.asarray(seq, np.int32)
+            slot_req[slot] = req
+            slot_out[slot] = out
+            pos[slot] = L + len(out) - 1
+            last_tok[slot] = int(out[-1])
+            active[slot] = True
+            slot_steps[slot] = steps
+            self._slot_keys[slot] = key
+
+        def admit_free_slots():
+            for slot in range(B):
+                if slot_req[slot] is not None:
                     continue
-                req = queue.popleft()
-                t0 = self._admit(slot, req)
-                if self._strategy.stateful:
-                    # seed the prompt-lookup history: absolute position ->
-                    # token, prompt then the pending first generation
-                    L = len(req.tokens)
-                    self._hist[slot] = 0
-                    self._hist[slot, :L] = np.asarray(req.tokens, np.int32)
-                    if L < self._hist.shape[1]:
-                        self._hist[slot, L] = int(t0)
-                slot_req[slot] = req
-                slot_out[slot] = [int(t0)]
-                pos[slot] = len(req.tokens)
-                last_tok[slot] = int(t0)
-                active[slot] = True
-                if self.eos_id >= 0 and int(t0) == self.eos_id:
-                    retire(slot, "eos")
-                elif req.max_gen <= 1:
-                    retire(slot, "budget")
+                while True:
+                    item = next_waiter()
+                    if item is None:
+                        return
+                    if isinstance(item, _Parked):
+                        self._readmit(slot, item.req, item.out)
+                        seed_host_state(slot, item.req, item.out,
+                                        item.key, item.steps)
+                        break
+                    req = item
+                    err = self._check(req)
+                    if err is not None:
+                        finish(req, [], "rejected", status="rejected",
+                               reason=err)
+                        continue
+                    try:
+                        t0, key = self._admit(slot, req)
+                    except Exception as e:  # noqa: BLE001 — isolation:
+                        # one bad admission (injected or real prefill
+                        # failure, non-finite logits) rejects THIS
+                        # request; the run keeps serving
+                        finish(req, [], "failed", status="failed",
+                               reason=f"{type(e).__name__}: {e}")
+                        continue
+                    seed_host_state(slot, req, [int(t0)], key, steps=0)
+                    if self.eos_id >= 0 and int(t0) == self.eos_id:
+                        retire(slot, "eos")
+                    elif req.max_gen <= 1:
+                        retire(slot, "budget")
+                    break
+
+        while arrivals or pending or readmit or active.any():
+            reap_deadlines()
+            ingest()
+            force_preempts()
+            priority_preempt()
+            admit_free_slots()
             if not active.any():
+                if arrivals and not pending and not readmit:
+                    # nothing runnable until the next arrival: advance
+                    # the clock to it instead of spinning
+                    if plan.ms_per_block > 0:
+                        vclock = max(vclock, arrivals[0].arrive_ms)
+                    else:
+                        time.sleep(min(
+                            1e-3, max(0.0, (arrivals[0].arrive_ms
+                                            - now_ms()) * 1e-3)))
                 continue
 
             # -- one decode block over the slot batch ----------------------
-            toks, emitted, self._cache, pos_d, active_d, self._key, hist = \
-                self._decode(
+            # nan_step: per-slot in-block scan step at which a scheduled
+            # decode fault fires (-1 = none) — data, not shape
+            nan_step = np.full((B,), -1, np.int32)
+            for slot in range(B):
+                req = slot_req[slot]
+                if req is None or not active[slot]:
+                    continue
+                step = plan.nan_decode_step(req.rid)
+                if step is not None:
+                    rel = step - slot_steps[slot]
+                    if 0 <= rel < self.block_steps:
+                        nan_step[slot] = rel
+            ran = active.copy()
+            toks, emitted, self._cache, pos_d, active_d, keys_d, hist, \
+                bad_d = self._decode(
                     self.serve_params, self.qparams, jnp.asarray(last_tok),
                     self._cache, jnp.asarray(pos), jnp.asarray(active),
-                    self._key, jnp.asarray(self._hist))
+                    jnp.asarray(self._slot_keys), jnp.asarray(self._hist),
+                    jnp.asarray(nan_step))
             toks = np.asarray(toks)
             emitted = np.asarray(emitted)
             pos_new = np.asarray(pos_d)
             active_new = np.asarray(active_d)
-            # host copy: admission mutates rows in place (np.asarray of a
-            # device buffer is read-only)
+            bad = np.asarray(bad_d)
+            # host copies: admission mutates rows in place (np.asarray of
+            # a device buffer is read-only)
             self._hist = np.array(hist)
+            self._slot_keys = np.array(keys_d)
+            for slot in range(B):
+                if ran[slot]:
+                    slot_steps[slot] += self.block_steps
             if self._emit_w > 1:
                 # a window with any emission ran a live verify pass
                 win = emitted.reshape(B, self.block_steps, self._emit_w)
@@ -431,7 +749,8 @@ class SlotScheduler:
                 # beyond the budget cut was never part of the output, so
                 # that request finished by budget, not eos — and a
                 # device-side freeze without a collected EOS and with
-                # budget to spare can only be the capacity guard
+                # budget to spare can only be the NaN guard (flagged in
+                # ``bad``) or the capacity guard
                 hit_eos = (self.eos_id >= 0 and bool(slot_out[slot])
                            and slot_out[slot][-1] == self.eos_id)
                 budget_done = len(slot_out[slot]) >= req.max_gen
@@ -439,13 +758,24 @@ class SlotScheduler:
                     retire(slot, "eos")
                 elif budget_done:
                     retire(slot, "budget")
+                elif bad[slot]:
+                    retire(slot, "failed", status="failed",
+                           reason="non-finite logits during decode")
                 elif not active_new[slot]:
                     retire(slot, "capacity")
                 else:
                     active[slot] = active_new[slot]
             n_blocks += 1
+            if plan.ms_per_block > 0:
+                vclock += plan.ms_per_block
             if max_blocks is not None and n_blocks >= max_blocks:
                 break
+        # parked victims the run never got back to are terminal too —
+        # with their generated-so-far tokens, so nothing is silently lost
+        while readmit:
+            p = readmit.popleft()
+            finish(p.req, p.out, "preempted", status="preempted",
+                   reason="preempted; run ended before re-admission")
         # no resident remains (or the run was cut): drop any prefix-store
         # references this run's slots held so unused entries stay evictable
         if self._prefix is not None:
@@ -454,49 +784,102 @@ class SlotScheduler:
         return done
 
     # -- admission ---------------------------------------------------------
-    def _check(self, req: Request):
+    def _check(self, req: Request) -> Optional[str]:
+        """Validate a request; returns a rejection reason or None.  Bad
+        requests retire with status 'rejected' instead of aborting the
+        run — per-request fault isolation."""
         L = int(len(req.tokens))
         if L > self.prompt_cap:
-            raise ValueError(
-                f"request {req.rid}: prompt length {L} exceeds prompt_cap "
-                f"{self.prompt_cap}")
+            return (f"prompt length {L} exceeds prompt_cap "
+                    f"{self.prompt_cap}")
         if L < 1:
-            raise ValueError(f"request {req.rid}: empty prompt")
+            return "empty prompt"
         if req.max_gen < 1:
             # admission always yields the prefill's first token, so a
             # 0-token budget cannot be honored
-            raise ValueError(
-                f"request {req.rid}: max_gen must be >= 1 (the first "
-                "token is sampled at admission)")
-        return L
+            return ("max_gen must be >= 1 (the first token is sampled "
+                    "at admission)")
+        return None
 
-    def _sample_t0(self, logits) -> int:
-        self._key, sub = jax.random.split(self._key)
-        t0 = ST.sample_tokens(jnp.asarray(logits)[:, -1, :], sub,
+    def _request_keys(self, rid: int):
+        """Per-request key pair: (first-token sample key, carried slot
+        key).  Folding the rid into the seed key makes the request's
+        entire sample stream independent of arrival order and slot
+        placement."""
+        k = jax.random.fold_in(self._base_key, int(rid))
+        ks = jax.random.split(k)
+        return ks[0], np.asarray(ks[1], np.uint32)
+
+    def _sample_t0(self, logits, key) -> int:
+        t0 = ST.sample_tokens(jnp.asarray(logits)[:, -1, :], key,
                               temperature=self.temperature, top_p=self.top_p)
         return int(t0[0])
 
-    def _admit(self, slot: int, req: Request) -> int:
-        """Admit ``req`` into ``slot`` and return its first generated
-        token.  Dense: chunked-prefill the prompt into the batch-1
-        template and splice it into the slot's region.  Paged: try the
-        prefix store first — a full-prompt hit attaches the shared pages
-        (block-table row write + one tail-page copy) and samples from the
-        stored logits, running ZERO prefill FLOPs; a miss prefills,
-        scatters into the slot's private pages, and registers the prompt
-        for future sharers."""
-        L = self._check(req)
+    def _admit(self, slot: int, req: Request):
+        """Admit ``req`` into ``slot``; returns (first generated token,
+        carried per-request key).  Dense: chunked-prefill the prompt into
+        the batch-1 template and splice it into the slot's region.
+        Paged: try the prefix store first — a full-prompt hit attaches
+        the shared pages (block-table row write + one tail-page copy) and
+        samples from the stored logits, running ZERO prefill FLOPs; a
+        miss prefills, scatters into the slot's private pages, and
+        registers the prompt for future sharers.  Raises on injected
+        admission faults and non-finite prefill logits — BEFORE anything
+        is spliced into the resident cache, so a failed admission leaves
+        no trace."""
+        L = int(len(req.tokens))
+        if self._plan.rejects(req.rid):
+            raise InjectedFault(
+                f"request {req.rid}: injected admission failure")
+        k_t0, k_carry = self._request_keys(req.rid)
         key = tuple(int(t) for t in np.asarray(req.tokens))
 
         if self._prefix is not None:
             entry = self._prefix.lookup(key, slot)
             if entry is not None:
-                return self._attach_prefix(slot, entry)
+                return self._attach_prefix(slot, entry, k_t0), k_carry
 
         toks = np.zeros((1, self.prompt_cap), np.int32)
         toks[0, :L] = np.asarray(req.tokens, np.int32)
         lengths = jnp.asarray([L], jnp.int32)
         logits, slot_cache = self._prefill(
+            self.serve_params, self.qparams, {"tokens": jnp.asarray(toks)},
+            self._slot_cache0, lengths)
+        last_row = np.asarray(logits)[:, -1, :]
+        if self._plan.nans_prefill(req.rid):
+            last_row = np.full_like(last_row, np.nan)
+        if not np.isfinite(last_row).all():
+            raise FloatingPointError(
+                f"request {req.rid}: non-finite prefill logits")
+        if self._prefix is None:
+            self._call_counts["insert"] += 1
+            self._cache = self._insert_fn(self._cache, slot_cache,
+                                          jnp.asarray(slot, jnp.int32))
+        else:
+            row = self._private_rows[slot]
+            self._call_counts["insert"] += 1
+            self._cache = self._insert_fn(self._cache, slot_cache,
+                                          jnp.asarray(row))
+            self._set_row(slot, row)
+            self._register_prefix(key, L, row, logits)
+        return self._sample_t0(logits, k_t0), k_carry
+
+    def _readmit(self, slot: int, req: Request, out: list):
+        """Rebuild a preempted request's device state in ``slot``: one
+        ragged prefill (the ``resume`` executable) over prompt +
+        generated-so-far tokens minus the pending one — FAT's frozen
+        scales make the recomputed int8 cache bit-valid, so decode
+        continues exactly where it left off.  The slot's private pages
+        receive the state; prefix pages are not consulted (the sequence
+        includes generated tokens no other request shares)."""
+        L = len(req.tokens)
+        resume = L + len(out) - 1   # pending token is NOT yet in cache
+        toks = np.zeros((1, self._resume_cap), np.int32)
+        seq = list(np.asarray(req.tokens, np.int32)) + [int(t) for t in
+                                                        out[:-1]]
+        toks[0, :resume] = np.asarray(seq, np.int32)
+        lengths = jnp.asarray([resume], jnp.int32)
+        _, slot_cache = self._resume(
             self.serve_params, self.qparams, {"tokens": jnp.asarray(toks)},
             self._slot_cache0, lengths)
         if self._prefix is None:
@@ -509,8 +892,7 @@ class SlotScheduler:
             self._cache = self._insert_fn(self._cache, slot_cache,
                                           jnp.asarray(row))
             self._set_row(slot, row)
-            self._register_prefix(key, L, row, logits)
-        return self._sample_t0(logits)
+        self._health["readmits"] += 1
 
     # -- paged plumbing ----------------------------------------------------
     def _set_row(self, slot: int, row: np.ndarray):
@@ -537,10 +919,15 @@ class SlotScheduler:
         """Snapshot the freshly-prefilled prompt pages into the shared
         region (device page copies — no model FLOPs) and store the
         last-position logits so a future identical prompt skips prefill
-        entirely.  Opportunistic: silently skipped when the shared region
-        is full of in-use entries."""
-        alloc = self._prefix.reserve(key, L)
+        entirely.  Opportunistic: skipped — and counted in
+        ``health_stats()['prefix_exhausted']`` — when the shared region
+        is full of in-use entries (or a fault plan forces exhaustion);
+        the admission itself already lives in private pages, so serving
+        degrades to no-sharing instead of failing."""
+        alloc = (None if self._plan.exhaust_prefix
+                 else self._prefix.reserve(key, L))
         if alloc is None:
+            self._health["prefix_exhausted"] += 1
             return
         pages, tail = alloc
         n_full = len(pages)
@@ -553,7 +940,7 @@ class SlotScheduler:
             pages=pages, tail_page=tail, length=L,
             logits=np.asarray(logits)))
 
-    def _attach_prefix(self, slot: int, entry: PrefixEntry) -> int:
+    def _attach_prefix(self, slot: int, entry: PrefixEntry, k_t0) -> int:
         """Full-prompt hit: point the slot's table row at the shared
         pages; the partial tail page (decode's first append target) is
         copied into the slot's private page so shared pages stay
@@ -565,4 +952,4 @@ class SlotScheduler:
         if entry.tail_page is not None:
             self._copy_pages([(int(entry.tail_page),
                                int(self._private_rows[slot][n_full]))])
-        return self._sample_t0(entry.logits)
+        return self._sample_t0(entry.logits, k_t0)

@@ -56,7 +56,20 @@ Usage:
          --max-slots N (continuous-batching scheduler)
          --block-steps N --eos-id T (scheduler decode-block / EOS knobs)
          --cache-layout {dense,ring,paged} --page-size N (KV layout)
+         --deadline-ms MS (per-request completion deadline; missed
+             requests retire with status 'timeout' at block boundaries)
+         --queue-cap N --shed-policy {shed,block} (bounded admission
+             queue + overload behavior — graceful degradation)
+         --fault-plan SPEC (inline JSON or a path to a JSON file; a
+             launch/faults.py FaultPlan injecting deterministic faults —
+             admission failures, NaN logits, forced preemptions, forced
+             prefix-pool exhaustion, virtual clock)
          --ckpt-dir DIR (restore trained params instead of random init)
+
+Every request retires with a terminal ``Completion.status`` (ok |
+rejected | timeout | preempted | shed | failed — docs/serving.md
+"Failure semantics"); the run prints the scheduler's health report
+(per-status counts, preemptions, re-admits, deadline misses).
 """
 from __future__ import annotations
 
@@ -73,10 +86,12 @@ from repro.data import pipeline as DP
 from repro.launch.engine import Engine, prepare_int8  # noqa: F401
 
 
-def ragged_requests(spec, n_requests, prompt_len, gen, *, seed=12345):
+def ragged_requests(spec, n_requests, prompt_len, gen, *, seed=12345,
+                    deadline_ms=None):
     """Build a ragged request queue from the data pipeline: request r's
     prompt keeps between half and all of ``prompt_len`` tokens (a
-    deterministic mixed-length arrival pattern)."""
+    deterministic mixed-length arrival pattern).  ``deadline_ms`` applies
+    one completion deadline to every request (None = none)."""
     from repro.launch.scheduler import Request
 
     batch = DP.make_batch(
@@ -87,7 +102,7 @@ def ragged_requests(spec, n_requests, prompt_len, gen, *, seed=12345):
         frac = (r % 4) / 6.0               # lengths cycle 1, 5/6, 2/3, 1/2
         length = max(1, prompt_len - int(frac * prompt_len))
         reqs.append(Request(rid=r, tokens=toks[r, :length].astype("int32"),
-                            max_gen=gen))
+                            max_gen=gen, deadline_ms=deadline_ms))
     return reqs
 
 
@@ -96,7 +111,8 @@ def run_continuous(args, engine: Engine):
     slot scheduler and report aggregate throughput."""
     spec = DP.spec_for(engine.cfg, ShapeSpec("cli", "train",
                                              args.prompt_len, args.requests))
-    reqs = ragged_requests(spec, args.requests, args.prompt_len, args.gen)
+    reqs = ragged_requests(spec, args.requests, args.prompt_len, args.gen,
+                           deadline_ms=args.deadline_ms)
     t0 = time.time()
     completions = engine.generate(
         reqs, max_slots=args.max_slots, prompt_cap=args.prompt_len,
@@ -118,6 +134,14 @@ def run_continuous(args, engine: Engine):
     print(f"[serve] executables: " +
           " ".join(f"{k}={v}" for k, v in counts.items()) +
           " (1 each == no retrace across the whole ragged run)")
+    by_status: dict = {}
+    for c in completions:
+        by_status[c.status] = by_status.get(c.status, 0) + 1
+    health = engine.health_report()
+    print("[serve] statuses: " +
+          " ".join(f"{k}={v}" for k, v in sorted(by_status.items())))
+    print("[serve] health: " +
+          " ".join(f"{k}={v}" for k, v in health.items() if v))
     if sched.cache_layout == "paged":
         stats = sched.prefix_stats()
         print(f"[serve] prefix store: {stats['hits']} hits / "
@@ -196,6 +220,23 @@ def main():
                          "under --max-slots)")
     ap.add_argument("--page-size", type=int, default=64,
                     help="tokens per page for --cache-layout paged")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request completion deadline in ms (scheduler "
+                         "path): requests that miss it retire with status "
+                         "'timeout' at the next block boundary")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="bounded admission queue for the scheduler: at "
+                         "most N requests waiting (default: unbounded)")
+    ap.add_argument("--shed-policy", default="shed",
+                    choices=["shed", "block"],
+                    help="what a full admission queue does with new "
+                         "arrivals: shed = retire them immediately with "
+                         "status 'shed'; block = hold them out until the "
+                         "queue drains")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic fault injection (launch/faults.py): "
+                         "inline JSON or a path to a JSON file, e.g. "
+                         "'{\"reject\": [2], \"nan_decode\": [[3, 1]]}'")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained params from a launch/train.py "
                          "checkpoint directory (default: random init)")
@@ -210,7 +251,9 @@ def main():
         cache_layout=args.cache_layout, page_size=args.page_size,
         prefill_chunk=args.prefill_chunk, temperature=args.temperature,
         top_p=args.top_p, seed=args.seed, decode_strategy=args.strategy,
-        spec_k=args.spec_k, spec_ngram=args.spec_ngram)
+        spec_k=args.spec_k, spec_ngram=args.spec_ngram,
+        queue_cap=args.queue_cap, shed_policy=args.shed_policy,
+        fault_plan=args.fault_plan)
     if not args.fp:
         print(f"[serve] converted: {engine.n_int8_weights()} int8 weight "
               "tensors resident")

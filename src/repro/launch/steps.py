@@ -323,7 +323,7 @@ def make_slot_decode_loop(model, cfg, policy: A.QuantPolicy,
 
     def slot_decode_loop(serve_params, qparams, tok0, cache, pos0, active0,
                          key=None):
-        toks, emitted, cache, pos, active, key, _ = inner(
+        toks, emitted, cache, pos, active, key, _, _ = inner(
             serve_params, qparams, tok0, cache, pos0, active0, key)
         return toks, emitted, cache, pos, active, key
 

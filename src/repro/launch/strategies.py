@@ -225,9 +225,22 @@ class GreedyStrategy(DecodeStrategy):
 
 
 class SamplingStrategy(GreedyStrategy):
-    """Temperature / nucleus sampling (absorbs ``sample_tokens``): same
-    verify pass as greedy, accept splits the carried key once per step —
-    the pre-redesign key schedule, so same seed -> same tokens."""
+    """Temperature / nucleus sampling (absorbs ``sample_tokens``).
+
+    Two key schedules, dispatched (at trace time) on the carried key's
+    shape:
+
+      * scalar key — split once per step, shared across slots: the
+        pre-redesign schedule, so same seed -> same tokens for the
+        legacy loops and the steps-module wrapper;
+      * per-slot keys, a (B, 2) uint32 matrix — each slot splits its OWN
+        key, and a slot's key advances only on its active steps.  A
+        request's sample stream then depends only on its admission key
+        and how many tokens it has emitted — not on arrival order, slot
+        placement, batch composition, or preemption — which is what lets
+        the scheduler promise same-seed reproducibility across admission
+        patterns (tests/test_resilience.py pins it).
+    """
 
     def __init__(self, model, cfg, policy, mode: str = "int8", *,
                  temperature: float = 1.0, top_p: float = 1.0):
@@ -235,8 +248,25 @@ class SamplingStrategy(GreedyStrategy):
         self.temperature, self.top_p = temperature, top_p
 
     def accept(self, tok, drafts, logits, active, key):
+        last = logits[:, -1, :]
+        if key.ndim == 2:
+            ks = jax.vmap(jax.random.split)(key)     # (B, 2, 2)
+            sub, nxt_key = ks[:, 0], ks[:, 1]
+            nxt = jax.vmap(
+                lambda l, k: sample_tokens(l[None], k,
+                                           temperature=self.temperature,
+                                           top_p=self.top_p)[0])(last, sub)
+            if active is None:
+                emitted = jnp.ones(nxt.shape + (1,), bool)
+                key = nxt_key
+            else:
+                emitted = active[:, None]
+                # frozen slots hold their key: the stream position stays
+                # a pure function of tokens emitted
+                key = jnp.where(active[:, None], nxt_key, key)
+            return nxt, nxt[:, None], emitted, key
         key, sub = jax.random.split(key)
-        nxt = sample_tokens(logits[:, -1, :], sub,
+        nxt = sample_tokens(last, sub,
                             temperature=self.temperature, top_p=self.top_p)
         if active is None:
             emitted = jnp.ones(nxt.shape + (1,), bool)
@@ -483,22 +513,30 @@ def make_strategy_slot_loop(model, cfg, policy: A.QuantPolicy,
       * positions advance by each slot's emitted count (slots DRAIN AT
         DIFFERENT RATES under speculation — that raggedness is data);
       * ``KVCache.rollback`` records the logical rewind of rejected
-        draft entries.
+        draft entries;
+      * NON-FINITE LOGITS freeze only the slot that produced them: the
+        slot emits nothing from that step on and comes back flagged in
+        ``bad``, so the scheduler can retire just that request as
+        ``failed`` while the rest of the batch decodes on.  The optional
+        ``nan_step`` vector ((B,) int32, -1 = never) forces a slot's
+        logits non-finite at a chosen scan step — the fault-injection
+        hook (``launch/faults.py``); it is DATA, so faulted and clean
+        runs share one executable.
 
     Returns ``(toks (B, n_steps * W), emitted (B, n_steps * W), cache,
-    pos, active, key, hist)`` with W = ``emit_width``; lane j of step i
-    sits at column i * W + j.  Under speculation emissions are ragged
-    WITHIN a window, so consumers skip un-emitted lanes rather than
-    stopping at the first (the scheduler does).  All shapes are fixed by
-    (max_slots, cache_len, n_steps, W): one compiled executable serves
-    every admission pattern and every draft/acceptance pattern.
-    Callers jit with ``donate_argnums=(3,)``.
+    pos, active, key, hist, bad)`` with W = ``emit_width``; lane j of
+    step i sits at column i * W + j.  Under speculation emissions are
+    ragged WITHIN a window, so consumers skip un-emitted lanes rather
+    than stopping at the first (the scheduler does).  All shapes are
+    fixed by (max_slots, cache_len, n_steps, W): one compiled executable
+    serves every admission pattern, every draft/acceptance pattern, and
+    every fault plan.  Callers jit with ``donate_argnums=(3,)``.
     """
     _check_attn_only(cfg, "slot decode")
     w = strategy.emit_width
 
     def slot_loop(serve_params, qparams, tok0, cache, pos0, active0,
-                  key=None, hist=None):
+                  key=None, hist=None, nan_step=None):
         if key is None:
             key = jax.random.PRNGKey(0)
         cache_len = _attn_cache_len(cache)
@@ -506,9 +544,13 @@ def make_strategy_slot_loop(model, cfg, policy: A.QuantPolicy,
             raise ValueError(
                 "a stateful strategy needs its history buffer (the "
                 "scheduler seeds it with each prompt at admission)")
+        pos0 = jnp.asarray(pos0, jnp.int32)
+        if nan_step is None:
+            nan_step = jnp.full(pos0.reshape(-1).shape, -1, jnp.int32)
 
-        def body(carry, _):
-            st = DecodeState(*carry)
+        def body(carry, step_i):
+            st = DecodeState(*carry[0])
+            bad_acc = carry[1]
             tok, cache, pos, active, key, hist = st
             # capacity guard BEFORE the write: a slot without room for a
             # whole window freezes instead of clamping over valid entries
@@ -517,10 +559,24 @@ def make_strategy_slot_loop(model, cfg, policy: A.QuantPolicy,
             drafts = strategy.propose(tok, pos, hist)
             logits, cache = strategy.verify(serve_params, qparams, tok,
                                             drafts, cache, pos, active)
+            # injected fault: scheduled slots' logits turn NaN here, then
+            # flow through the same detection as a real model fault
+            hit = (nan_step == step_i) & active
+            logits = jnp.where(hit[:, None, None],
+                               jnp.asarray(jnp.nan, logits.dtype), logits)
             nxt, toks, emitted, key = strategy.accept(tok, drafts, logits,
                                                       active, key)
             nxt = jnp.where(active, nxt, tok)      # frozen slots hold
             toks = jnp.where(emitted, toks, tok[:, None])
+            # fault isolation: a slot with non-finite verify logits emits
+            # nothing this step and freezes; the batch decodes on
+            finite = jnp.all(jnp.isfinite(logits.astype(jnp.float32)),
+                             axis=(1, 2))
+            bad = active & ~finite
+            emitted = emitted & ~bad[:, None]
+            nxt = jnp.where(bad, tok, nxt)
+            active = active & ~bad
+            bad_acc = bad_acc | bad
             if eos_id >= 0:
                 # the EOS lane itself is emitted; later lanes in the
                 # window are cut and the slot freezes after
@@ -541,20 +597,20 @@ def make_strategy_slot_loop(model, cfg, policy: A.QuantPolicy,
             hist = strategy.update_hist(hist, pos, toks, emitted)
             pos = pos + n_acc
             cache = _rollback(cache, pos)
-            return (nxt, cache, pos, active, key, hist), (toks, emitted)
+            return ((nxt, cache, pos, active, key, hist), bad_acc), \
+                (toks, emitted)
 
-        pos0 = jnp.asarray(pos0, jnp.int32)
         active0 = jnp.asarray(active0, bool)
         if hist is None:
             hist = jnp.zeros((pos0.shape[0], 0), jnp.int32)
-        carry0 = (jnp.asarray(tok0, jnp.int32), cache, pos0, active0, key,
-                  hist)
-        (tok, cache, pos, active, key, hist), (toks, emitted) = \
-            jax.lax.scan(body, carry0, None, length=n_steps)
+        carry0 = ((jnp.asarray(tok0, jnp.int32), cache, pos0, active0, key,
+                   hist), jnp.zeros(active0.shape, bool))
+        ((tok, cache, pos, active, key, hist), bad), (toks, emitted) = \
+            jax.lax.scan(body, carry0, jnp.arange(n_steps, dtype=jnp.int32))
         # (n_steps, B, W) -> (B, n_steps * W): lane j of step i at i*W+j
         b = pos.shape[0]
         toks = jnp.moveaxis(toks, 0, 1).reshape(b, n_steps * w)
         emitted = jnp.moveaxis(emitted, 0, 1).reshape(b, n_steps * w)
-        return toks, emitted, cache, pos, active, key, hist
+        return toks, emitted, cache, pos, active, key, hist, bad
 
     return slot_loop

@@ -319,7 +319,7 @@ class TestPrefixSharing:
                            max_gen=GEN - 2) for r in range(3)])
         counts = sched.executable_counts()
         assert counts == {"prefill": 1, "decode": 1, "insert": 1,
-                          "set_row": 1, "copy_page": 1}, counts
+                          "resume": 0, "set_row": 1, "copy_page": 1}, counts
         assert sched.prefix_stats()["hits"] >= 2
 
     def test_scanned_stack_paged_matches_dense(self):
@@ -521,3 +521,75 @@ class TestMultiTokenAppendSlots:
                                    starts + j, active=active)
         for a, b in zip(jax.tree.leaves(win), jax.tree.leaves(seq)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestPrefixStoreResilience:
+    """Degradation paths of the shared-prefix allocator: pool exhaustion
+    (the scheduler's ``alloc is None`` branch), LRU eviction, and
+    refcount pinning — registration is opportunistic, so every denial
+    must be silent, counted, and leave the store consistent."""
+
+    def _store(self, n_pages=2, page_size=8):
+        from repro.cache.paged import PrefixStore
+        return PrefixStore(first_page=10, n_pages=n_pages,
+                           page_size=page_size)
+
+    def _register(self, store, key, length):
+        from repro.cache.paged import PrefixEntry
+        alloc = store.reserve(key, length)
+        if alloc is None:
+            return None
+        pages, tail = alloc
+        entry = PrefixEntry(pages=pages, tail_page=tail, length=length,
+                            logits=np.zeros((1, 1, 4), np.float32))
+        store.register(key, entry)
+        return entry
+
+    def test_exhaustion_returns_none_and_counts(self):
+        store = self._store(n_pages=2, page_size=8)
+        assert self._register(store, ("a",), 16) is not None  # both pages
+        assert store.lookup(("a",), slot=0) is not None       # pin it
+        assert store.reserve(("b",), 8) is None
+        assert store.stats()["exhausted"] == 1
+        # duplicate keys and zero-length prompts are denials, NOT
+        # exhaustion — only a genuinely full pool bumps the counter
+        assert store.reserve(("a",), 16) is None
+        assert store.reserve(("c",), 0) is None
+        assert store.stats()["exhausted"] == 1
+
+    def test_lru_eviction_frees_unreferenced_entries(self):
+        store = self._store(n_pages=2, page_size=8)
+        assert self._register(store, ("a",), 8) is not None
+        assert self._register(store, ("b",), 8) is not None   # pool full
+        # no live users -> the least-recently-used entry ("a") is evicted
+        assert self._register(store, ("c",), 8) is not None
+        stats = store.stats()
+        assert stats["evictions"] == 1
+        assert stats["entries"] == 2
+        assert store.lookup(("a",), slot=0) is None           # gone
+        assert store.lookup(("b",), slot=0) is not None       # survived
+
+    def test_refcount_pins_entry_against_eviction(self):
+        store = self._store(n_pages=2, page_size=8)
+        assert self._register(store, ("a",), 8) is not None
+        assert self._register(store, ("b",), 8) is not None
+        assert store.lookup(("a",), slot=3) is not None       # pin "a"
+        # reclaim must step over the pinned entry and evict "b" instead,
+        # even though "a" is older
+        assert self._register(store, ("c",), 8) is not None
+        assert store.lookup(("a",), slot=4) is not None
+        assert store.lookup(("b",), slot=4) is None
+        # releasing every holder makes "a" evictable again
+        store.release(3)
+        store.release(4)
+        assert self._register(store, ("d",), 8) is not None
+        assert store.stats()["evictions"] >= 2
+
+    def test_tail_page_returned_on_eviction(self):
+        store = self._store(n_pages=3, page_size=8)
+        assert self._register(store, ("a",), 12) is not None  # 1 full + tail
+        assert self._register(store, ("b",), 8) is not None   # last page
+        # evicting "a" must return BOTH its full page and its tail page
+        assert self._register(store, ("c",), 16) is not None
+        assert store.stats()["evictions"] >= 1
+        assert store.stats()["free_pages"] == 0

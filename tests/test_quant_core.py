@@ -188,3 +188,48 @@ class TestCalibration:
                                     kind="percentile", percentile=99.9)
         assert float(obs_max["t_max"]) == pytest.approx(1000.0)
         assert float(obs_pct["t_max"]) < 10.0
+
+
+class TestZeroActivationCalibration:
+    """A dead KV channel — all-zero calibration activations, or a
+    NaN-poisoned observer — must not reach the serving path as a zero or
+    non-finite dequant scale: dividing by it in quantize_kv would turn
+    the whole int8 cache into inf/NaN.  The floor lives in TWO places
+    (both tested): finalize_calibration's KV branch and the cache's
+    with_scales entry point."""
+
+    def test_finalize_floors_zero_and_nan_kv_thresholds(self):
+        from repro.core import api as A
+
+        policy = A.QuantPolicy(kv_int8=True)
+        qp = {"blocks/0/attn/kv": {
+            "k": {"t_max": jnp.asarray([0.0, 0.5])},       # dead channel
+            "v": {"t_max": jnp.asarray([jnp.nan, 2.0])},   # poisoned obs
+        }}
+        out = A.finalize_calibration(qp, policy)
+        tk = np.asarray(out["blocks/0/attn/kv"]["k"]["t_max"])
+        tv = np.asarray(out["blocks/0/attn/kv"]["v"]["t_max"])
+        assert np.isfinite(tk).all() and np.isfinite(tv).all()
+        assert (tk > 0).all() and (tv > 0).all()
+        # healthy thresholds pass through bit-identically
+        assert tk[1] == pytest.approx(0.5) and tv[1] == pytest.approx(2.0)
+
+    def test_with_scales_floor_keeps_cache_finite(self):
+        from repro.cache import DenseCache
+        from repro.cache.base import _SCALE_FLOOR
+
+        cache = DenseCache.init(1, 8, 2, 4, dtype=jnp.int8, quantized=True)
+        cache = cache.with_scales(jnp.asarray([0.0, 0.25]),
+                                  jnp.asarray([jnp.nan, 0.25]))
+        ks, vs = cache.scales()
+        assert float(ks[0]) == pytest.approx(_SCALE_FLOOR)
+        assert float(vs[0]) == pytest.approx(_SCALE_FLOOR)
+        assert float(ks[1]) == pytest.approx(0.25)   # healthy untouched
+        # the end-to-end hazard: a zero-activation batch through a floored
+        # cache quantizes and dequantizes to exact finite zeros
+        x = jnp.zeros((1, 3, 2, 4))
+        kq, vq = cache.ready(x, x)
+        assert np.isfinite(np.asarray(kq)).all()
+        deq_k, deq_v = cache.dequantize(kq, vq)
+        np.testing.assert_array_equal(np.asarray(deq_k), 0.0)
+        np.testing.assert_array_equal(np.asarray(deq_v), 0.0)

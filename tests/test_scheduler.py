@@ -138,12 +138,15 @@ class TestSchedulerParity:
 class TestGuards:
     def test_zero_gen_budget_rejected(self):
         """max_gen < 1 cannot be honored: admission always samples the
-        first token."""
+        first token.  Fault isolation: the bad request retires with
+        status 'rejected' instead of raising out of run()."""
         cfg, model, params, qp, policy, toks = _calibrated()
         sched = _scheduler(model, cfg, policy, params, qp)
-        with pytest.raises(ValueError, match="max_gen"):
-            sched.run([Request(rid=0, tokens=np.asarray(toks[0, :8]),
-                               max_gen=0)])
+        (c,) = sched.run([Request(rid=0, tokens=np.asarray(toks[0, :8]),
+                                  max_gen=0)])
+        assert c.status == "rejected"
+        assert "max_gen" in c.reason
+        assert c.tokens == []
 
     def test_ssm_stack_rejected_at_construction(self):
         """Same contract as chunked prefill: SSM decode has no per-slot
@@ -171,7 +174,8 @@ class TestNoRetrace:
         sched.run(pattern_a)
         sched.run(pattern_b)
         counts = sched.executable_counts()
-        assert counts == {"prefill": 1, "decode": 1, "insert": 1}, counts
+        assert counts == {"prefill": 1, "decode": 1, "insert": 1,
+                          "resume": 0}, counts
 
 
 class TestSlotDecodeLoop:
