@@ -24,6 +24,11 @@ configurations of the two-kernel engine:
     class, a bounded admission queue, deadlines, and preemption; the
     ``degraded_traffic`` entry records goodput, the per-status census,
     deadline hit rate, and re-admit overhead (CI requires it)
+  * crash recovery: a journaled run killed at a decode-block boundary by
+    a simulated crash, then replayed via ``SlotScheduler.recover`` on a
+    fresh scheduler — the ``crash_recovery`` entry records the cold
+    recovery wall time, replayed tokens, and the bit-parity check
+    against an uninterrupted run (CI requires it)
 
 Each grid point is one ``Engine`` (launch/engine.py) — the same assembly
 the serving CLI runs, so the bench measures the served configuration,
@@ -368,6 +373,79 @@ def bench_degraded_traffic(engine: Engine, *, prompt_len, gen,
     }
 
 
+def bench_crash_recovery(engine: Engine, *, prompt_len, gen,
+                         block_steps=4, crash_block=1):
+    """Durability scenario: the same mixed-length queue is served three
+    times — an uninterrupted reference run, a journaled run killed by a
+    :class:`SimulatedCrash` at ``crash_block``, and a journal-replay
+    recovery (``SlotScheduler.recover``) on a FRESH scheduler.  Recovery
+    is COLD on purpose: a real restarted process pays executable
+    compilation + journal replay + resume prefills + the remaining
+    decode, and ``recovery_ms`` measures exactly that (the reference run
+    is equally cold, so ``clean_wall_ms`` is the like-for-like number).
+    ``tokens_match`` asserts the acceptance property end to end: the
+    recovered completions are bit-identical to the uninterrupted run,
+    statuses included.  ``crash_block`` defaults to the first boundary —
+    every admitted resident is still mid-generation there (any
+    ``gen > block_steps + 1``), so the replay always exercises the
+    re-admission path."""
+    import tempfile
+
+    from repro.launch.faults import FaultPlan, SimulatedCrash
+    from repro.launch.scheduler import SlotScheduler
+
+    n = 6
+    shape = ShapeSpec("bench", "train", prompt_len, n)
+    spec = DP.spec_for(engine.cfg, shape)
+    reqs = ragged_requests(spec, n, prompt_len, gen)
+
+    def sched(**extra):
+        return SlotScheduler(
+            engine.model, engine.cfg, engine.policy, engine.serve_params,
+            engine.qparams, mode=engine.mode, max_slots=2,
+            prompt_cap=prompt_len, gen_cap=gen, block_steps=block_steps,
+            prefill_chunk=engine.prefill_chunk, **extra)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        journal = f"{tmp}/requests.jsonl"
+        t0 = time.perf_counter()
+        ref = sched().run(list(reqs))
+        clean_wall = time.perf_counter() - t0
+
+        crashed = sched(journal=journal,
+                        fault_plan=FaultPlan(crash=(crash_block,)))
+        try:
+            crashed.run(list(reqs))
+            raise RuntimeError("fault plan failed to crash the run")
+        except SimulatedCrash:
+            pass
+
+        rec = sched(journal=journal)
+        t0 = time.perf_counter()
+        done = rec.recover()
+        recovery_wall = time.perf_counter() - t0
+
+    def by_rid(cs):
+        return {c.rid: (tuple(c.tokens), c.status, c.finished_by)
+                for c in cs}
+
+    health, calls = rec.health_stats(), rec.call_counts()
+    return {
+        "requests": n,
+        "max_slots": 2,
+        "block_steps": block_steps,
+        "crash_block": crash_block,
+        "generated_tokens": sum(len(c.tokens) for c in done),
+        "clean_wall_ms": clean_wall * 1e3,
+        "recovery_ms": recovery_wall * 1e3,
+        "recoveries": health["recoveries"],
+        "replayed_tokens": health["replayed_tokens"],
+        "resume_prefill_calls": calls.get("resume", 0),
+        "tokens_match": by_rid(done) == by_rid(ref),
+        "executables": rec.executable_counts(),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -523,6 +601,17 @@ def main():
           f"{dg['deadline_hit_rate']:.2f} | {dg['preemptions']} preemptions "
           f"/ {dg['readmits']} readmits ({dg['resume_prefill_calls']} "
           f"resume prefills) | executables {dg['executables']}")
+
+    # crash recovery: a journaled run killed mid-flight, then replayed on
+    # a fresh scheduler — cost of coming back plus the bit-parity check
+    cr = bench_crash_recovery(eng, prompt_len=args.prompt_len, gen=args.gen)
+    report["crash_recovery"] = cr
+    print(f"crash recovery: {cr['requests']} reqs crashed at block "
+          f"{cr['crash_block']} | replay {cr['replayed_tokens']} tokens "
+          f"({cr['resume_prefill_calls']} resume prefills) | recovery "
+          f"{cr['recovery_ms']:.1f} ms vs clean {cr['clean_wall_ms']:.1f} "
+          f"ms | tokens_match={cr['tokens_match']} | executables "
+          f"{cr['executables']}")
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)

@@ -11,6 +11,10 @@ Checks
 2. Every ``--flag`` registered by ``add_argument`` in
    src/repro/launch/serve.py appears verbatim in README.md — the README
    is the flag reference of record, so a new flag without docs fails CI.
+3. Every ``choices=`` value of those flags appears in README.md too: an
+   enum flag (``--restore {journal,snapshot}``, ``--shed-policy``, ...)
+   is only documented when its MODES are — a new mode without docs
+   fails CI just like a new flag.
 
 Run: python scripts/check_docs.py   (from anywhere; paths resolve
 relative to the repo root, which is this script's parent directory).
@@ -54,27 +58,50 @@ def check_links() -> list[str]:
     return errors
 
 
-def serve_flags() -> list[str]:
-    """All --flags registered in serve.py, via the ast (no jax import)."""
+def serve_flags() -> list[tuple[str, list[str]]]:
+    """(--flag, [choices]) pairs registered in serve.py, via the ast
+    (no jax import); choices is empty for non-enum flags."""
     tree = ast.parse((REPO / "src/repro/launch/serve.py").read_text())
     flags = []
     for node in ast.walk(tree):
         if (isinstance(node, ast.Call)
                 and isinstance(node.func, ast.Attribute)
                 and node.func.attr == "add_argument"):
+            name = None
             for arg in node.args:
                 if (isinstance(arg, ast.Constant)
                         and isinstance(arg.value, str)
                         and arg.value.startswith("--")):
-                    flags.append(arg.value)
+                    name = arg.value
+            if name is None:
+                continue
+            choices = []
+            for kw in node.keywords:
+                if (kw.arg == "choices" and
+                        isinstance(kw.value, (ast.List, ast.Tuple))):
+                    choices = [c.value for c in kw.value.elts
+                               if isinstance(c, ast.Constant)
+                               and isinstance(c.value, str)]
+            flags.append((name, choices))
     return flags
 
 
 def check_flag_reference() -> list[str]:
     readme = (REPO / "README.md").read_text()
-    missing = [f for f in serve_flags() if f not in readme]
-    return [f"README.md: serve.py flag {f} missing from the flag reference"
-            for f in missing]
+    errors = []
+    for flag, choices in serve_flags():
+        if flag not in readme:
+            errors.append(f"README.md: serve.py flag {flag} missing from "
+                          "the flag reference")
+            continue
+        for c in choices:
+            # word-boundary match: a mode named "block" must appear as
+            # the word itself, not buried inside "block-steps"
+            if not re.search(rf"(?<![\w-])`?{re.escape(c)}`?(?![\w-])",
+                             readme):
+                errors.append(f"README.md: serve.py flag {flag} choice "
+                              f"{c!r} missing from the flag reference")
+    return errors
 
 
 def main() -> int:

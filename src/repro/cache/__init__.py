@@ -13,7 +13,8 @@
     the right layout for SWA).
 """
 from repro.cache.base import (DenseCache, KernelView, KVCache, KV_LEVELS,
-                              RingCache, dequantize_kv, quantize_kv)
+                              LAYOUT_REGISTRY, RingCache, dequantize_kv,
+                              quantize_kv)
 from repro.cache.paged import (PagedCache, PrefixEntry, PrefixStore,
                                copy_pages, set_table_row,
                                splice_dense_into_pages)
@@ -43,5 +44,5 @@ __all__ = [
     "KVCache", "KernelView", "DenseCache", "RingCache", "PagedCache",
     "PrefixStore", "PrefixEntry", "make_cache", "quantize_kv",
     "dequantize_kv", "copy_pages", "set_table_row",
-    "splice_dense_into_pages", "KV_LEVELS", "LAYOUTS",
+    "splice_dense_into_pages", "KV_LEVELS", "LAYOUTS", "LAYOUT_REGISTRY",
 ]

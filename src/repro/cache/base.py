@@ -43,6 +43,12 @@ from typing import ClassVar, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# layout name -> concrete KVCache subclass, filled by __init_subclass__;
+# ``KVCache.from_state_dict`` dispatches restores through it (import
+# repro.cache — not this module — to guarantee every layout is registered)
+LAYOUT_REGISTRY: dict = {}
 
 # int8 KV cache uses the symmetric signed-8-bit grid (paper eq. 4); the
 # per-head dequant scale T/127 is frozen at finalize_calibration
@@ -103,6 +109,12 @@ class KVCache(abc.ABC):
     """
 
     layout: ClassVar[str] = "abstract"
+
+    def __init_subclass__(cls, **kw):
+        super().__init_subclass__(**kw)
+        layout = cls.__dict__.get("layout")
+        if layout is not None and layout != "abstract":
+            LAYOUT_REGISTRY[layout] = cls
 
     # -- static structure --------------------------------------------------
     @property
@@ -256,6 +268,58 @@ class KVCache(abc.ABC):
         kw = dict(zip(cls._child_names(), children))
         kw.update(zip(cls._static, aux))
         return cls(**kw)
+
+    # -- durable serving (snapshot/restore) --------------------------------
+    def state_dict(self) -> dict:
+        """Host-side serializable snapshot of this cache: the layout name,
+        the static aux fields, and every array child as a numpy array.
+        Round-trips through ``from_state_dict`` bit-exactly — the
+        snapshot-recovery half of the durability story (the journal-replay
+        half never saves device state at all: FAT's frozen thresholds make
+        the int8 cache recomputable from the token sequence)."""
+        return {
+            "layout": type(self).layout,
+            "static": {s: getattr(self, s) for s in self._static},
+            "arrays": {n: np.asarray(jax.device_get(getattr(self, n)))
+                       for n in self._child_names()},
+        }
+
+    @staticmethod
+    def from_state_dict(sd: dict) -> "KVCache":
+        """Rebuild a cache from a ``state_dict`` (possibly round-tripped
+        through ``checkpoint.manager.CheckpointManager``, which boxes
+        scalars as 0-d arrays — coerced back here)."""
+        layout = _unbox(sd["layout"])
+        cls = LAYOUT_REGISTRY.get(layout)
+        if cls is None:
+            raise ValueError(
+                f"unknown cache layout {layout!r} in state dict "
+                f"(registered: {sorted(LAYOUT_REGISTRY)})")
+        static = {k: _unbox(v) for k, v in sd["static"].items()}
+        missing = set(cls._static) - set(static)
+        if missing:
+            raise ValueError(
+                f"{layout} cache state dict missing static field(s) "
+                f"{sorted(missing)}")
+        arrays = {k: jnp.asarray(v) for k, v in sd["arrays"].items()}
+        want = set(cls._child_names())
+        if set(arrays) != want:
+            raise ValueError(
+                f"{layout} cache state dict arrays mismatch: got "
+                f"{sorted(arrays)}, want {sorted(want)}")
+        return cls(**arrays, **static)
+
+
+def _unbox(v):
+    """Undo the 0-d numpy boxing a npz round-trip applies to python
+    scalars/strings (CheckpointManager flattens every leaf to an array)."""
+    if isinstance(v, np.ndarray) and v.ndim == 0:
+        v = v.item()
+    if isinstance(v, np.generic):
+        v = v.item()
+    if isinstance(v, (bytes, np.bytes_)):
+        v = v.decode()
+    return v
 
 
 def _zeros_kv(batch, seq, n_kv, head_dim, dtype, quantized):

@@ -381,3 +381,57 @@ class PrefixStore:
 
     def register(self, key: tuple, entry: PrefixEntry):
         self._entries[key] = {"entry": entry, "users": set()}
+
+    # -- durable serving (snapshot/restore) --------------------------------
+    def state_dict(self) -> dict:
+        """Serializable snapshot: free list, counters, and every entry —
+        including slot refcounts (``users``) and the stored last-position
+        logits (admission samples t0 from them, so they must survive a
+        restore bit-exactly).  Entry order is preserved (it IS the LRU
+        order).  Everything is JSON-compatible except the logits arrays,
+        which stay numpy (the scheduler routes them through the
+        checkpoint's array tree)."""
+        return {
+            "page_size": self.page_size,
+            "free": [int(p) for p in self._free],
+            "counters": {"hits": self.hits, "misses": self.misses,
+                         "shared_tokens": self.shared_tokens,
+                         "evictions": self.evictions,
+                         "exhausted": self.exhausted},
+            "entries": [
+                {"key": [int(t) for t in key],
+                 "pages": [int(p) for p in d["entry"].pages],
+                 "tail_page": (None if d["entry"].tail_page is None
+                               else int(d["entry"].tail_page)),
+                 "length": int(d["entry"].length),
+                 "users": sorted(int(s) for s in d["users"]),
+                 "logits": np.asarray(d["entry"].logits)}
+                for key, d in self._entries.items()
+            ],
+        }
+
+    def load_state_dict(self, sd: dict):
+        """Restore a ``state_dict`` in place (LRU order preserved).  The
+        pool pages the entries point at are restored separately — by the
+        scheduler's cache restore — so pointers and contents stay
+        consistent."""
+        if int(sd["page_size"]) != self.page_size:
+            raise ValueError(
+                f"prefix store page_size mismatch: snapshot has "
+                f"{sd['page_size']}, store has {self.page_size}")
+        self._free = [int(p) for p in sd["free"]]
+        c = sd["counters"]
+        self.hits = int(c["hits"])
+        self.misses = int(c["misses"])
+        self.shared_tokens = int(c["shared_tokens"])
+        self.evictions = int(c["evictions"])
+        self.exhausted = int(c["exhausted"])
+        self._entries = OrderedDict()
+        for e in sd["entries"]:
+            entry = PrefixEntry(
+                pages=tuple(int(p) for p in e["pages"]),
+                tail_page=(None if e["tail_page"] is None
+                           else int(e["tail_page"])),
+                length=int(e["length"]), logits=np.asarray(e["logits"]))
+            self._entries[tuple(int(t) for t in e["key"])] = {
+                "entry": entry, "users": set(int(s) for s in e["users"])}

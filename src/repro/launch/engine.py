@@ -87,7 +87,9 @@ class Engine:
                  seed: int = 0, decode_strategy: Optional[str] = None,
                  spec_k: int = 4, spec_ngram: int = 2,
                  queue_cap: Optional[int] = None, shed_policy: str = "shed",
-                 fault_plan=None):
+                 fault_plan=None, journal: Optional[str] = None,
+                 snapshot_every: int = 0,
+                 snapshot_dir: Optional[str] = None):
         """``decode_strategy`` picks the decode-loop scheme
         (strategies.STRATEGIES: "greedy" | "sample" | "speculative");
         None auto-selects from ``temperature`` (the historical behavior).
@@ -100,7 +102,15 @@ class Engine:
         ("shed" | "block") picks the overload behavior; ``fault_plan``
         (a :class:`repro.launch.faults.FaultPlan`, or anything its
         ``parse`` accepts) injects deterministic faults for chaos testing
-        and the degraded-traffic benchmark."""
+        and the degraded-traffic benchmark.
+
+        Durability knobs (see launch/journal.py and the scheduler's
+        recovery methods): ``journal`` is the write-ahead request
+        journal path (enables ``recover()`` after a crash);
+        ``snapshot_every`` > 0 writes a full state snapshot every N
+        decode-block boundaries through a ``CheckpointManager`` at
+        ``snapshot_dir`` (which alone enables on-demand
+        ``save_state``/``load_state``)."""
         from repro.cache import LAYOUTS
         from repro.launch import strategies as SG
         from repro.launch.faults import FaultPlan
@@ -132,6 +142,15 @@ class Engine:
         self.spec_k, self.spec_ngram = spec_k, spec_ngram
         self.queue_cap, self.shed_policy = queue_cap, shed_policy
         self.fault_plan = fault_plan
+        if snapshot_every < 0:
+            raise ValueError(
+                f"snapshot_every must be >= 0, got {snapshot_every}")
+        if snapshot_every > 0 and snapshot_dir is None:
+            raise ValueError(
+                "snapshot_every > 0 needs a snapshot_dir to write to")
+        self.journal = journal
+        self.snapshot_every = snapshot_every
+        self.snapshot_dir = snapshot_dir
         self._scheduler = None
         self._scheduler_key = None
 
@@ -356,7 +375,8 @@ class Engine:
                prefix_pages, self.cache_layout, self.page_size,
                self.prefill_chunk, self.temperature, self.top_p, self.seed,
                self.decode_strategy, self.spec_k, self.spec_ngram,
-               self.queue_cap, self.shed_policy, self.fault_plan)
+               self.queue_cap, self.shed_policy, self.fault_plan,
+               self.journal, self.snapshot_every, self.snapshot_dir)
         if self._scheduler is None or self._scheduler_key != key:
             layout = ("paged" if self.cache_layout == "paged" else "dense")
             self._scheduler = SlotScheduler(
@@ -369,7 +389,9 @@ class Engine:
                 top_p=self.top_p, eos_id=eos_id, seed=self.seed,
                 strategy=self.decode_strategy, spec_k=self.spec_k,
                 spec_ngram=self.spec_ngram, queue_cap=self.queue_cap,
-                shed_policy=self.shed_policy, fault_plan=self.fault_plan)
+                shed_policy=self.shed_policy, fault_plan=self.fault_plan,
+                journal=self.journal, snapshot_every=self.snapshot_every,
+                snapshot_dir=self.snapshot_dir)
             self._scheduler_key = key
         return self._scheduler
 
@@ -396,12 +418,52 @@ class Engine:
     def health_report(self) -> dict:
         """Engine-level outcome aggregation for the continuous-batching
         path: the scheduler's ``health_stats()`` (terminal statuses,
-        retirement causes, preemption/readmit/shed/deadline counters),
+        retirement causes, preemption/readmit/shed/deadline counters,
+        and the durability counters ``recoveries``/``replayed_tokens``),
         accumulated across ``generate`` calls.  Empty before the first
         ``generate``."""
         if self._scheduler is None:
             return {}
         return self._scheduler.health_stats()
+
+    # -- durability (see launch/journal.py and scheduler recovery) ---------
+    def save_state(self) -> str:
+        """Snapshot the live scheduler's full serving state through the
+        ``snapshot_dir`` checkpoint manager; returns the checkpoint
+        path.  Requires a scheduler (a prior ``generate``/
+        ``make_scheduler``) built with ``snapshot_dir`` set."""
+        if self._scheduler is None:
+            raise ValueError(
+                "no scheduler to snapshot — call generate()/"
+                "make_scheduler() first")
+        return self._scheduler.save_state()
+
+    def load_state(self, **scheduler_kw) -> int:
+        """Restore the newest snapshot into a scheduler built with
+        ``scheduler_kw`` (the same ``make_scheduler`` knobs the crashed
+        run used — knob mismatches raise).  Returns the restored
+        decode-block counter; follow with
+        ``make_scheduler(...).resume_run()`` (or just ``resume()``
+        below) to drive the run to completion."""
+        return self.make_scheduler(**scheduler_kw).load_state()
+
+    def recover(self, *, max_blocks: Optional[int] = None,
+                **scheduler_kw) -> list:
+        """Journal-replay crash recovery end to end: build the scheduler
+        (same knobs as the crashed run; the engine must have been
+        constructed with the crashed run's ``journal`` path) and drive
+        its :meth:`SlotScheduler.recover` to completion.  Returns ALL
+        completions of the logical run."""
+        return self.make_scheduler(**scheduler_kw).recover(
+            max_blocks=max_blocks)
+
+    def resume(self, *, max_blocks: Optional[int] = None,
+               **scheduler_kw) -> list:
+        """Snapshot-mode recovery end to end: ``load_state`` then drive
+        the restored run to completion."""
+        sched = self.make_scheduler(**scheduler_kw)
+        sched.load_state()
+        return sched.resume_run(max_blocks=max_blocks)
 
     # -- single prompt -----------------------------------------------------
     def generate_one(self, tokens, gen: int, **kw) -> GenerationResult:

@@ -31,6 +31,15 @@ Fault classes (one knob per degraded path):
 ``exhaust_prefix``  every ``PrefixStore.reserve`` is treated as
                     pool-exhausted, forcing the fall-back-to-private-
                     pages path on every paged admission.
+``crash``           decode-block boundaries (1-based: ``(k,)`` crashes
+                    after the k-th completed block) at which the
+                    scheduler raises :class:`SimulatedCrash` — AFTER its
+                    write-ahead journal records for the boundary are
+                    flushed, so crash recovery (``launch/journal.py``,
+                    ``SlotScheduler.recover``) is driveable
+                    deterministically at any boundary.  Unlike every
+                    other fault class, a crash ESCAPES ``run()``: it
+                    simulates process death, not a request-level fault.
 ``ms_per_block``    > 0 switches the scheduler to a VIRTUAL clock that
                     advances exactly this many milliseconds per decode
                     block — deadlines, arrivals, and shedding become
@@ -52,6 +61,13 @@ import os
 class InjectedFault(RuntimeError):
     """Raised by the scheduler at an injection point; caught by the
     per-request isolation layer like any real admission failure."""
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised at a ``crash`` decode-block boundary, after the journal
+    records for that boundary are durable.  Deliberately NOT caught by
+    the scheduler: it stands in for process death, so recovery must run
+    through a fresh scheduler (``SlotScheduler.recover``)."""
 
 
 def _int_tuple(xs):
@@ -81,6 +97,7 @@ class FaultPlan:
     nan_decode: tuple = ()      # ((rid, step), ...): decode logits -> NaN
     preempt: tuple = ()         # ((block, rid), ...): forced preemption
     exhaust_prefix: bool = False
+    crash: tuple = ()           # block boundaries: simulated process crash
     ms_per_block: float = 0.0   # > 0: virtual clock, ms per decode block
 
     def __post_init__(self):
@@ -92,10 +109,30 @@ class FaultPlan:
         object.__setattr__(self, "preempt", _pair_tuple(self.preempt))
         object.__setattr__(self, "exhaust_prefix",
                            bool(self.exhaust_prefix))
+        object.__setattr__(self, "crash", _int_tuple(self.crash))
         object.__setattr__(self, "ms_per_block",
                            float(self.ms_per_block))
         if self.ms_per_block < 0:
             raise ValueError("ms_per_block must be >= 0")
+        # one NaN step per rid: ``nan_decode_step`` returns a single step,
+        # so a duplicate rid would silently lose all but the first match
+        rids = [r for r, _ in self.nan_decode]
+        dup = sorted({r for r in rids if rids.count(r) > 1})
+        if dup:
+            raise ValueError(
+                f"nan_decode schedules multiple steps for rid(s) {dup}; "
+                "each rid may turn NaN at exactly one decode step")
+        # duplicate (block, rid) preemptions would double-count the same
+        # eviction (the pair either fires once or is a spec mistake)
+        if len(set(self.preempt)) != len(self.preempt):
+            dup = sorted({p for p in self.preempt
+                          if self.preempt.count(p) > 1})
+            raise ValueError(
+                f"preempt lists duplicate (block, rid) pair(s) {dup}")
+        if any(b < 1 for b in self.crash):
+            raise ValueError(
+                "crash boundaries are 1-based (after the k-th completed "
+                f"decode block), got {self.crash}")
 
     # -- queries (the scheduler's injection points) -----------------------
     def rejects(self, rid: int) -> bool:
@@ -116,6 +153,12 @@ class FaultPlan:
         """Request ids force-preempted at decode-block boundary
         ``block``."""
         return tuple(rid for blk, rid in self.preempt if blk == int(block))
+
+    def crash_at(self, block: int) -> bool:
+        """Whether the scheduler crashes after ``block`` completed decode
+        blocks (checked once per boundary; a recovered run resumes past
+        the boundary, so the same crash never re-fires)."""
+        return int(block) in self.crash
 
     @property
     def empty(self) -> bool:
@@ -164,6 +207,8 @@ class FaultPlan:
                                   for b, r in self.preempt))
         if self.exhaust_prefix:
             bits.append("prefix pool exhausted")
+        if self.crash:
+            bits.append(f"crash at block {list(self.crash)}")
         if self.ms_per_block:
             bits.append(f"virtual clock {self.ms_per_block:g} ms/block")
         return "; ".join(bits) if bits else "no faults"

@@ -93,6 +93,7 @@ requests costs masked lanes within a block, not recompiles.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from collections import deque
 from typing import Iterable, Optional, Sequence
@@ -103,10 +104,14 @@ import numpy as np
 
 from repro.cache import (KVCache, PrefixEntry, PrefixStore, copy_pages,
                          set_table_row, splice_dense_into_pages)
+from repro.checkpoint.manager import CheckpointManager
 from repro.core import api as A
 from repro.launch import steps as ST
 from repro.launch import strategies as SG
-from repro.launch.faults import FaultPlan, InjectedFault
+from repro.launch.faults import FaultPlan, InjectedFault, SimulatedCrash
+from repro.launch.journal import (RequestJournal, completion_from_dict,
+                                  completion_to_dict, request_from_dict,
+                                  request_to_dict)
 
 
 @dataclasses.dataclass
@@ -149,12 +154,35 @@ class _Parked:
     out: list                   # generated so far (incl. pending token)
     key: np.ndarray             # (2,) uint32 per-request key carry
     steps: int                  # decode scan steps consumed so far
+    recovered: bool = False     # parked by crash recovery, not preemption
 
 
 _STATUSES = ("ok", "rejected", "timeout", "preempted", "shed", "failed")
 _HEALTH_KEYS = _STATUSES + (
     "eos", "budget", "capacity",            # ok retirement causes
-    "preemptions", "readmits", "deadline_misses", "prefix_exhausted")
+    "preemptions", "readmits", "deadline_misses", "prefix_exhausted",
+    "recoveries", "replayed_tokens")        # durability counters
+
+
+@dataclasses.dataclass
+class _RunState:
+    """Everything ``run()`` used to keep in closure-local variables,
+    hoisted into one object so a decode-block boundary can be snapshotted
+    (``save_state``) and a crashed run can be rebuilt (``recover``)
+    without the driver loop changing shape."""
+    pos: np.ndarray             # (B,) int32 absolute positions
+    active: np.ndarray          # (B,) bool
+    last_tok: np.ndarray        # (B,) int32 pending token per slot
+    slot_req: list              # per-slot Request (None = free)
+    slot_out: list              # per-slot generated tokens (incl. pending)
+    slot_steps: list            # per-slot decode scan steps consumed
+    done: list                  # Completions, finish order
+    n_blocks: int               # committed decode-block boundaries
+    arrivals: deque             # not-yet-arrived Requests (by arrive_ms)
+    pending: deque              # arrived, waiting for a slot
+    readmit: deque              # _Parked preemption victims
+    vclock: float               # virtual ms when plan.ms_per_block > 0
+    t_start: float              # wall-clock run origin
 
 
 def _cache_map(fn, *trees):
@@ -223,7 +251,22 @@ class SlotScheduler:
     shed_policy : "shed" (default) or "block" — see ``queue_cap``.
     fault_plan : a :class:`repro.launch.faults.FaultPlan` injecting
         deterministic faults (and/or the virtual clock); None = no
-        faults, wall clock.
+        faults, wall clock.  ``crash=(k, ...)`` raises
+        :class:`repro.launch.faults.SimulatedCrash` after the k-th
+        decode-block boundary commits — the recovery tests' crash point.
+    journal : a :class:`repro.launch.journal.RequestJournal` (or a path
+        string) enabling the write-ahead request journal: admissions,
+        per-boundary progress, and retirements are journaled, and
+        ``recover()`` on a FRESH scheduler replays the journal to
+        continue a crashed run bit-identically (journal-replay mode —
+        no device state is ever saved).
+    snapshot_every : > 0 writes a full state snapshot (``save_state``)
+        every N decode-block boundaries through a
+        ``repro.checkpoint.CheckpointManager`` at ``snapshot_dir``
+        (full-snapshot mode); requires ``snapshot_dir``.
+    snapshot_dir : checkpoint directory for snapshots; setting it alone
+        enables on-demand ``save_state()``/``load_state()`` without the
+        periodic cadence.
     """
 
     def __init__(self, model, cfg, policy: A.QuantPolicy, serve_params,
@@ -236,7 +279,9 @@ class SlotScheduler:
                  eos_id: int = -1, seed: int = 0,
                  strategy=None, spec_k: int = 4, spec_ngram: int = 2,
                  queue_cap: int | None = None, shed_policy: str = "shed",
-                 fault_plan: FaultPlan | None = None):
+                 fault_plan: FaultPlan | None = None,
+                 journal=None, snapshot_every: int = 0,
+                 snapshot_dir: str | None = None):
         kinds = {cfg.layer_kind(i) for i in range(cfg.n_layers)}
         wins = {cfg.attn_window(i) for i in range(cfg.n_layers)}
         if kinds - {"attn", "attn_local"} or cfg.modality != "text":
@@ -259,6 +304,12 @@ class SlotScheduler:
                 f"{shed_policy!r}")
         if queue_cap is not None and queue_cap < 1:
             raise ValueError(f"queue_cap must be >= 1, got {queue_cap}")
+        if snapshot_every < 0:
+            raise ValueError(
+                f"snapshot_every must be >= 0, got {snapshot_every}")
+        if snapshot_every > 0 and snapshot_dir is None:
+            raise ValueError(
+                "snapshot_every > 0 needs a snapshot_dir to write to")
         self.model, self.cfg = model, cfg
         self.policy, self.mode = policy, mode
         self.serve_params, self.qparams = serve_params, qparams
@@ -275,6 +326,17 @@ class SlotScheduler:
         self.queue_cap = queue_cap
         self.shed_policy = shed_policy
         self._plan = fault_plan if fault_plan is not None else FaultPlan()
+        self._seed = int(seed)
+        # durability plumbing: write-ahead journal and/or full snapshots
+        if isinstance(journal, (str, os.PathLike)):
+            journal = RequestJournal(journal)
+        self._journal: RequestJournal | None = journal
+        self._snapshot_every = int(snapshot_every)
+        self._snap_mgr = (CheckpointManager(snapshot_dir, keep=3)
+                          if snapshot_dir is not None else None)
+        self._snap_step = 0         # monotonic snapshot counter
+        self._rs: _RunState | None = None   # live run state (None = idle)
+        self._epoch = 0             # journal epoch counter
         if isinstance(strategy, SG.DecodeStrategy):
             self._strategy = strategy
         else:
@@ -419,13 +481,29 @@ class SlotScheduler:
         return self._prefix.stats() if self._prefix is not None else {}
 
     def health_stats(self) -> dict:
-        """Resilience counters, accumulated across ``run()``s: terminal
-        statuses (``ok``/``rejected``/``timeout``/``preempted``/``shed``/
-        ``failed``), ok retirement causes (``eos``/``budget``/
-        ``capacity``), and events (``preemptions``, ``readmits``,
-        ``deadline_misses``, ``prefix_exhausted`` — prefix registrations
-        skipped because the shared pool had no evictable pages)."""
+        """Resilience counters: terminal statuses (``ok``/``rejected``/
+        ``timeout``/``preempted``/``shed``/``failed``), ok retirement
+        causes (``eos``/``budget``/``capacity``), events (``preemptions``,
+        ``readmits``, ``deadline_misses``, ``prefix_exhausted`` — prefix
+        registrations skipped because the shared pool had no evictable
+        pages), and durability counters (``recoveries`` — completed
+        ``recover()`` calls; ``replayed_tokens`` — prompt+generated
+        tokens re-prefilled through the ``resume`` executable during
+        journal-replay recovery).
+
+        Semantics are CUMULATIVE over the scheduler's lifetime: counters
+        accumulate across every ``run()``/``recover()`` on this instance
+        and are never reset implicitly (pinned by
+        tests/test_recovery.py).  Call :meth:`reset_health` for a
+        per-window view; snapshot restore (``load_state``) REPLACES the
+        counters with the snapshot's, journal recovery re-derives
+        terminal-status counts from the replayed retirements."""
         return dict(self._health)
+
+    def reset_health(self):
+        """Zero the cumulative ``health_stats`` counters (explicit reset
+        is the only reset — see ``health_stats`` semantics)."""
+        self._health = {k: 0 for k in _HEALTH_KEYS}
 
     def spec_stats(self) -> dict:
         """Speculative-decoding counters (empty dict for one-token
@@ -458,6 +536,45 @@ class SlotScheduler:
         return self._decode_fn(*args)
 
     # -- one serving session ----------------------------------------------
+    def _fresh_rs(self, requests: Iterable[Request]) -> _RunState:
+        B = self.max_slots
+        return _RunState(
+            pos=np.zeros((B,), np.int32), active=np.zeros((B,), bool),
+            last_tok=np.zeros((B,), np.int32), slot_req=[None] * B,
+            slot_out=[[] for _ in range(B)], slot_steps=[0] * B, done=[],
+            n_blocks=0,
+            arrivals=deque(sorted(requests, key=lambda r: r.arrive_ms)),
+            pending=deque(), readmit=deque(), vclock=0.0,
+            t_start=time.monotonic())
+
+    def _knobs(self) -> dict:
+        """The scheduler knobs a recovered run must match for replay to
+        be bit-valid (recorded in journal ``begin`` records and snapshot
+        metadata; checked by ``recover``/``load_state``)."""
+        return {
+            "max_slots": self.max_slots, "prompt_cap": self.prompt_cap,
+            "block_steps": self.block_steps,
+            "cache_layout": self.cache_layout,
+            "page_size": (self.page_size if self.cache_layout == "paged"
+                          else None),
+            "cache_len": self.cache_len,
+            "prefill_chunk": self.prefill_chunk, "mode": self.mode,
+            "temperature": self.temperature, "top_p": self.top_p,
+            "seed": self._seed, "eos_id": self.eos_id,
+            "emit_width": self._emit_w,
+        }
+
+    def _check_knobs(self, knobs: dict):
+        want = self._knobs()
+        got = {k: knobs.get(k) for k in want}
+        bad = {k: (got[k], want[k]) for k in want if got[k] != want[k]}
+        if bad:
+            raise ValueError(
+                "recovery scheduler knobs do not match the crashed run's "
+                "(replay would not be bit-valid): " +
+                ", ".join(f"{k}: saved={s!r} vs live={l!r}"
+                          for k, (s, l) in sorted(bad.items())))
+
     def run(self, requests: Iterable[Request],
             max_blocks: Optional[int] = None) -> list[Completion]:
         """Serve ``requests`` to completion through the slot batch.
@@ -474,43 +591,66 @@ class SlotScheduler:
         Returns completions in finish order.  ``max_blocks`` bounds the
         decode blocks (None = drain fully); parked preemption victims
         still waiting at the cut retire as 'preempted'.
+
+        With a ``journal``, the run is write-ahead journaled (a new epoch
+        per run); a ``FaultPlan.crash`` boundary raises
+        :class:`~repro.launch.faults.SimulatedCrash` out of this method —
+        recover on a FRESH scheduler via :meth:`recover` (journal replay)
+        or :meth:`load_state` + :meth:`resume_run` (snapshot).
         """
+        rs = self._fresh_rs(requests)
+        self._rs = rs
+        if self._journal is not None:
+            self._epoch = max(self._epoch,
+                              self._journal.last_epoch()) + 1
+            self._journal.begin(self._epoch, self._knobs())
+            for req in rs.arrivals:
+                self._journal.enqueue(req)
+        return self._drive(max_blocks)
+
+    def resume_run(self,
+                   max_blocks: Optional[int] = None) -> list[Completion]:
+        """Continue driving a restored run state (``load_state`` or a
+        prior interrupted drive) to completion.  Returns ALL completions
+        of the logical run — the pre-crash ones restored with the state
+        plus everything finished after.  ``max_blocks`` counts TOTAL
+        decode blocks of the logical run (it compares against the
+        restored block counter)."""
+        if self._rs is None:
+            raise ValueError(
+                "no run state to resume (call load_state(), recover(), "
+                "or run() first)")
+        return self._drive(max_blocks)
+
+    def _drive(self, max_blocks: Optional[int] = None) -> list[Completion]:
+        """The scheduler host loop over ``self._rs`` (see ``run``)."""
         plan = self._plan
         B = self.max_slots
-        pos = np.zeros((B,), np.int32)
-        active = np.zeros((B,), bool)
-        last_tok = np.zeros((B,), np.int32)
-        slot_req: list[Optional[Request]] = [None] * B
-        slot_out: list[list] = [[] for _ in range(B)]
-        slot_steps = [0] * B        # decode scan steps per resident
-        done: list[Completion] = []
-        n_blocks = 0
-        arrivals = deque(sorted(requests, key=lambda r: r.arrive_ms))
-        pending: deque[Request] = deque()
-        readmit: deque[_Parked] = deque()
-        t_start = time.monotonic()
-        vclock = 0.0                # virtual ms when plan.ms_per_block > 0
+        rs = self._rs
 
         def now_ms() -> float:
             if plan.ms_per_block > 0:
-                return vclock
-            return (time.monotonic() - t_start) * 1e3
+                return rs.vclock
+            return (time.monotonic() - rs.t_start) * 1e3
 
         def finish(req: Request, out: list, why: str, status: str = "ok",
                    reason: Optional[str] = None):
-            done.append(Completion(req.rid, len(req.tokens), out, why,
-                                   status=status, reason=reason))
+            c = Completion(req.rid, len(req.tokens), out, why,
+                           status=status, reason=reason)
+            rs.done.append(c)
             self._health[status] += 1
             if status == "ok":
                 self._health[why] += 1
+            if self._journal is not None:
+                self._journal.retire(c)
 
         def retire(slot: int, why: str, status: str = "ok",
                    reason: Optional[str] = None):
-            req = slot_req[slot]
-            finish(req, slot_out[slot], why, status, reason)
-            slot_req[slot] = None
-            slot_out[slot] = []
-            active[slot] = False
+            req = rs.slot_req[slot]
+            finish(req, rs.slot_out[slot], why, status, reason)
+            rs.slot_req[slot] = None
+            rs.slot_out[slot] = []
+            rs.active[slot] = False
             if self._prefix is not None:
                 self._prefix.release(slot)
 
@@ -521,17 +661,17 @@ class SlotScheduler:
         def resumable(slot: int) -> bool:
             # the parked state (prompt + generated minus the pending
             # token) must fit the resume prefill's buffer
-            return int(pos[slot]) <= self._resume_cap
+            return int(rs.pos[slot]) <= self._resume_cap
 
         def preempt(slot: int):
-            req = slot_req[slot]
-            readmit.append(_Parked(req=req, out=slot_out[slot],
-                                   key=self._slot_keys[slot].copy(),
-                                   steps=slot_steps[slot]))
+            req = rs.slot_req[slot]
+            rs.readmit.append(_Parked(req=req, out=rs.slot_out[slot],
+                                      key=self._slot_keys[slot].copy(),
+                                      steps=rs.slot_steps[slot]))
             self._health["preemptions"] += 1
-            slot_req[slot] = None
-            slot_out[slot] = []
-            active[slot] = False
+            rs.slot_req[slot] = None
+            rs.slot_out[slot] = []
+            rs.active[slot] = False
             if self._prefix is not None:
                 # drop shared-page references and reclaim the table row
                 # onto the slot's private pages before a new resident
@@ -541,13 +681,13 @@ class SlotScheduler:
 
         def reap_deadlines():
             for slot in range(B):
-                req = slot_req[slot]
+                req = rs.slot_req[slot]
                 if req is not None and overdue(req):
                     self._health["deadline_misses"] += 1
                     retire(slot, "timeout", status="timeout",
                            reason=f"deadline {req.deadline_ms:g} ms "
                                   "exceeded while decoding")
-            for q in (pending, readmit):
+            for q in (rs.pending, rs.readmit):
                 kept = []
                 for item in q:
                     req = item.req if isinstance(item, _Parked) else item
@@ -563,17 +703,17 @@ class SlotScheduler:
                 q.extend(kept)
 
         def ingest():
-            while arrivals and arrivals[0].arrive_ms <= now_ms():
+            while rs.arrivals and rs.arrivals[0].arrive_ms <= now_ms():
                 if (self.queue_cap is not None
-                        and len(pending) >= self.queue_cap):
+                        and len(rs.pending) >= self.queue_cap):
                     if self.shed_policy == "shed":
-                        req = arrivals.popleft()
+                        req = rs.arrivals.popleft()
                         finish(req, [], "shed", status="shed",
                                reason=f"admission queue full "
                                       f"(queue_cap={self.queue_cap})")
                         continue
                     break   # "block": arrivals wait upstream
-                pending.append(arrivals.popleft())
+                rs.pending.append(rs.arrivals.popleft())
 
         def next_waiter():
             """Highest-priority waiter; FIFO within a priority, parked
@@ -581,24 +721,24 @@ class SlotScheduler:
             partly spent).  Plain FIFO when every priority is equal —
             the pre-resilience admission order."""
             best = None     # (source, index, priority)
-            for i, p in enumerate(readmit):
+            for i, p in enumerate(rs.readmit):
                 if best is None or p.req.priority > best[2]:
                     best = ("readmit", i, p.req.priority)
-            for i, r in enumerate(pending):
+            for i, r in enumerate(rs.pending):
                 if best is None or r.priority > best[2]:
                     best = ("pending", i, r.priority)
             if best is None:
                 return None
             src, i, _ = best
-            q = readmit if src == "readmit" else pending
+            q = rs.readmit if src == "readmit" else rs.pending
             item = q[i]
             del q[i]
             return item
 
         def force_preempts():
-            for rid in plan.preempts_at(n_blocks):
+            for rid in plan.preempts_at(rs.n_blocks):
                 for slot in range(B):
-                    req = slot_req[slot]
+                    req = rs.slot_req[slot]
                     if (req is not None and req.rid == rid
                             and resumable(slot)):
                         preempt(slot)
@@ -607,19 +747,19 @@ class SlotScheduler:
             """One preemption per boundary: when no slot is free and a
             waiter strictly outranks the lowest-priority resumable
             resident, evict that resident."""
-            if not (pending or readmit):
+            if not (rs.pending or rs.readmit):
                 return
-            if any(slot_req[s] is None for s in range(B)):
+            if any(rs.slot_req[s] is None for s in range(B)):
                 return
             waiter_pri = max(
-                [p.req.priority for p in readmit]
-                + [r.priority for r in pending])
+                [p.req.priority for p in rs.readmit]
+                + [r.priority for r in rs.pending])
             victims = [s for s in range(B)
-                       if slot_req[s] is not None and resumable(s)]
+                       if rs.slot_req[s] is not None and resumable(s)]
             if not victims:
                 return
-            s = min(victims, key=lambda s: (slot_req[s].priority, s))
-            if slot_req[s].priority < waiter_pri:
+            s = min(victims, key=lambda s: (rs.slot_req[s].priority, s))
+            if rs.slot_req[s].priority < waiter_pri:
                 preempt(s)
 
         def seed_host_state(slot: int, req: Request, out: list,
@@ -629,24 +769,25 @@ class SlotScheduler:
                 seq = list(np.asarray(req.tokens, np.int32)) + list(out)
                 self._hist[slot] = 0
                 self._hist[slot, :len(seq)] = np.asarray(seq, np.int32)
-            slot_req[slot] = req
-            slot_out[slot] = out
-            pos[slot] = L + len(out) - 1
-            last_tok[slot] = int(out[-1])
-            active[slot] = True
-            slot_steps[slot] = steps
+            rs.slot_req[slot] = req
+            rs.slot_out[slot] = out
+            rs.pos[slot] = L + len(out) - 1
+            rs.last_tok[slot] = int(out[-1])
+            rs.active[slot] = True
+            rs.slot_steps[slot] = steps
             self._slot_keys[slot] = key
 
         def admit_free_slots():
             for slot in range(B):
-                if slot_req[slot] is not None:
+                if rs.slot_req[slot] is not None:
                     continue
                 while True:
                     item = next_waiter()
                     if item is None:
                         return
                     if isinstance(item, _Parked):
-                        self._readmit(slot, item.req, item.out)
+                        self._readmit(slot, item.req, item.out,
+                                      recovered=item.recovered)
                         seed_host_state(slot, item.req, item.out,
                                         item.key, item.steps)
                         break
@@ -672,21 +813,22 @@ class SlotScheduler:
                         retire(slot, "budget")
                     break
 
-        while arrivals or pending or readmit or active.any():
+        while rs.arrivals or rs.pending or rs.readmit or rs.active.any():
             reap_deadlines()
             ingest()
             force_preempts()
             priority_preempt()
             admit_free_slots()
-            if not active.any():
-                if arrivals and not pending and not readmit:
+            if not rs.active.any():
+                if rs.arrivals and not rs.pending and not rs.readmit:
                     # nothing runnable until the next arrival: advance
                     # the clock to it instead of spinning
                     if plan.ms_per_block > 0:
-                        vclock = max(vclock, arrivals[0].arrive_ms)
+                        rs.vclock = max(rs.vclock,
+                                        rs.arrivals[0].arrive_ms)
                     else:
                         time.sleep(min(
-                            1e-3, max(0.0, (arrivals[0].arrive_ms
+                            1e-3, max(0.0, (rs.arrivals[0].arrive_ms
                                             - now_ms()) * 1e-3)))
                 continue
 
@@ -695,19 +837,21 @@ class SlotScheduler:
             # decode fault fires (-1 = none) — data, not shape
             nan_step = np.full((B,), -1, np.int32)
             for slot in range(B):
-                req = slot_req[slot]
-                if req is None or not active[slot]:
+                req = rs.slot_req[slot]
+                if req is None or not rs.active[slot]:
                     continue
                 step = plan.nan_decode_step(req.rid)
                 if step is not None:
-                    rel = step - slot_steps[slot]
+                    rel = step - rs.slot_steps[slot]
                     if 0 <= rel < self.block_steps:
                         nan_step[slot] = rel
-            ran = active.copy()
+            ran = rs.active.copy()
             toks, emitted, self._cache, pos_d, active_d, keys_d, hist, \
                 bad_d = self._decode(
-                    self.serve_params, self.qparams, jnp.asarray(last_tok),
-                    self._cache, jnp.asarray(pos), jnp.asarray(active),
+                    self.serve_params, self.qparams,
+                    jnp.asarray(rs.last_tok),
+                    self._cache, jnp.asarray(rs.pos),
+                    jnp.asarray(rs.active),
                     jnp.asarray(self._slot_keys), jnp.asarray(self._hist),
                     jnp.asarray(nan_step))
             toks = np.asarray(toks)
@@ -721,7 +865,7 @@ class SlotScheduler:
             self._slot_keys = np.array(keys_d)
             for slot in range(B):
                 if ran[slot]:
-                    slot_steps[slot] += self.block_steps
+                    rs.slot_steps[slot] += self.block_steps
             if self._emit_w > 1:
                 # a window with any emission ran a live verify pass
                 win = emitted.reshape(B, self.block_steps, self._emit_w)
@@ -733,27 +877,28 @@ class SlotScheduler:
             # partial accept leaves un-emitted tail lanes, then the next
             # window emits again) — skip gaps instead of stopping at one
             for slot in range(B):
-                req = slot_req[slot]
-                if req is None or not active[slot]:
+                req = rs.slot_req[slot]
+                if req is None or not rs.active[slot]:
                     continue
                 for i in range(self.block_steps * self._emit_w):
-                    if len(slot_out[slot]) >= req.max_gen:
+                    if len(rs.slot_out[slot]) >= req.max_gen:
                         break
                     if not emitted[slot, i]:
                         continue
-                    slot_out[slot].append(int(toks[slot, i]))
-                pos[slot] = pos_new[slot]
-                last_tok[slot] = (slot_out[slot][-1]
-                                  if slot_out[slot] else last_tok[slot])
+                    rs.slot_out[slot].append(int(toks[slot, i]))
+                rs.pos[slot] = pos_new[slot]
+                rs.last_tok[slot] = (rs.slot_out[slot][-1]
+                                     if rs.slot_out[slot]
+                                     else rs.last_tok[slot])
                 # finish reason from what was actually COLLECTED: an EOS
                 # beyond the budget cut was never part of the output, so
                 # that request finished by budget, not eos — and a
                 # device-side freeze without a collected EOS and with
                 # budget to spare can only be the NaN guard (flagged in
                 # ``bad``) or the capacity guard
-                hit_eos = (self.eos_id >= 0 and bool(slot_out[slot])
-                           and slot_out[slot][-1] == self.eos_id)
-                budget_done = len(slot_out[slot]) >= req.max_gen
+                hit_eos = (self.eos_id >= 0 and bool(rs.slot_out[slot])
+                           and rs.slot_out[slot][-1] == self.eos_id)
+                budget_done = len(rs.slot_out[slot]) >= req.max_gen
                 if hit_eos:
                     retire(slot, "eos")
                 elif budget_done:
@@ -764,16 +909,18 @@ class SlotScheduler:
                 elif not active_new[slot]:
                     retire(slot, "capacity")
                 else:
-                    active[slot] = active_new[slot]
-            n_blocks += 1
+                    rs.active[slot] = active_new[slot]
+            rs.n_blocks += 1
             if plan.ms_per_block > 0:
-                vclock += plan.ms_per_block
-            if max_blocks is not None and n_blocks >= max_blocks:
+                rs.vclock += plan.ms_per_block
+            # -- boundary commit: WAL flush, snapshot cadence, crash ------
+            self._boundary_commit(rs, now_ms())
+            if max_blocks is not None and rs.n_blocks >= max_blocks:
                 break
         # parked victims the run never got back to are terminal too —
         # with their generated-so-far tokens, so nothing is silently lost
-        while readmit:
-            p = readmit.popleft()
+        while rs.readmit:
+            p = rs.readmit.popleft()
             finish(p.req, p.out, "preempted", status="preempted",
                    reason="preempted; run ended before re-admission")
         # no resident remains (or the run was cut): drop any prefix-store
@@ -781,7 +928,273 @@ class SlotScheduler:
         if self._prefix is not None:
             for slot in range(B):
                 self._prefix.release(slot)
-        return done
+        return rs.done
+
+    def _boundary_commit(self, rs: _RunState, clock_ms: float):
+        """Everything that makes a decode-block boundary DURABLE, in the
+        WAL order the journal module documents: retire records were
+        already flushed as they happened, so write progress (absolute
+        host state per in-flight request — residents then parked), then
+        the ``block`` marker, then the optional periodic snapshot, and
+        only THEN fire a scheduled simulated crash — a crash can never
+        observe a boundary whose records are not durable."""
+        if self._journal is not None:
+            for slot in range(self.max_slots):
+                req = rs.slot_req[slot]
+                if req is not None:
+                    self._journal.progress(
+                        req.rid, rs.slot_out[slot],
+                        self._slot_keys[slot], rs.slot_steps[slot])
+            for p in rs.readmit:
+                self._journal.progress(p.req.rid, p.out, p.key, p.steps)
+            self._journal.block(rs.n_blocks, clock_ms)
+        if (self._snap_mgr is not None and self._snapshot_every > 0
+                and rs.n_blocks % self._snapshot_every == 0):
+            self.save_state()
+        if self._plan.crash_at(rs.n_blocks):
+            raise SimulatedCrash(
+                f"simulated crash at decode-block boundary {rs.n_blocks} "
+                "(recover on a fresh scheduler: recover() replays the "
+                "journal, load_state() restores the last snapshot)")
+
+    # -- crash recovery ----------------------------------------------------
+    def recover(self,
+                max_blocks: Optional[int] = None) -> list[Completion]:
+        """Journal-replay crash recovery, on a FRESH scheduler pointed at
+        the crashed run's journal: no device state is read back at all.
+        The journal's last epoch classifies every request — retired
+        completions are re-emitted verbatim, in-flight requests
+        (resident or parked at the crash) park on the re-admit queue and
+        rebuild their int8 KV state with one ``resume`` ragged prefill
+        over prompt + generated-so-far tokens (bit-valid because the
+        paper's frozen §2 thresholds make cache state a pure function of
+        the token sequence), and never-admitted requests re-enter the
+        arrival queue.  The surviving state is re-written as a fresh
+        journal epoch first, so repeated crash/recover cycles stay
+        replayable.  Greedy completions are bit-identical to an
+        uninterrupted run (tests/test_recovery.py pins it); sampled ones
+        too, because each request's carried PRNG key rides the journal.
+
+        Returns ALL completions of the logical run (pre-crash retirees
+        included).  ``max_blocks`` counts total decode blocks (the block
+        counter resumes from the crash boundary)."""
+        if self._journal is None:
+            raise ValueError(
+                "recover() needs a journal: construct the scheduler with "
+                "journal=<path of the crashed run's journal>")
+        rp = self._journal.replay()
+        self._check_knobs(rp.knobs)
+        rs = self._fresh_rs([])
+        rs.n_blocks = rp.n_blocks
+        # resume the run clock where the crash left it: virtual clocks
+        # restore exactly; wall clocks restart offset by the journaled
+        # elapsed ms (deadline fidelity across recovery needs the
+        # virtual clock — wall time lost to the outage is invisible)
+        if self._plan.ms_per_block > 0:
+            rs.vclock = rp.vclock
+        rs.t_start = time.monotonic() - rp.vclock * 1e-3
+        for d in rp.done:
+            c = completion_from_dict(d)
+            rs.done.append(c)
+            # re-derive the terminal-status counters the crash erased
+            self._health[c.status] += 1
+            if c.status == "ok":
+                self._health[c.finished_by] += 1
+        for item in rp.inflight:
+            req = request_from_dict(item["req"])
+            out = [int(t) for t in item["out"]]
+            if len(req.tokens) + len(out) - 1 <= self._resume_cap:
+                rs.readmit.append(_Parked(
+                    req=req, out=out,
+                    key=np.asarray(item["key"], np.uint32),
+                    steps=int(item["steps"]), recovered=True))
+            else:
+                # parked state too wide for the resume executable (its
+                # buffer covers whole prefill chunks only — the same
+                # bound ``resumable()`` enforces before preempting, but
+                # a crash cannot refuse): re-serve from scratch.  Still
+                # bit-identical — greedy tokens are a pure function of
+                # the prompt, and the sampling stream restarts from the
+                # same fold_in(seed, rid) key — at the cost of
+                # re-decoding what was already generated
+                self._health["replayed_tokens"] += (len(req.tokens)
+                                                    + len(out))
+                rs.pending.append(req)
+        rs.arrivals = deque(sorted(
+            (request_from_dict(d) for d in rp.queued),
+            key=lambda r: r.arrive_ms))
+        self._health["recoveries"] += 1
+        self._rs = rs
+        self._epoch = max(self._epoch, rp.epoch)
+        self._rewrite_epoch(rs)
+        return self._drive(max_blocks)
+
+    def _rewrite_epoch(self, rs: _RunState):
+        """Start a fresh journal epoch that re-states the surviving run
+        state (retirees, in-flight progress, queued requests), so replay
+        after a SECOND crash still sees one complete epoch."""
+        j = self._journal
+        if j is None:
+            return
+        self._epoch = max(self._epoch, j.last_epoch()) + 1
+        j.begin(self._epoch, self._knobs(), recovered=True)
+        for c in rs.done:
+            j.retire(c)
+        for slot in range(self.max_slots):
+            req = rs.slot_req[slot]
+            if req is not None:
+                j.enqueue(req)
+                j.progress(req.rid, rs.slot_out[slot],
+                           self._slot_keys[slot], rs.slot_steps[slot])
+        for p in rs.readmit:
+            j.enqueue(p.req)
+            j.progress(p.req.rid, p.out, p.key, p.steps)
+        for req in list(rs.pending) + list(rs.arrivals):
+            j.enqueue(req)
+        j.block(rs.n_blocks, rs.vclock)
+
+    # -- full-state snapshot (save/load through CheckpointManager) ---------
+    def save_state(self) -> str:
+        """Write a full snapshot of the serving state through the
+        checkpoint manager at ``snapshot_dir``: every cache layer's
+        ``state_dict()`` (int8 pages/slots + frozen scales), the host
+        decode vectors (positions, active mask, pending tokens, per-slot
+        PRNG keys, strategy history), the run bookkeeping (residents,
+        queues, parked victims, completions, block counter, clock), the
+        prefix store (entries, refcounts, stored logits), and the health
+        counters.  Atomic (temp dir + rename) and keep-N via
+        ``CheckpointManager`` — the same fault-tolerance contract
+        training checkpoints get.  Returns the checkpoint path."""
+        if self._snap_mgr is None:
+            raise ValueError(
+                "save_state() needs a snapshot_dir (construct the "
+                "scheduler with snapshot_dir=...)")
+        rs = self._rs if self._rs is not None else self._fresh_rs([])
+        leaves = [c for c in jax.tree.leaves(
+            self._cache, is_leaf=lambda x: isinstance(x, KVCache))]
+        tree = {
+            "cache": {str(i): c.state_dict()
+                      for i, c in enumerate(leaves)},
+            "host": {"pos": rs.pos, "active": rs.active,
+                     "last_tok": rs.last_tok,
+                     "slot_keys": self._slot_keys, "hist": self._hist},
+        }
+        clock_ms = (rs.vclock if self._plan.ms_per_block > 0
+                    else (time.monotonic() - rs.t_start) * 1e3)
+
+        def parked_d(p: _Parked) -> dict:
+            return {"req": request_to_dict(p.req),
+                    "out": [int(t) for t in p.out],
+                    "key": [int(k) for k in p.key],
+                    "steps": int(p.steps), "recovered": bool(p.recovered)}
+
+        state = {
+            "knobs": self._knobs(),
+            "slot_req": [None if r is None else request_to_dict(r)
+                         for r in rs.slot_req],
+            "slot_out": [[int(t) for t in out] for out in rs.slot_out],
+            "slot_steps": [int(s) for s in rs.slot_steps],
+            "done": [completion_to_dict(c) for c in rs.done],
+            "arrivals": [request_to_dict(r) for r in rs.arrivals],
+            "pending": [request_to_dict(r) for r in rs.pending],
+            "readmit": [parked_d(p) for p in rs.readmit],
+            "n_blocks": int(rs.n_blocks), "clock_ms": float(clock_ms),
+            "health": {k: int(v) for k, v in self._health.items()},
+            "epoch": int(self._epoch),
+        }
+        if self._prefix is not None:
+            psd = self._prefix.state_dict()
+            # logits are arrays — route them through the npz tree, keep
+            # the rest JSON (entry i's logits live at prefix_logits[i])
+            tree["prefix_logits"] = {
+                str(i): e.pop("logits")
+                for i, e in enumerate(psd["entries"])}
+            state["prefix"] = psd
+        self._snap_step = max([self._snap_step]
+                              + self._snap_mgr.list_steps()) + 1
+        return self._snap_mgr.save(self._snap_step, tree,
+                                   metadata={"state": state})
+
+    def load_state(self) -> int:
+        """Restore the newest committed snapshot from ``snapshot_dir``
+        into THIS scheduler (typically a fresh instance standing in for
+        a crashed process), rebuilding the device cache bit-exactly from
+        the saved int8 arrays — full-snapshot recovery, the
+        gigabytes-back alternative to journal replay.  Knobs must match
+        the saving scheduler's.  Follow with :meth:`resume_run` to drive
+        the restored run to completion; decode continues at the
+        snapshot's block boundary, so completions are bit-identical to
+        an uninterrupted run.  Returns the restored block counter."""
+        if self._snap_mgr is None:
+            raise ValueError(
+                "load_state() needs a snapshot_dir (construct the "
+                "scheduler with snapshot_dir=...)")
+        tree, meta = self._snap_mgr.restore_latest()
+        if tree is None:
+            raise FileNotFoundError(
+                f"no committed snapshot under {self._snap_mgr.dir}")
+        st = meta["state"]
+        self._check_knobs(st["knobs"])
+        tmpl, treedef = jax.tree.flatten(
+            self._cache, is_leaf=lambda x: isinstance(x, KVCache))
+        saved = tree["cache"]
+        if len(saved) != len(tmpl):
+            raise ValueError(
+                f"snapshot has {len(saved)} cache layers, scheduler has "
+                f"{len(tmpl)} (wrong snapshot for this config?)")
+        leaves = []
+        for i, t in enumerate(tmpl):
+            c = KVCache.from_state_dict(saved[str(i)])
+            for n in type(t)._child_names():
+                a, b = getattr(c, n), getattr(t, n)
+                if a.shape != b.shape or a.dtype != b.dtype:
+                    raise ValueError(
+                        f"snapshot cache layer {i} child {n!r} is "
+                        f"{a.shape}/{a.dtype}, scheduler expects "
+                        f"{b.shape}/{b.dtype}")
+            leaves.append(c)
+        self._cache = jax.tree.unflatten(treedef, leaves)
+        host = tree["host"]
+        self._slot_keys = np.array(host["slot_keys"], np.uint32)
+        self._hist = np.array(host["hist"], np.int32)
+        rs = self._fresh_rs([])
+        rs.pos = np.array(host["pos"], np.int32)
+        rs.active = np.array(host["active"], bool)
+        rs.last_tok = np.array(host["last_tok"], np.int32)
+        rs.slot_req = [None if d is None else request_from_dict(d)
+                       for d in st["slot_req"]]
+        rs.slot_out = [[int(t) for t in out] for out in st["slot_out"]]
+        rs.slot_steps = [int(s) for s in st["slot_steps"]]
+        rs.done = [completion_from_dict(d) for d in st["done"]]
+        rs.arrivals = deque(request_from_dict(d) for d in st["arrivals"])
+        rs.pending = deque(request_from_dict(d) for d in st["pending"])
+        rs.readmit = deque(
+            _Parked(req=request_from_dict(p["req"]),
+                    out=[int(t) for t in p["out"]],
+                    key=np.asarray(p["key"], np.uint32),
+                    steps=int(p["steps"]),
+                    recovered=bool(p.get("recovered", False)))
+            for p in st["readmit"])
+        rs.n_blocks = int(st["n_blocks"])
+        clock_ms = float(st["clock_ms"])
+        if self._plan.ms_per_block > 0:
+            rs.vclock = clock_ms
+        rs.t_start = time.monotonic() - clock_ms * 1e-3
+        self._health = {k: int(st["health"].get(k, 0))
+                        for k in _HEALTH_KEYS}
+        self._health["recoveries"] += 1
+        self._epoch = int(st["epoch"])
+        if self._prefix is not None and "prefix" in st:
+            psd = dict(st["prefix"])
+            logits = tree.get("prefix_logits", {})
+            psd["entries"] = [
+                {**e, "logits": np.asarray(logits[str(i)])}
+                for i, e in enumerate(psd["entries"])]
+            self._prefix.load_state_dict(psd)
+        self._rs = rs
+        # restored state supersedes whatever epoch the journal holds
+        self._rewrite_epoch(rs)
+        return rs.n_blocks
 
     # -- admission ---------------------------------------------------------
     def _check(self, req: Request) -> Optional[str]:
@@ -864,14 +1277,18 @@ class SlotScheduler:
             self._register_prefix(key, L, row, logits)
         return self._sample_t0(logits, k_t0), k_carry
 
-    def _readmit(self, slot: int, req: Request, out: list):
+    def _readmit(self, slot: int, req: Request, out: list,
+                 recovered: bool = False):
         """Rebuild a preempted request's device state in ``slot``: one
         ragged prefill (the ``resume`` executable) over prompt +
         generated-so-far tokens minus the pending one — FAT's frozen
         scales make the recomputed int8 cache bit-valid, so decode
         continues exactly where it left off.  The slot's private pages
         receive the state; prefix pages are not consulted (the sequence
-        includes generated tokens no other request shares)."""
+        includes generated tokens no other request shares).  Crash
+        recovery rides the same executable (``recovered=True``) but
+        counts re-prefilled tokens as ``replayed_tokens`` instead of a
+        preemption re-admission."""
         L = len(req.tokens)
         resume = L + len(out) - 1   # pending token is NOT yet in cache
         toks = np.zeros((1, self._resume_cap), np.int32)
@@ -892,7 +1309,10 @@ class SlotScheduler:
             self._cache = self._insert_fn(self._cache, slot_cache,
                                           jnp.asarray(row))
             self._set_row(slot, row)
-        self._health["readmits"] += 1
+        if recovered:
+            self._health["replayed_tokens"] += resume
+        else:
+            self._health["readmits"] += 1
 
     # -- paged plumbing ----------------------------------------------------
     def _set_row(self, slot: int, row: np.ndarray):

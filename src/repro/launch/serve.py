@@ -63,13 +63,25 @@ Usage:
          --fault-plan SPEC (inline JSON or a path to a JSON file; a
              launch/faults.py FaultPlan injecting deterministic faults —
              admission failures, NaN logits, forced preemptions, forced
-             prefix-pool exhaustion, virtual clock)
+             prefix-pool exhaustion, simulated crashes, virtual clock)
+         --journal PATH (write-ahead request journal; a crashed run
+             restarts with --restore journal and completes bit-identical
+             — docs/serving.md "Durability & recovery")
+         --snapshot-every N --snapshot-dir DIR (full state snapshot
+             through the checkpoint manager every N decode blocks)
+         --restore {journal,snapshot} (recover a crashed run instead of
+             serving fresh requests)
+         --strict (exit non-zero when any request retires non-'ok' —
+             lets chaos CI and scripts gate on degraded runs)
          --ckpt-dir DIR (restore trained params instead of random init)
 
 Every request retires with a terminal ``Completion.status`` (ok |
 rejected | timeout | preempted | shed | failed — docs/serving.md
 "Failure semantics"); the run prints the scheduler's health report
-(per-status counts, preemptions, re-admits, deadline misses).
+(per-status counts, preemptions, re-admits, deadline misses, recovery
+counters).  A simulated crash (fault plan ``crash``) exits with code 3
+after its journal/snapshot state is durable; ``--strict`` failures exit
+with code 1.
 """
 from __future__ import annotations
 
@@ -108,19 +120,36 @@ def ragged_requests(spec, n_requests, prompt_len, gen, *, seed=12345,
 
 def run_continuous(args, engine: Engine):
     """--max-slots path: stream --requests ragged requests through the
-    slot scheduler and report aggregate throughput."""
-    spec = DP.spec_for(engine.cfg, ShapeSpec("cli", "train",
-                                             args.prompt_len, args.requests))
-    reqs = ragged_requests(spec, args.requests, args.prompt_len, args.gen,
-                           deadline_ms=args.deadline_ms)
+    slot scheduler (or, with --restore, pick a crashed run back up from
+    its journal/snapshot) and report aggregate throughput."""
+    from repro.launch.faults import SimulatedCrash
+
+    sched_kw = dict(max_slots=args.max_slots, prompt_cap=args.prompt_len,
+                    gen_cap=args.gen, block_steps=args.block_steps,
+                    eos_id=args.eos_id)
     t0 = time.time()
-    completions = engine.generate(
-        reqs, max_slots=args.max_slots, prompt_cap=args.prompt_len,
-        gen_cap=args.gen, block_steps=args.block_steps, eos_id=args.eos_id)
+    try:
+        if args.restore == "journal":
+            completions = engine.recover(**sched_kw)
+        elif args.restore == "snapshot":
+            completions = engine.resume(**sched_kw)
+        else:
+            spec = DP.spec_for(
+                engine.cfg, ShapeSpec("cli", "train", args.prompt_len,
+                                      args.requests))
+            reqs = ragged_requests(spec, args.requests, args.prompt_len,
+                                   args.gen, deadline_ms=args.deadline_ms)
+            completions = engine.generate(reqs, **sched_kw)
+    except SimulatedCrash as e:
+        # the boundary's journal records / snapshot landed BEFORE the
+        # crash fired — the run is recoverable by a fresh process
+        print(f"[serve] {e}")
+        print("[serve] state is durable — restart with --restore journal "
+              "(+ --journal PATH) or --restore snapshot "
+              "(+ --snapshot-dir DIR) to finish the run bit-identically")
+        raise SystemExit(3)
     wall = time.time() - t0
-    sched = engine.make_scheduler(
-        max_slots=args.max_slots, prompt_cap=args.prompt_len,
-        gen_cap=args.gen, block_steps=args.block_steps, eos_id=args.eos_id)
+    sched = engine.make_scheduler(**sched_kw)
     n_new = sum(len(c.tokens) for c in completions)
     n_prompt = sum(c.prompt_len for c in completions)
     print(f"[serve] continuous batching ({sched.cache_layout}): "
@@ -142,6 +171,10 @@ def run_continuous(args, engine: Engine):
           " ".join(f"{k}={v}" for k, v in sorted(by_status.items())))
     print("[serve] health: " +
           " ".join(f"{k}={v}" for k, v in health.items() if v))
+    if args.restore:
+        print(f"[serve] recovered via {args.restore}: "
+              f"recoveries={health.get('recoveries', 0)} "
+              f"replayed_tokens={health.get('replayed_tokens', 0)}")
     if sched.cache_layout == "paged":
         stats = sched.prefix_stats()
         print(f"[serve] prefix store: {stats['hits']} hits / "
@@ -156,6 +189,11 @@ def run_continuous(args, engine: Engine):
     for c in completions[:2]:
         print(f"  req{c.rid}: prompt_len={c.prompt_len} "
               f"finished_by={c.finished_by} -> {c.tokens}")
+    if args.strict:
+        bad = sorted({c.status for c in completions if c.status != "ok"})
+        if bad:
+            print(f"[serve] --strict: non-ok terminal statuses {bad}")
+            raise SystemExit(1)
     return completions
 
 
@@ -237,10 +275,52 @@ def main():
                     help="deterministic fault injection (launch/faults.py): "
                          "inline JSON or a path to a JSON file, e.g. "
                          "'{\"reject\": [2], \"nan_decode\": [[3, 1]]}'")
+    ap.add_argument("--journal", default=None,
+                    help="write-ahead request journal path (scheduler "
+                         "path): every admission / block boundary / "
+                         "retirement is journaled, so a crashed run can "
+                         "restart with --restore journal and finish "
+                         "bit-identically (launch/journal.py)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="write a full serving-state snapshot every N "
+                         "decode-block boundaries through the checkpoint "
+                         "manager (0 = off; needs --snapshot-dir)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="checkpoint directory for serving-state "
+                         "snapshots (enables --restore snapshot)")
+    ap.add_argument("--restore", default=None,
+                    choices=["journal", "snapshot"],
+                    help="recover a crashed run instead of serving fresh "
+                         "requests: journal = replay the --journal file "
+                         "and rebuild in-flight state via the resume "
+                         "prefill; snapshot = restore the newest "
+                         "--snapshot-dir checkpoint and continue decoding")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit with code 1 if any request retires with a "
+                         "non-'ok' terminal status (CI gating)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained params from a launch/train.py "
                          "checkpoint directory (default: random init)")
     args = ap.parse_args()
+    if (args.journal or args.snapshot_dir or args.restore
+            or args.strict) and not args.max_slots:
+        ap.error("--journal/--snapshot-dir/--restore/--strict need "
+                 "--max-slots (the continuous-batching scheduler)")
+    if args.restore == "journal" and not args.journal:
+        ap.error("--restore journal needs --journal PATH")
+    if args.restore == "snapshot" and not args.snapshot_dir:
+        ap.error("--restore snapshot needs --snapshot-dir DIR")
+
+    fault_plan = args.fault_plan
+    if fault_plan is not None:
+        from repro.launch.faults import FaultPlan
+        fault_plan = FaultPlan.parse(fault_plan)
+        if args.restore == "snapshot" and fault_plan.crash:
+            # a snapshot may predate the crash boundary, so the restored
+            # run would reach it and crash again on every restart;
+            # journal replay resumes AT the boundary, so its plan keeps
+            # later crash points live for multi-crash chains
+            fault_plan = dataclasses.replace(fault_plan, crash=())
 
     use_pallas = (jax.default_backend() == "tpu" if args.pallas is None
                   else args.pallas)
@@ -253,7 +333,9 @@ def main():
         top_p=args.top_p, seed=args.seed, decode_strategy=args.strategy,
         spec_k=args.spec_k, spec_ngram=args.spec_ngram,
         queue_cap=args.queue_cap, shed_policy=args.shed_policy,
-        fault_plan=args.fault_plan)
+        fault_plan=fault_plan, journal=args.journal,
+        snapshot_every=args.snapshot_every,
+        snapshot_dir=args.snapshot_dir)
     if not args.fp:
         print(f"[serve] converted: {engine.n_int8_weights()} int8 weight "
               "tensors resident")

@@ -1,0 +1,110 @@
+"""CheckpointManager contract tests — error paths included.
+
+The manager was written for training restarts; the durability layer
+(scheduler ``save_state``/``load_state``) now routes SERVING state
+through it too, so its fault-tolerance contract — atomic temp-dir +
+rename writes, a COMMITTED marker gating visibility, keep-N GC, and
+restore_latest falling back past incomplete checkpoints — is
+load-bearing twice over and pinned here.
+"""
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager, _flatten, _unflatten
+
+
+def _tree(step):
+    return {"params": {"w": np.full((2, 3), float(step)),
+                       "b": np.arange(3.0)},
+            "nested": [np.ones((1,)), np.zeros((2,))]}
+
+
+class TestRoundTrip:
+    def test_save_restore_tree_and_metadata(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save(5, _tree(5), metadata={"note": "hello", "knobs": {"a": 1}})
+        tree, meta = mgr.restore(5)
+        np.testing.assert_array_equal(tree["params"]["w"],
+                                      np.full((2, 3), 5.0))
+        # list/tuple nodes come back as string-keyed dicts (flatten
+        # addressing) — contents survive bit-exact
+        np.testing.assert_array_equal(tree["nested"]["0"], np.ones((1,)))
+        assert meta["note"] == "hello"
+        assert meta["knobs"] == {"a": 1}
+        assert meta["step"] == 5      # stamped by save()
+
+    def test_flatten_unflatten_inverse(self):
+        tree = {"a": {"b": 1, "c/with/slashes": 2}, "d": 3}
+        assert _unflatten(_flatten(tree)) == tree
+
+    def test_restore_latest_picks_newest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=5)
+        for s in (1, 3, 2):
+            mgr.save(s, _tree(s))
+        tree, meta = mgr.restore_latest()
+        assert meta["step"] == 3
+        np.testing.assert_array_equal(tree["params"]["w"],
+                                      np.full((2, 3), 3.0))
+
+
+class TestErrorPaths:
+    def test_restore_latest_empty_dir(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        assert mgr.restore_latest() == (None, None)
+        assert mgr.list_steps() == []
+
+    def test_partial_checkpoint_invisible(self, tmp_path):
+        """A checkpoint dir without the COMMITTED marker (killed writer)
+        is skipped: restore_latest falls back to the newest COMPLETE
+        one."""
+        mgr = CheckpointManager(str(tmp_path), keep=5)
+        mgr.save(1, _tree(1))
+        # hand-build a half-written step 2: arrays but no marker
+        partial = tmp_path / "ckpt_0000000002"
+        partial.mkdir()
+        np.savez(partial / "arrays.npz", x=np.ones(3))
+        assert mgr.list_steps() == [1]
+        _, meta = mgr.restore_latest()
+        assert meta["step"] == 1
+
+    def test_corrupt_arrays_raise(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        path = mgr.save(1, _tree(1))
+        with open(os.path.join(path, "arrays.npz"), "wb") as f:
+            f.write(b"not an npz")
+        with pytest.raises(Exception):
+            mgr.restore(1)
+
+    def test_metadata_must_be_json(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        with pytest.raises(TypeError):
+            mgr.save(1, _tree(1), metadata={"bad": np.ones((2,))})
+        # the failed save left no visible checkpoint behind
+        assert mgr.list_steps() == []
+
+    def test_failed_save_leaves_no_temp_dirs(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        with pytest.raises(TypeError):
+            mgr.save(1, _tree(1), metadata={"bad": object()})
+        assert [d for d in os.listdir(tmp_path)
+                if d.startswith(".tmp_")] == []
+
+
+class TestKeepN:
+    def test_gc_keeps_newest_n(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in range(1, 5):
+            mgr.save(s, _tree(s))
+        assert mgr.list_steps() == [3, 4]
+        assert sorted(os.listdir(tmp_path)) == ["ckpt_0000000003",
+                                                "ckpt_0000000004"]
+
+    def test_keep_zero_disables_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=0)
+        for s in range(1, 4):
+            mgr.save(s, _tree(s))
+        assert mgr.list_steps() == [1, 2, 3]

@@ -22,6 +22,11 @@ def test_flag_extraction_sees_the_cli():
         import check_docs
     finally:
         sys.path.pop(0)
-    flags = check_docs.serve_flags()
+    flags = dict(check_docs.serve_flags())
     assert "--max-slots" in flags and "--prefill-chunk" in flags
     assert len(flags) >= 10
+    # enum flags carry their choices so the docs check can demand the
+    # modes be documented, not just the flag name
+    assert set(flags["--restore"]) == {"journal", "snapshot"}
+    assert set(flags["--shed-policy"]) == {"shed", "block"}
+    assert flags["--journal"] == []
