@@ -33,6 +33,12 @@ reference for the full list):
   --cache-layout paged --page-size N
                       page-pool KV cache: block tables are data, and with
                       --max-slots a repeated prompt rides shared pages
+  --kv-bits 4         packed int4 KV cache (quarter of bf16 cache bytes;
+                      the fused kernels unpack nibbles in their dequant
+                      epilogue) — pair with --finetune-thresholds N to
+                      distill-train the per-head thresholds (paper §3)
+                      before freezing, which is what keeps the 7-level
+                      grid accurate
 
 Run: PYTHONPATH=src python examples/serve_int8.py
 """
@@ -82,6 +88,15 @@ def main():
                 "--max-slots", "2", "--prefill-chunk", "8",
                 "--strategy", "speculative", "--spec-k", "4",
                 "--spec-ngram", "2"]
+    serve.main()
+
+    # int4 KV cache with distill-trained thresholds: the cache stores
+    # packed nibbles (half the int8 bytes, a quarter of bf16) and one
+    # epoch of §3 threshold training repairs what 7-level max-abs
+    # calibration loses
+    sys.argv = ["serve", "--arch", "smollm-135m", "--smoke",
+                "--requests", "4", "--prompt-len", "32", "--gen", "8",
+                "--kv-bits", "4", "--finetune-thresholds", "1"]
     serve.main()
 
     # the Engine facade + paged prefix sharing: three IDENTICAL prompts

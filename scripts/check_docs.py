@@ -12,9 +12,10 @@ Checks
    src/repro/launch/serve.py appears verbatim in README.md — the README
    is the flag reference of record, so a new flag without docs fails CI.
 3. Every ``choices=`` value of those flags appears in README.md too: an
-   enum flag (``--restore {journal,snapshot}``, ``--shed-policy``, ...)
-   is only documented when its MODES are — a new mode without docs
-   fails CI just like a new flag.
+   enum flag (``--restore {journal,snapshot}``, ``--shed-policy``,
+   ``--kv-bits {8,4}``, ...) is only documented when its MODES are — a
+   new mode without docs fails CI just like a new flag.  Both string and
+   integer choices count (``--kv-bits`` is an int enum).
 
 Run: python scripts/check_docs.py   (from anywhere; paths resolve
 relative to the repo root, which is this script's parent directory).
@@ -79,9 +80,12 @@ def serve_flags() -> list[tuple[str, list[str]]]:
             for kw in node.keywords:
                 if (kw.arg == "choices" and
                         isinstance(kw.value, (ast.List, ast.Tuple))):
-                    choices = [c.value for c in kw.value.elts
+                    # ints coerce to their decimal spelling — an int enum
+                    # like ``--kv-bits`` documents "8" / "4" in the README
+                    choices = [str(c.value) for c in kw.value.elts
                                if isinstance(c, ast.Constant)
-                               and isinstance(c.value, str)]
+                               and isinstance(c.value, (str, int))
+                               and not isinstance(c.value, bool)]
             flags.append((name, choices))
     return flags
 

@@ -45,6 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.packing import pack_int4, unpack_int4
+
 # layout name -> concrete KVCache subclass, filled by __init_subclass__;
 # ``KVCache.from_state_dict`` dispatches restores through it (import
 # repro.cache — not this module — to guarantee every layout is registered)
@@ -53,6 +55,13 @@ LAYOUT_REGISTRY: dict = {}
 # int8 KV cache uses the symmetric signed-8-bit grid (paper eq. 4); the
 # per-head dequant scale T/127 is frozen at finalize_calibration
 KV_LEVELS = 127.0
+
+
+def kv_levels(bits: int) -> float:
+    """Symmetric signed level count for a KV bit width (127 / 7)."""
+    if bits not in (4, 8):
+        raise ValueError(f"kv cache bits must be 4 or 8, got {bits}")
+    return float(2 ** (bits - 1) - 1)
 
 # a dead channel (all-zero calibration activations) would hand the cache
 # a zero — or, through a NaN-poisoned observer, non-finite — threshold;
@@ -71,16 +80,25 @@ def _safe_scale(scale):
     return jnp.where(s > _SCALE_FLOOR, s, _SCALE_FLOOR)
 
 
-def quantize_kv(x, scale):
-    """(B, S, KV, D) float -> int8 with per-head dequant ``scale`` (KV,)."""
+def quantize_kv(x, scale, bits: int = 8):
+    """(B, S, KV, D) float -> quantized storage tiles with per-head
+    dequant ``scale`` (KV,).  ``bits == 8`` emits plain int8; ``bits ==
+    4`` clips to the int4 grid (±7) and packs two values per byte along
+    the head dim (D -> D/2 storage bytes)."""
+    lv = kv_levels(bits)
     s = scale.reshape(1, 1, -1, 1)
-    return jnp.clip(
-        jnp.round(x.astype(jnp.float32) / s), -KV_LEVELS, KV_LEVELS
-    ).astype(jnp.int8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -lv, lv).astype(
+        jnp.int8)
+    if bits == 4:
+        q = pack_int4(q, axis=-1)
+    return q
 
 
-def dequantize_kv(x_q, scale):
-    """int8 cache tiles -> f32 with per-head dequant ``scale`` (KV,)."""
+def dequantize_kv(x_q, scale, bits: int = 8):
+    """Quantized cache tiles -> f32 with per-head dequant ``scale``
+    (KV,); int4 tiles unpack their nibbles first."""
+    if bits == 4:
+        x_q = unpack_int4(x_q, axis=-1)
     return x_q.astype(jnp.float32) * scale.reshape(1, 1, -1, 1)
 
 
@@ -90,12 +108,16 @@ class KernelView(NamedTuple):
     ``k``/``v``: KV tiles — dense/ring pass (B, S, KV, D) contiguous
     storage with ``block_table is None`` (the kernel wrapper builds the
     identity table); paged passes the (pages, page_size, KV, D) pool with
-    a (B, n_blocks) table and ``tile == page_size``.
+    a (B, n_blocks) table and ``tile == page_size``.  ``bits`` carries
+    the storage width: at 4 the tiles hold packed nibbles (last dim is
+    D/2 bytes) and the kernels fold one unpack into their dequant
+    epilogue.
     """
     k: jax.Array
     v: jax.Array
     block_table: Optional[jax.Array]
     tile: Optional[int]
+    bits: int = 8
 
 
 class KVCache(abc.ABC):
@@ -132,6 +154,8 @@ class KVCache(abc.ABC):
 
     @property
     def head_dim(self) -> int:
+        """STORAGE width of the last axis (packed bytes at bits == 4 —
+        half the logical head dim; ``dequantize`` restores D)."""
         return self.k.shape[-1]
 
     # -- scales ------------------------------------------------------------
@@ -154,15 +178,17 @@ class KVCache(abc.ABC):
         phases — K/V quantize ONCE and the same tiles feed attention and
         the cache write."""
         if self.quantized:
-            return quantize_kv(k, self.k_scale), quantize_kv(v, self.v_scale)
+            return (quantize_kv(k, self.k_scale, self.bits),
+                    quantize_kv(v, self.v_scale, self.bits))
         return k.astype(self.k.dtype), v.astype(self.v.dtype)
 
     def dequantize(self, k_tiles, v_tiles):
-        """Storage tiles -> f32 for the jnp reference attention paths."""
+        """Storage tiles -> f32 for the jnp reference attention paths
+        (int4 tiles unpack back to the logical head dim here)."""
         if not self.quantized:
             return k_tiles, v_tiles
-        return (dequantize_kv(k_tiles, self.k_scale),
-                dequantize_kv(v_tiles, self.v_scale))
+        return (dequantize_kv(k_tiles, self.k_scale, self.bits),
+                dequantize_kv(v_tiles, self.v_scale, self.bits))
 
     # -- writes ------------------------------------------------------------
     @abc.abstractmethod
@@ -247,7 +273,7 @@ class KVCache(abc.ABC):
     # ("k", "v", "k_scale", ...) so path-based tooling — dist/sharding's
     # cache_specs classifies KV leaves by their ``"k"``/``"v"`` path key —
     # keeps working across the dict -> protocol migration.
-    _static = ("_quantized",)
+    _static = ("_quantized", "bits")
 
     @classmethod
     def _child_names(cls):
@@ -296,6 +322,9 @@ class KVCache(abc.ABC):
                 f"unknown cache layout {layout!r} in state dict "
                 f"(registered: {sorted(LAYOUT_REGISTRY)})")
         static = {k: _unbox(v) for k, v in sd["static"].items()}
+        # pre-int4 snapshots carry no bit width: they are int8 by
+        # construction, so default rather than reject
+        static.setdefault("bits", 8)
         missing = set(cls._static) - set(static)
         if missing:
             raise ValueError(
@@ -322,9 +351,14 @@ def _unbox(v):
     return v
 
 
-def _zeros_kv(batch, seq, n_kv, head_dim, dtype, quantized):
+def _zeros_kv(batch, seq, n_kv, head_dim, dtype, quantized, bits=8):
     # four DISTINCT buffers: donation (serve.py donates the cache into
     # the decode loop) rejects the same buffer appearing as two leaves
+    if quantized and bits == 4:
+        if head_dim % 2:
+            raise ValueError(
+                f"int4 KV packing needs an even head dim, got {head_dim}")
+        head_dim //= 2  # two nibbles per stored byte
     kd = (batch, seq, n_kv, head_dim)
     store = jnp.int8 if quantized else dtype
     return (jnp.zeros(kd, store), jnp.zeros(kd, store),
@@ -339,17 +373,19 @@ class DenseCache(KVCache):
 
     layout: ClassVar[str] = "dense"
 
-    k: jax.Array          # (B, S, KV, D) int8 or float
+    k: jax.Array          # (B, S, KV, D) int8 or float (D/2 at bits == 4)
     v: jax.Array
     k_scale: jax.Array    # (KV,) f32 (ones when not quantized)
     v_scale: jax.Array
     _quantized: bool = dataclasses.field(default=False)
+    bits: int = dataclasses.field(default=8)
 
     @classmethod
     def init(cls, batch, max_len, n_kv, head_dim, *, dtype=jnp.bfloat16,
-             quantized=False):
+             quantized=False, bits=8):
         return cls(*_zeros_kv(batch, max_len, n_kv, head_dim, dtype,
-                              quantized), _quantized=quantized)
+                              quantized, bits), _quantized=quantized,
+                   bits=bits)
 
     def append(self, kq, vq, start):
         ax = self.k.ndim - 3
@@ -391,7 +427,7 @@ class DenseCache(KVCache):
 
     def kernel_view(self, limit=None):
         k, v = self.dense_view(limit)
-        return KernelView(k, v, None, None)
+        return KernelView(k, v, None, None, self.bits)
 
 
 @jax.tree_util.register_pytree_with_keys_class
@@ -404,17 +440,19 @@ class RingCache(KVCache):
 
     layout: ClassVar[str] = "ring"
 
-    k: jax.Array          # (B, window, KV, D)
+    k: jax.Array          # (B, window, KV, D) (D/2 at bits == 4)
     v: jax.Array
     k_scale: jax.Array
     v_scale: jax.Array
     _quantized: bool = dataclasses.field(default=False)
+    bits: int = dataclasses.field(default=8)
 
     @classmethod
     def init(cls, batch, window, n_kv, head_dim, *, dtype=jnp.bfloat16,
-             quantized=False):
+             quantized=False, bits=8):
         return cls(*_zeros_kv(batch, window, n_kv, head_dim, dtype,
-                              quantized), _quantized=quantized)
+                              quantized, bits), _quantized=quantized,
+                   bits=bits)
 
     @property
     def window(self) -> int:
@@ -466,4 +504,4 @@ class RingCache(KVCache):
         return self.k, self.v   # ring storage IS its attended extent
 
     def kernel_view(self, limit=None):
-        return KernelView(self.k, self.v, None, None)
+        return KernelView(self.k, self.v, None, None, self.bits)

@@ -61,22 +61,23 @@ class PagedCache(KVCache):
 
     layout: ClassVar[str] = "paged"
 
-    k: jax.Array          # (T, ps, KV, D) page pool
+    k: jax.Array          # (T, ps, KV, D) page pool (D/2 at bits == 4)
     v: jax.Array
     k_scale: jax.Array    # (KV,) f32
     v_scale: jax.Array
     table: jax.Array      # (B, NB) int32
     _quantized: bool = dataclasses.field(default=False)
     page_size: int = dataclasses.field(default=64)
+    bits: int = dataclasses.field(default=8)
 
-    # pytree: the table is a child (keyed "table"); page_size joins
-    # quantized in the static aux (see KVCache pytree plumbing)
-    _static = ("_quantized", "page_size")
+    # pytree: the table is a child (keyed "table"); page_size and the KV
+    # bit width join quantized in the static aux (KVCache pytree plumbing)
+    _static = ("_quantized", "page_size", "bits")
 
     # -- construction ------------------------------------------------------
     @classmethod
     def init(cls, batch, max_len, n_kv, head_dim, *, dtype=jnp.bfloat16,
-             quantized=False, page_size=64, extra_pages=0):
+             quantized=False, page_size=64, extra_pages=0, bits=8):
         """Identity-table pool: slot b owns pages [b*NB, (b+1)*NB) where
         NB = ceil(max_len / page_size); ``extra_pages`` reserves the
         shared prefix region at the pool tail."""
@@ -88,10 +89,10 @@ class PagedCache(KVCache):
                 f"{page_size}")
         nb = -(-max_len // page_size)
         k, v, ks, vs = _zeros_kv(batch * nb + extra_pages, page_size, n_kv,
-                                 head_dim, dtype, quantized)
+                                 head_dim, dtype, quantized, bits)
         table = jnp.arange(batch * nb, dtype=jnp.int32).reshape(batch, nb)
         return cls(k, v, ks, vs, table, _quantized=quantized,
-                   page_size=page_size)
+                   page_size=page_size, bits=bits)
 
     @property
     def capacity(self) -> int:
@@ -172,7 +173,7 @@ class PagedCache(KVCache):
     def kernel_view(self, limit=None):
         nb = self._blocks_for(limit)
         return KernelView(self.k, self.v, self.table[:, :nb],
-                          self.page_size)
+                          self.page_size, self.bits)
 
     def splice_slot(self, slot_cache, slot):
         raise NotImplementedError(

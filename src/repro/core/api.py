@@ -52,7 +52,8 @@ class QuantPolicy:
     percentile: float = 99.99
     skip_patterns: tuple[str, ...] = () # layer paths excluded (e.g. routers)
     use_pallas: bool = False            # Pallas kernels on real TPU hot path
-    kv_int8: bool = False               # int8 KV cache (per-head static T)
+    kv_int8: bool = False               # quantized KV cache (per-head static T)
+    kv_bits: int = 8                    # KV cache width: 8, or 4 (packed nibbles)
 
     @functools.cached_property
     def _skip_res(self) -> tuple[re.Pattern, ...]:
@@ -82,12 +83,14 @@ class QuantPolicy:
         )
 
     def kv_spec(self) -> Q.QuantSpec:
-        """K/V cache entries (B, S, KV, D): symmetric int8 with one static
-        threshold per KV head (channel_axis=-2).  Per-head rather than
-        per-tensor because K magnitudes vary strongly across heads (rope
-        frequencies), and per-head scales stay O(KV) resident floats."""
+        """K/V cache entries (B, S, KV, D): symmetric int8/int4 with one
+        static threshold per KV head (channel_axis=-2).  Per-head rather
+        than per-tensor because K magnitudes vary strongly across heads
+        (rope frequencies), and per-head scales stay O(KV) resident
+        floats.  ``kv_bits`` picks the integer width (levels = 127 or
+        7); the cache stores int4 as packed nibbles."""
         return Q.QuantSpec(
-            bits=self.bits,
+            bits=self.kv_bits,
             symmetric=True,
             per_channel=True,
             channel_axis=-2,
@@ -214,13 +217,20 @@ def _quant_layers_with_params(model, params, policy: QuantPolicy | None = None):
             yield module, sub
 
 
-def finalize_calibration(qparams: dict, policy: QuantPolicy) -> dict:
+def finalize_calibration(qparams: dict, policy: QuantPolicy, *,
+                         train_thresholds: bool = False) -> dict:
     """Convert observer stats into threshold params (paper §3.1.3 init).
 
-    KV-cache entries freeze to bare per-head thresholds — unlike activation
-    thresholds they carry no trainable alpha: the cache is written and read
-    with the same scale, so the FAT fine-tuning objective has no gradient
-    signal through it (§2: everything static at serving time).
+    KV-cache entries normally freeze to bare per-head thresholds — unlike
+    activation thresholds they carry no trainable alpha: the cache is
+    written and read with the same scale, so the FAT fine-tuning
+    objective has no gradient signal through it (§2: everything static at
+    serving time).  With ``train_thresholds=True`` each KV entry instead
+    gains a trainable log2-domain threshold (``log2_t``, TQT-style —
+    initialized at the §2 max-abs value), the fake-mode forward
+    fake-quantizes K/V through it so the distillation loss reaches it,
+    and ``freeze_thresholds`` collapses it back to a bare ``t_max`` for
+    serving once fine-tuning is done.
     """
     out = {}
     for path, entry in qparams.items():
@@ -228,11 +238,15 @@ def finalize_calibration(qparams: dict, policy: QuantPolicy) -> dict:
             # where(), not maximum(): a NaN-poisoned observer (e.g. a
             # non-finite calibration batch) must still floor — maximum
             # propagates the NaN straight into every cache scale
-            out[path] = {
+            kv = {
                 kk: {"t_max": jnp.where(obs["t_max"] > 1e-8,
                                         obs["t_max"], 1e-8)}
                 for kk, obs in entry.items()
             }
+            if train_thresholds:
+                for st in kv.values():
+                    st["log2_t"] = jnp.log2(st["t_max"]).astype(jnp.float32)
+            out[path] = kv
             continue
         e = dict(entry)
         e["act"] = calib.observer_thresholds(entry["act"], policy.act_spec())
@@ -240,10 +254,32 @@ def finalize_calibration(qparams: dict, policy: QuantPolicy) -> dict:
     return out
 
 
+def freeze_thresholds(qparams: dict) -> dict:
+    """Collapse trained KV thresholds back to the frozen serving form.
+
+    Every KV entry carrying a trained ``log2_t`` becomes a bare
+    ``{"t_max": 2**log2_t}`` (floored like finalize_calibration), which
+    is exactly what the serving path (`Attention._kv_scales`) reads —
+    after this the engine cannot tell trained thresholds from §2 ones.
+    """
+    out = {}
+    for path, entry in qparams.items():
+        if is_kv_path(path) and any("log2_t" in st for st in entry.values()):
+            out[path] = {
+                kk: {"t_max": jnp.where(jnp.exp2(st["log2_t"]) > 1e-8,
+                                        jnp.exp2(st["log2_t"]), 1e-8)}
+                for kk, st in entry.items()
+            }
+        else:
+            out[path] = entry
+    return out
+
+
 def trainable_mask(qparams: dict) -> dict:
     """Pytree of bools: True only on the trained FAT parameters —
-    threshold scale factors (and pointwise scales if enabled)."""
-    trainable_keys = {"alpha", "alpha_t", "alpha_r", "pointwise"}
+    threshold scale factors, trained log2 thresholds (TQT mode), and
+    pointwise scales if enabled."""
+    trainable_keys = {"alpha", "alpha_t", "alpha_r", "pointwise", "log2_t"}
 
     def mask_entry(d):
         return {

@@ -1,0 +1,63 @@
+"""int4 nibble packing: two signed 4-bit values per int8 byte.
+
+The int4 KV cache (and the int4 weight path of ``kernels/quant_matmul``)
+stores quantized values as packed nibbles so every buffer shrinks to half
+the int8 bytes — the whole point of dropping to 4 bits is halving the
+HBM stream, so the *storage* layout must actually be 4 bits wide.
+
+Layout: along the packed axis, element ``2i`` lives in the LOW nibble and
+element ``2i + 1`` in the HIGH nibble of byte ``i``.  Values must lie in
+the signed int4 range [-8, 7] (the symmetric quantizer only emits
+[-7, 7]).  An odd-length axis is padded with one zero nibble; callers
+that pack odd lengths must pass the original ``size`` to ``unpack_int4``
+to slice the pad back off (cache head dims are always even, so the
+serving path never pads).
+
+Sign handling is the classic two's-complement trick, kept in int32 where
+Pallas/TPU integer ops are native:
+
+    lo = ((b & 15) ^ 8) - 8      # low nibble, sign-extended
+    hi = b >> 4                  # int32 arithmetic shift sign-extends
+
+Both helpers are pure jnp and trace inside Pallas kernel bodies — the
+attention kernels call ``unpack_int4`` on their VMEM tiles directly, so
+there is exactly one unpack implementation in the repo.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_int4(x, axis: int = -1):
+    """Pack signed int values in [-8, 7] into nibbles along ``axis``.
+
+    Returns an int8 array whose ``axis`` length is ``ceil(n / 2)``.
+    """
+    x = jnp.asarray(x)
+    ax = axis % x.ndim
+    x = jnp.moveaxis(x, ax, -1)
+    if x.shape[-1] % 2:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, 1)])
+    xi = x.astype(jnp.int32)
+    even = xi[..., 0::2] & 15
+    odd = xi[..., 1::2] & 15
+    return jnp.moveaxis((even | (odd << 4)).astype(jnp.int8), -1, ax)
+
+
+def unpack_int4(p, axis: int = -1, size: int | None = None):
+    """Unpack nibbles along ``axis`` back to int8 values in [-8, 7].
+
+    ``size`` slices the axis back to an odd pre-pack length; by default
+    the unpacked length is ``2 * packed_length``.
+    """
+    p = jnp.asarray(p)
+    ax = axis % p.ndim
+    p = jnp.moveaxis(p, ax, -1)
+    pi = p.astype(jnp.int32)
+    lo = ((pi & 15) ^ 8) - 8
+    hi = pi >> 4  # arithmetic shift: the high nibble carries the byte sign
+    out = jnp.stack([lo, hi], axis=-1).reshape(
+        p.shape[:-1] + (2 * p.shape[-1],))
+    if size is not None:
+        out = out[..., :size]
+    return jnp.moveaxis(out.astype(jnp.int8), -1, ax)

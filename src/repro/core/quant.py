@@ -296,6 +296,71 @@ fake_quant_symmetric_fused.defvjp(_fq_sym_fwd, _fq_sym_bwd)
 
 
 # ---------------------------------------------------------------------------
+# TQT-style trained thresholds (log2 parameterization)
+# ---------------------------------------------------------------------------
+
+_LN2 = 0.6931471805599453
+
+
+def _fq_log_t_math(x, log2_t, spec: QuantSpec):
+    t = jnp.exp2(_bcast(log2_t, x, spec).astype(jnp.float32))
+    scale = spec.levels / jnp.maximum(t, _EPS)
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) * scale),
+                  spec.qmin, spec.qmax)
+    return (xq / scale).astype(x.dtype)
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fake_quant_log_t(x, log2_t, spec: QuantSpec):
+    """Symmetric fake-quant with a TRAINED log2-domain threshold (TQT,
+    arxiv 1903.08066; also the Qualcomm white paper arxiv 2106.08295).
+
+    Where the paper's §3.1.3 trains a bounded multiplier ``alpha`` on a
+    frozen calibrated ``t_max``, this trains the threshold itself as
+    ``t = 2**log2_t`` — unbounded, always positive, and with a gradient
+    scale-invariant across layers (the log2 reparameterization is exactly
+    TQT's), which is what lets a handful of epochs move a badly
+    outlier-calibrated threshold all the way back to the data's bulk.
+
+    Backward (TQT eq. 6-8):
+      dx        = g            inside the clip band (|x| <= t), 0 saturated
+      d/dt      = (y - x)/t    inside (rounding residual),
+                  sign(x)      saturated (y rides the clip edge t)
+      d/dlog2_t = ln(2) * t * d/dt
+    """
+    return _fq_log_t_math(x, log2_t, spec)
+
+
+def _fq_log_t_fwd(x, log2_t, spec):
+    return _fq_log_t_math(x, log2_t, spec), (x, log2_t)
+
+
+def _fq_log_t_bwd(spec, res, g):
+    x, log2_t = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    t = jnp.maximum(jnp.exp2(_bcast(log2_t, x, spec).astype(jnp.float32)),
+                    _EPS)
+    inside = jnp.abs(xf) <= t
+    dx = jnp.where(inside, gf, 0.0).astype(x.dtype)
+    scale = spec.levels / t
+    y = jnp.clip(jnp.round(xf * scale), spec.qmin, spec.qmax) / scale
+    dy_dt = jnp.where(inside, (y - xf) / t, jnp.sign(xf))
+    dlog_full = gf * dy_dt * _LN2 * t
+    if jnp.ndim(log2_t) == 0:
+        dlog = jnp.sum(dlog_full)
+    else:
+        axes = tuple(
+            i for i in range(x.ndim) if i != (spec.channel_axis % x.ndim)
+        )
+        dlog = jnp.sum(dlog_full, axis=axes).reshape(jnp.shape(log2_t))
+    return dx, dlog.astype(jnp.result_type(log2_t))
+
+
+fake_quant_log_t.defvjp(_fq_log_t_fwd, _fq_log_t_bwd)
+
+
+# ---------------------------------------------------------------------------
 # Real integer quantization (serving path)
 # ---------------------------------------------------------------------------
 

@@ -71,13 +71,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.packing import unpack_int4
 from repro.kernels.tpu_compat import tpu_compiler_params
 
 NEG_INF = -1e30
 
 
 def _kernel(tab_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, o_ref,
-            acc_ref, m_ref, l_ref, *, n_s: int, block_s: int, dim: int):
+            acc_ref, m_ref, l_ref, *, n_s: int, block_s: int, dim: int,
+            kv_bits: int):
     # tab_ref is the scalar-prefetch block table: consumed by the K/V
     # index maps (page steering), never by the compute body
     del tab_ref
@@ -93,7 +95,13 @@ def _kernel(tab_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, o_ref,
     # uniform within the head, so (q*c) @ k_int8 == c * (q @ k)
     c = ks_ref[0, 0] * jax.lax.rsqrt(jnp.asarray(dim, jnp.float32))
     q = q_ref[0, 0].astype(jnp.float32) * c          # (G, D)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bs, D) dequant-free
+    k = k_ref[0, :, 0, :]                            # (bs, D) — D/2 packed
+    if kv_bits == 4:
+        # the ONE extra op of the int4 lane: nibbles -> int8 in VMEM,
+        # before the f32 cast the int8 path already does.  Scales carry
+        # T/7 instead of T/127, so the fold below is unchanged.
+        k = unpack_int4(k, axis=-1)
+    k = k.astype(jnp.float32)                        # (bs, D) dequant-free
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -112,7 +120,10 @@ def _kernel(tab_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, o_ref,
     # re-mask: an all-masked tile has s == m_new == NEG_INF and exp(0) == 1
     p = jnp.where(valid, jnp.exp(s - m_new), 0.0)    # (G, bs)
     l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)        # (bs, D)
+    v = v_ref[0, :, 0, :]                            # (bs, D)
+    if kv_bits == 4:
+        v = unpack_int4(v, axis=-1)
+    v = v.astype(jnp.float32)
     acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -126,11 +137,12 @@ def _kernel(tab_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, o_ref,
         o_ref[0, 0] = o.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("out_dtype", "interpret", "kv_bits"))
 def decode_attention_tiles(
     q: jax.Array,          # (B, KV, G, D) float — one query token, GQA view
-    k_pool: jax.Array,     # (pages, block_s, KV, D) int8 or float tiles
-    v_pool: jax.Array,     # (pages, block_s, KV, D)
+    k_pool: jax.Array,     # (pages, block_s, KV, D) int8/float (D/2 packed
+    v_pool: jax.Array,     # (pages, block_s, KV, D)   bytes at kv_bits=4)
     block_tab: jax.Array,  # (B, n_blocks) int32 page per (row, logical blk)
     k_scale: jax.Array,    # (KV,) f32 per-head dequant scale
     v_scale: jax.Array,    # (KV,) f32 per-head dequant scale
@@ -138,24 +150,35 @@ def decode_attention_tiles(
     *,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    kv_bits: int = 8,
 ):
     """Kernel core: fused one-token decode over block-table-mapped KV
     tiles.  The dense layout passes a free reshape of its cache plus the
     identity table (``decode_attention_int8``); the paged layout passes
-    its pool/table directly — same compiled kernel either way."""
+    its pool/table directly — same compiled kernel either way.
+
+    ``kv_bits == 4``: K/V tiles hold packed nibbles (D/2 bytes wide) and
+    the kernel body unpacks them in VMEM right before the f32 cast.  The
+    block table and index maps are UNCHANGED — they address blocks, not
+    bytes; only the tile's last BlockSpec dim halves."""
     b, kvh, g, d = q.shape
+    dp = k_pool.shape[-1]  # storage width (D, or D/2 packed)
+    assert dp * (2 if kv_bits == 4 else 1) == d, (
+        f"kv_bits={kv_bits}: pool head dim {dp} does not match q head "
+        f"dim {d}")
     bs = k_pool.shape[1]
     n_s = block_tab.shape[1]
 
-    kernel = functools.partial(_kernel, n_s=n_s, block_s=bs, dim=d)
+    kernel = functools.partial(_kernel, n_s=n_s, block_s=bs, dim=d,
+                               kv_bits=kv_bits)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, kvh, n_s),
         in_specs=[
             pl.BlockSpec((1, 1, g, d), lambda bi, h, si, tab: (bi, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, d),
+            pl.BlockSpec((1, bs, 1, dp),
                          lambda bi, h, si, tab: (tab[bi, si], 0, h, 0)),
-            pl.BlockSpec((1, bs, 1, d),
+            pl.BlockSpec((1, bs, 1, dp),
                          lambda bi, h, si, tab: (tab[bi, si], 0, h, 0)),
             pl.BlockSpec((1, 1), lambda bi, h, si, tab: (h, 0)),
             pl.BlockSpec((1, 1), lambda bi, h, si, tab: (h, 0)),
@@ -187,11 +210,12 @@ def decode_attention_tiles(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_s", "out_dtype", "interpret"))
+    jax.jit,
+    static_argnames=("block_s", "out_dtype", "interpret", "kv_bits"))
 def decode_attention_int8(
     q: jax.Array,        # (B, KV, G, D) float — one query token, GQA view
-    k_cache: jax.Array,  # (B, S, KV, D) int8 (or float with scales == 1)
-    v_cache: jax.Array,  # (B, S, KV, D) int8 (or float with scales == 1)
+    k_cache: jax.Array,  # (B, S, KV, D) int8 (or float with scales == 1;
+    v_cache: jax.Array,  # (B, S, KV, D)  D/2 packed bytes at kv_bits=4)
     k_scale: jax.Array,  # (KV,) f32 per-head dequant scale
     v_scale: jax.Array,  # (KV,) f32 per-head dequant scale
     cur_pos: jax.Array,  # int32 valid-slot count: scalar or per-slot (B,)
@@ -199,6 +223,7 @@ def decode_attention_int8(
     block_s: int = 128,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    kv_bits: int = 8,
 ):
     """Dense entry point: contiguous (B, S, KV, D) caches degenerate to
     the identity block table over a leading-axis reshape of the same
@@ -210,6 +235,7 @@ def decode_attention_int8(
     batching, where a 0 entry marks an inactive slot (output zeros).
     """
     b, kvh, g, d = q.shape
+    d = k_cache.shape[-1]  # storage width (packed bytes at kv_bits == 4)
     s = k_cache.shape[1]
     # prefer a sublane-aligned tile that divides S exactly: a pad here
     # copies the WHOLE cache every decode step (it cannot be hoisted out
@@ -234,7 +260,7 @@ def decode_attention_int8(
     tab = jnp.arange(b * n_s, dtype=jnp.int32).reshape(b, n_s)
     return decode_attention_tiles(
         q, k_pool, v_pool, tab, k_scale, v_scale, cur_pos,
-        out_dtype=out_dtype, interpret=interpret)
+        out_dtype=out_dtype, interpret=interpret, kv_bits=kv_bits)
 
 
 def _scratch(g, d):

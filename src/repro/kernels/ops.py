@@ -68,14 +68,15 @@ def decode_attention_view(q, view, k_scale, v_scale, cur_pos, **kw):
     """Fused decode over a cache's ``KernelView`` (repro.cache): a dense/
     ring view (``block_table is None``) routes through the identity-table
     entry point, a paged view streams its page pool through the same
-    kernel body via the block table."""
+    kernel body via the block table.  ``view.bits`` picks the dequant
+    epilogue (int4 views unpack nibbles in-kernel)."""
     if view.block_table is None:
         return _da.decode_attention_int8(
             q, view.k, view.v, k_scale, v_scale, cur_pos,
-            interpret=_interpret(), **kw)
+            interpret=_interpret(), kv_bits=view.bits, **kw)
     return _da.decode_attention_tiles(
         q, view.k, view.v, view.block_table, k_scale, v_scale, cur_pos,
-        interpret=_interpret(), **kw)
+        interpret=_interpret(), kv_bits=view.bits, **kw)
 
 
 def prefill_attention(q, k, v, k_scale, v_scale, q_start, kv_len, **kw):
@@ -97,14 +98,15 @@ prefill_attention_ref = _ref.prefill_attention_ref
 def prefill_attention_view(q, view, k_scale, v_scale, q_start, kv_len,
                            **kw):
     """Fused prefill over a cache's ``KernelView`` (repro.cache); same
-    dense-vs-paged routing as ``decode_attention_view``."""
+    dense-vs-paged (and ``view.bits``) routing as
+    ``decode_attention_view``."""
     if view.block_table is None:
         return _pa.prefill_attention_int8(
             q, view.k, view.v, k_scale, v_scale, q_start, kv_len,
-            interpret=_interpret(), **kw)
+            interpret=_interpret(), kv_bits=view.bits, **kw)
     return _pa.prefill_attention_tiles(
         q, view.k, view.v, view.block_table, k_scale, v_scale, q_start,
-        kv_len, interpret=_interpret(), **kw)
+        kv_len, interpret=_interpret(), kv_bits=view.bits, **kw)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))

@@ -87,6 +87,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.packing import unpack_int4
 from repro.kernels.tpu_compat import tpu_compiler_params
 
 NEG_INF = -1e30
@@ -95,7 +96,7 @@ NEG_INF = -1e30
 def _kernel(tab_ref, qs_ref, kl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
             o_ref, acc_ref, m_ref, l_ref, *, n_k: int, block_q: int,
             block_k: int, groups: int, dim: int, causal: bool,
-            window: int | None):
+            window: int | None, kv_bits: int):
     # tab_ref: scalar-prefetch block table — consumed by the K/V index
     # maps only; positions below are logical.  qs_ref/kl_ref are the
     # per-request (B,) q_start / kv_len vectors, shared with the index
@@ -131,7 +132,13 @@ def _kernel(tab_ref, qs_ref, kl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
         # within a head, so (q*c) @ k_int8 == c * (q @ k)
         c = ks_ref[0, 0] * jax.lax.rsqrt(jnp.asarray(dim, jnp.float32))
         q = q_ref[0, 0].astype(jnp.float32) * c          # (block_q*G, D)
-        k = k_ref[0, :, 0, :].astype(jnp.float32)        # (block_k, D)
+        k = k_ref[0, :, 0, :]                            # (block_k, D)
+        if kv_bits == 4:
+            # int4 lane: one nibble unpack in VMEM before the f32 cast
+            # the int8 path already pays; scales carry T/7, so the
+            # q-fold above is unchanged
+            k = unpack_int4(k, axis=-1)
+        k = k.astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -155,7 +162,10 @@ def _kernel(tab_ref, qs_ref, kl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
         # re-mask: an all-masked row has s == m_new == NEG_INF and exp(0) == 1
         p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
         l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-        v = v_ref[0, :, 0, :].astype(jnp.float32)        # (block_k, D)
+        v = v_ref[0, :, 0, :]                            # (block_k, D)
+        if kv_bits == 4:
+            v = unpack_int4(v, axis=-1)
+        v = v.astype(jnp.float32)
         acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -178,11 +188,11 @@ def _fit_block(s: int, target: int) -> int:
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "block_q", "out_dtype",
-                     "interpret", "dma_skip"))
+                     "interpret", "dma_skip", "kv_bits"))
 def prefill_attention_tiles(
     q: jax.Array,          # (B, Sq, KV, G, D) float — prompt queries
-    k_pool: jax.Array,     # (pages, block_k, KV, D) int8 or float tiles
-    v_pool: jax.Array,     # (pages, block_k, KV, D)
+    k_pool: jax.Array,     # (pages, block_k, KV, D) int8/float (D/2 packed
+    v_pool: jax.Array,     # (pages, block_k, KV, D)   bytes at kv_bits=4)
     block_tab: jax.Array,  # (B, KV-chunks) int32 page per logical block
     k_scale: jax.Array,    # (KV,) f32 per-head dequant scale
     v_scale: jax.Array,    # (KV,) f32 per-head dequant scale
@@ -195,6 +205,7 @@ def prefill_attention_tiles(
     out_dtype=jnp.float32,
     interpret: bool = False,
     dma_skip: bool = True,
+    kv_bits: int = 8,
 ):
     """Kernel core: fused multi-query-row flash attention over
     block-table-mapped KV tiles.  Returns (B, Sq, KV, G, D).
@@ -203,9 +214,16 @@ def prefill_attention_tiles(
     each slot's draft window at its own offset through this one
     executable (a scalar broadcasts — chunked prefill's uniform offset).
     ``dma_skip=False`` disables the masked-tile index-map clamp (see
-    module docstring), for parity testing only.
+    module docstring), for parity testing only.  ``kv_bits == 4``: K/V
+    tiles hold packed nibbles (D/2 bytes) unpacked in the kernel body;
+    index maps (including the DMA-skip clamp) are unchanged — they
+    address blocks, not bytes.
     """
     b, sq, kvh, g, d = q.shape
+    dp = k_pool.shape[-1]  # storage width (D, or D/2 packed)
+    assert dp * (2 if kv_bits == 4 else 1) == d, (
+        f"kv_bits={kv_bits}: pool head dim {dp} does not match q head "
+        f"dim {d}")
     bk = k_pool.shape[1]
     n_k = block_tab.shape[1]
 
@@ -224,7 +242,7 @@ def prefill_attention_tiles(
 
     kernel = functools.partial(
         _kernel, n_k=n_k, block_q=bq, block_k=bk, groups=g, dim=d,
-        causal=causal, window=window)
+        causal=causal, window=window, kv_bits=kv_bits)
 
     def kv_index(bi, h, qi, ki, tab, qs, kl):
         if dma_skip:
@@ -250,8 +268,8 @@ def prefill_attention_tiles(
         in_specs=[
             pl.BlockSpec((1, 1, rows, d),
                          lambda bi, h, qi, ki, tab, qs, kl: (bi, h, qi, 0)),
-            pl.BlockSpec((1, bk, 1, d), kv_index),
-            pl.BlockSpec((1, bk, 1, d), kv_index),
+            pl.BlockSpec((1, bk, 1, dp), kv_index),
+            pl.BlockSpec((1, bk, 1, dp), kv_index),
             pl.BlockSpec((1, 1), lambda bi, h, qi, ki, tab, qs, kl: (h, 0)),
             pl.BlockSpec((1, 1), lambda bi, h, qi, ki, tab, qs, kl: (h, 0)),
         ],
@@ -284,11 +302,11 @@ def prefill_attention_tiles(
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "block_q", "block_k", "out_dtype",
-                     "interpret", "dma_skip"))
+                     "interpret", "dma_skip", "kv_bits"))
 def prefill_attention_int8(
     q: jax.Array,        # (B, Sq, KV, G, D) float — prompt queries, GQA view
-    k: jax.Array,        # (B, Sk, KV, D) int8 (or float with scales == 1)
-    v: jax.Array,        # (B, Sk, KV, D) int8 (or float with scales == 1)
+    k: jax.Array,        # (B, Sk, KV, D) int8 (or float with scales == 1;
+    v: jax.Array,        # (B, Sk, KV, D)  D/2 packed bytes at kv_bits=4)
     k_scale: jax.Array,  # (KV,) f32 per-head dequant scale
     v_scale: jax.Array,  # (KV,) f32 per-head dequant scale
     q_start: jax.Array,  # scalar or (B,) int32: position of query row 0
@@ -301,6 +319,7 @@ def prefill_attention_int8(
     out_dtype=jnp.float32,
     interpret: bool = False,
     dma_skip: bool = True,
+    kv_bits: int = 8,
 ):
     """Dense entry point: a contiguous (B, Sk, KV, D) KV stream
     degenerates to the identity block table over a free leading-axis
@@ -322,7 +341,7 @@ def prefill_attention_int8(
     return prefill_attention_tiles(
         q, k_pool, v_pool, tab, k_scale, v_scale, q_start, kv_len,
         causal=causal, window=window, block_q=block_q, out_dtype=out_dtype,
-        interpret=interpret, dma_skip=dma_skip)
+        interpret=interpret, dma_skip=dma_skip, kv_bits=kv_bits)
 
 
 def _scratch(rows, d):

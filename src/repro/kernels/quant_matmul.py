@@ -27,23 +27,32 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.packing import unpack_int4
 from repro.kernels.tpu_compat import tpu_compiler_params
 
 
 def _kernel(x_ref, w_ref, sw_ref, sa_ref, o_ref, acc_ref, *, n_k: int,
-            qmin: float, qmax: float):
+            qmin: float, qmax: float, w_bits: int):
     @pl.when(pl.program_id(2) == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # fused activation quantization (VPU) — static threshold scale
+    # fused activation quantization (VPU) — static threshold scale;
+    # activations stay int8 regardless of the weight width
     s_a = sa_ref[0, 0]
     x = x_ref[...].astype(jnp.float32) * s_a
     x_q = jnp.clip(jnp.round(x), qmin, qmax).astype(jnp.int8)
 
-    # int8 x int8 -> int32 on the MXU
+    w = w_ref[...]
+    if w_bits == 4:
+        # int4 weights ride packed along K (two K rows per stored byte);
+        # one VMEM unpack restores the (bk, bn) int8 tile the MXU eats
+        w = unpack_int4(w, axis=0)
+
+    # int8 x int8 -> int32 on the MXU (int4 weights are int8-resident
+    # values in [-7, 7] after the unpack)
     acc_ref[...] += jax.lax.dot_general(
-        x_q, w_ref[...], (((1,), (0,)), ((), ())),
+        x_q, w, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32,
     )
 
@@ -57,11 +66,12 @@ def _kernel(x_ref, w_ref, sw_ref, sa_ref, o_ref, acc_ref, *, n_k: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype",
+                     "interpret", "w_bits"),
 )
 def quant_matmul(
     x: jax.Array,        # (M, K) float (bf16/f32) activations
-    w_q: jax.Array,      # (K, N) int8 weights
+    w_q: jax.Array,      # (K, N) int8 weights — (K/2, N) packed at w_bits=4
     w_scale: jax.Array,  # (N,) f32 combined dequant scale (already / s_a)
     act_scale: jax.Array,  # scalar f32: levels / T_adj (quantization scale)
     *,
@@ -70,6 +80,7 @@ def quant_matmul(
     block_k: int = 512,
     out_dtype=jnp.bfloat16,
     interpret: bool = False,
+    w_bits: int = 8,
 ):
     """Fused quantize -> int8 matmul -> dequant.
 
@@ -77,10 +88,16 @@ def quant_matmul(
     chosen MXU-aligned.  M is the token dim and ragged at decode (M = B*1);
     it is padded up to a sublane-aligned tile and the pad rows sliced off,
     so the same kernel serves prefill (M large) and decode (M = 1..8).
+
+    ``w_bits == 4``: weights arrive nibble-packed along K (pack_int4 on
+    axis 0 — half the resident weight bytes), quantized to ±7 with the
+    per-channel ``w_scale`` carrying T/7; the kernel unpacks each VMEM
+    tile before the MXU dot, so the N BlockSpec and the (N,) scale
+    mapping are untouched.
     """
     m0, k = x.shape
     k2, n = w_q.shape
-    assert k == k2, (x.shape, w_q.shape)
+    assert k == k2 * (2 if w_bits == 4 else 1), (x.shape, w_q.shape, w_bits)
     # M tiling: sublane-align (f32 min tile is (8, 128)), then prefer an
     # exact-divisor tile (zero pad rows) but never shrink below a quarter
     # of block_m — a tiny bm turns the MXU matmul into a long sequential
@@ -100,16 +117,22 @@ def quant_matmul(
     assert n % bn == 0 and k % bk == 0, (
         f"weight dims (K={k}, N={n}) not tiled by (bk={bk}, bn={bn})"
     )
+    # packed weights halve the K BlockSpec dim: tile kk covers logical
+    # rows [kk*bk, (kk+1)*bk) either way, so the index map is unchanged
+    bkw = bk // 2 if w_bits == 4 else bk
+    assert bkw * (2 if w_bits == 4 else 1) == bk, (
+        f"int4 weight K tile must be even, got bk={bk}")
     n_k = k // bk
     grid = (m // bm, n // bn, n_k)
 
-    kernel = functools.partial(_kernel, n_k=n_k, qmin=-127.0, qmax=127.0)
+    kernel = functools.partial(_kernel, n_k=n_k, qmin=-127.0, qmax=127.0,
+                               w_bits=w_bits)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bkw, bn), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
             pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
         ],

@@ -4,9 +4,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.packing import unpack_int4
 
-def quant_matmul_ref(x, w_q, w_scale, act_scale, out_dtype=jnp.bfloat16):
-    """Oracle for kernels.quant_matmul: quantize -> int8 matmul -> dequant."""
+
+def quant_matmul_ref(x, w_q, w_scale, act_scale, out_dtype=jnp.bfloat16,
+                     w_bits=8):
+    """Oracle for kernels.quant_matmul: quantize -> int8 matmul -> dequant.
+
+    ``w_bits == 4``: w_q arrives nibble-packed along K ((K/2, N) bytes).
+    """
+    if w_bits == 4:
+        w_q = unpack_int4(w_q, axis=0)
     x_q = jnp.clip(
         jnp.round(x.astype(jnp.float32) * act_scale), -127, 127
     ).astype(jnp.int8)
@@ -17,11 +25,12 @@ def quant_matmul_ref(x, w_q, w_scale, act_scale, out_dtype=jnp.bfloat16):
 
 
 def decode_attention_ref(q, k_cache, v_cache, k_scale, v_scale, cur_pos,
-                         out_dtype=jnp.float32):
+                         out_dtype=jnp.float32, kv_bits=8):
     """Oracle for kernels.decode_attention_int8: dequantize the cache,
     masked softmax over valid positions, GQA-grouped output.
 
-    q: (B, KV, G, D); k/v_cache: (B, S, KV, D) int8 (or float);
+    q: (B, KV, G, D); k/v_cache: (B, S, KV, D) int8 (or float) — at
+    ``kv_bits == 4`` the caches are (B, S, KV, D/2) packed nibbles;
     k/v_scale: (KV,) dequant scales; cur_pos: valid cache length — a
     scalar (uniform batch) or a (B,) per-slot vector (continuous
     batching).  A row with cur_pos == 0 (empty cache / inactive slot)
@@ -29,6 +38,9 @@ def decode_attention_ref(q, k_cache, v_cache, k_scale, v_scale, cur_pos,
     """
     b = q.shape[0]
     d = q.shape[-1]
+    if kv_bits == 4:
+        k_cache = unpack_int4(k_cache, axis=-1, size=d)
+        v_cache = unpack_int4(v_cache, axis=-1, size=d)
     kf = k_cache.astype(jnp.float32) * k_scale.reshape(1, 1, -1, 1)
     vf = v_cache.astype(jnp.float32) * v_scale.reshape(1, 1, -1, 1)
     qf = q.astype(jnp.float32) / jnp.sqrt(jnp.asarray(d, jnp.float32))
@@ -42,16 +54,21 @@ def decode_attention_ref(q, k_cache, v_cache, k_scale, v_scale, cur_pos,
 
 
 def prefill_attention_ref(q, k, v, k_scale, v_scale, q_start, kv_len, *,
-                          causal=True, window=None, out_dtype=jnp.float32):
+                          causal=True, window=None, out_dtype=jnp.float32,
+                          kv_bits=8):
     """Oracle for kernels.prefill_attention_int8: dequantize the K/V
     stream, masked softmax per query row, GQA-grouped output.
 
-    q: (B, Sq, KV, G, D); k/v: (B, Sk, KV, D) int8 (or float);
+    q: (B, Sq, KV, G, D); k/v: (B, Sk, KV, D) int8 (or float) — at
+    ``kv_bits == 4`` they are (B, Sk, KV, D/2) packed nibbles;
     k/v_scale: (KV,) dequant scales; q_start: absolute position of query
     row 0 (scalar); kv_len: (B,) valid KV count per request.  Query rows
     with no visible key return zeros, matching the kernel.
     """
     b, sq, kvh, g, d = q.shape
+    if kv_bits == 4:
+        k = unpack_int4(k, axis=-1, size=d)
+        v = unpack_int4(v, axis=-1, size=d)
     sk = k.shape[1]
     kf = k.astype(jnp.float32) * k_scale.reshape(1, 1, -1, 1)
     vf = v.astype(jnp.float32) * v_scale.reshape(1, 1, -1, 1)

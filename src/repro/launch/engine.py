@@ -49,17 +49,31 @@ from repro.models import build_model
 
 
 def prepare_int8(model, cfg, policy, params, calib_batches, *,
-                 convert: bool = True):
+                 convert: bool = True, finetune_epochs: int = 0):
     """Calibration + int8 conversion (the paper's deployment pipeline).
 
     ``convert=False`` stops after calibration (bf16-weight ablations need
     the thresholds but not a second, immediately-discarded param pytree).
+    ``finetune_epochs`` > 0 inserts the paper's §3 threshold training
+    between calibration and conversion: finalize emits trainable
+    ``log2_t`` KV thresholds, ``steps.finetune_thresholds`` distills
+    them against the fp teacher over the same calibration batches, and
+    ``freeze_thresholds`` collapses the result back to the static
+    ``t_max`` form serving consumes — so everything downstream of this
+    function is byte-identical in shape either way.
     """
     qparams = A.init_qparams(model, params, policy)
     calib = jax.jit(ST.make_calibrate_step(model, cfg, policy))
+    calib_batches = list(calib_batches)
     for b in calib_batches:
         qparams = calib(params, qparams, b)
-    qparams = A.finalize_calibration(qparams, policy)
+    qparams = A.finalize_calibration(
+        qparams, policy, train_thresholds=finetune_epochs > 0)
+    if finetune_epochs > 0:
+        qparams, _losses = ST.finetune_thresholds(
+            model, cfg, policy, params, qparams, calib_batches,
+            epochs=finetune_epochs)
+        qparams = A.freeze_thresholds(qparams)
     serve_params = (A.convert_to_int8(model, params, qparams, policy)
                     if convert else params)
     return serve_params, qparams
@@ -159,7 +173,8 @@ class Engine:
     def from_checkpoint(cls, arch: str = "smollm-135m", *,
                         checkpoint_dir: Optional[str] = None,
                         smoke: bool = True, fp: bool = False,
-                        kv_int8: bool = True,
+                        kv_int8: bool = True, kv_bits: int = 8,
+                        finetune_thresholds: int = 0,
                         use_pallas: Optional[bool] = None,
                         calib_batches: Optional[Sequence] = None,
                         n_calib: int = 2, calib_batch: int = 4,
@@ -170,9 +185,14 @@ class Engine:
         ``checkpoint_dir`` restores the newest ``{"params": ...}`` tree
         written by launch/train.py (mesh-agnostic restore); without one,
         params are seeded random init (smoke/bench usage).  ``fp`` serves
-        bf16 weights (baseline); ``kv_int8`` quantizes the KV cache.
-        ``calib_batches`` overrides the default data-pipeline calibration
-        stream (``n_calib`` batches of (calib_batch, calib_len) tokens).
+        bf16 weights (baseline); ``kv_int8`` quantizes the KV cache and
+        ``kv_bits`` picks its width (8, or 4 = packed nibbles — quarter
+        of the bf16 cache bytes).  ``finetune_thresholds`` > 0 trains
+        the KV thresholds by distillation for that many epochs before
+        freezing (paper §3; the knob that makes the 7-level int4 grid
+        usable when max-abs calibration over-shoots).  ``calib_batches``
+        overrides the default data-pipeline calibration stream
+        (``n_calib`` batches of (calib_batch, calib_len) tokens).
         Remaining ``engine_kw`` go to ``Engine.__init__`` (cache_layout,
         page_size, temperature, ...).
         """
@@ -180,7 +200,8 @@ class Engine:
         model = build_model(cfg)
         use_pallas = (jax.default_backend() == "tpu" if use_pallas is None
                       else use_pallas)
-        policy = A.QuantPolicy(kv_int8=kv_int8, use_pallas=use_pallas)
+        policy = A.QuantPolicy(kv_int8=kv_int8, kv_bits=kv_bits,
+                               use_pallas=use_pallas)
         params = model.init(jax.random.PRNGKey(init_seed))
         if checkpoint_dir is not None:
             from repro.checkpoint.manager import CheckpointManager
@@ -203,7 +224,8 @@ class Engine:
             # int8 weights and/or int8 KV both need the calibration pass;
             # bf16-weight ablations skip the weight conversion
             serve_params, qparams = prepare_int8(
-                model, cfg, policy, params, calib_batches, convert=not fp)
+                model, cfg, policy, params, calib_batches, convert=not fp,
+                finetune_epochs=finetune_thresholds)
         return cls(model, cfg, policy, serve_params, qparams, mode=mode,
                    **engine_kw)
 
@@ -213,10 +235,12 @@ class Engine:
                    if l.dtype == jnp.int8)
 
     def init_cache(self, batch: int, max_len: int, **kw):
-        """Engine-configured cache: layout/page_size/kv_int8 applied."""
+        """Engine-configured cache: layout/page_size/kv_int8/kv_bits
+        applied."""
         kw.setdefault("kv_int8", bool(self.policy.kv_int8))
         kw.setdefault("layout", self.cache_layout)
         kw.setdefault("page_size", self.page_size)
+        kw.setdefault("kv_bits", int(self.policy.kv_bits))
         return self.model.init_cache(batch, max_len, self.cfg.dtype, **kw)
 
     def _cache_len(self, prompt_len: int, gen: int) -> int:

@@ -381,13 +381,14 @@ class SlotScheduler:
         # the template, so one allocation serves every admission)
         self._slot_cache0 = model.init_cache(1, cache_len, cfg.dtype,
                                              kv_int8=kv_int8,
-                                             layout="dense")
+                                             layout="dense",
+                                             kv_bits=policy.kv_bits)
         # the resident batch cache lives on the instance so page contents
         # (and the prefix store pointing into them) survive across run()s
         self._cache = model.init_cache(
             max_slots, cache_len, cfg.dtype, kv_int8=kv_int8,
             layout=cache_layout, page_size=page_size,
-            extra_pages=self._prefix_pages)
+            extra_pages=self._prefix_pages, kv_bits=policy.kv_bits)
 
         # paged bookkeeping: slot-private page rows + the shared-region
         # prefix store (host-side; device content lives in the pool)

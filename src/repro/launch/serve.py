@@ -43,6 +43,8 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
       --requests 4 --prompt-len 32 --gen 16
   Flags: --fp (bf16 weights baseline)  --no-kv-int8 (bf16 KV cache)
+         --kv-bits {8,4} (int4 packed KV cache at 4)
+         --finetune-thresholds N (train KV thresholds by distillation)
          --loop (per-token dispatch instead of the scanned loop)
          --pallas (fused kernels; defaults on for TPU backends)
          --prefill-chunk N (chunked ragged prefill)
@@ -208,6 +210,13 @@ def main():
                     help="serve in bf16 instead of int8 (baseline)")
     ap.add_argument("--no-kv-int8", action="store_true",
                     help="keep the KV cache bf16 (kv ablation)")
+    ap.add_argument("--kv-bits", type=int, default=8, choices=[8, 4],
+                    help="quantized KV cache width: 8 (int8) or 4 (packed "
+                         "int4 nibbles — quarter of the bf16 cache bytes)")
+    ap.add_argument("--finetune-thresholds", type=int, default=0,
+                    help="train the KV quantization thresholds by "
+                         "distillation for N epochs (<= 8) before freezing "
+                         "them (paper §3); 0 = static §2 calibration only")
     ap.add_argument("--loop", action="store_true",
                     help="legacy per-token Python loop (vs lax.scan)")
     ap.add_argument("--pallas", action="store_true", default=None,
@@ -326,7 +335,8 @@ def main():
                   else args.pallas)
     engine = Engine.from_checkpoint(
         args.arch, checkpoint_dir=args.ckpt_dir, smoke=args.smoke,
-        fp=args.fp, kv_int8=not args.no_kv_int8, use_pallas=use_pallas,
+        fp=args.fp, kv_int8=not args.no_kv_int8, kv_bits=args.kv_bits,
+        finetune_thresholds=args.finetune_thresholds, use_pallas=use_pallas,
         calib_batch=args.requests, calib_len=args.prompt_len,
         cache_layout=args.cache_layout, page_size=args.page_size,
         prefill_chunk=args.prefill_chunk, temperature=args.temperature,
@@ -356,7 +366,8 @@ def main():
                                                         args.gen)))
         n_kv8 = sum(1 for l in jax.tree.leaves(abstract)
                     if l.dtype == jnp.int8)
-        print(f"[serve] kv cache: {n_kv8} int8 KV tensors resident "
+        kind = ("packed-int4" if engine.policy.kv_bits == 4 else "int8")
+        print(f"[serve] kv cache: {n_kv8} {kind} KV tensors resident "
               f"({engine.cache_layout} layout)")
 
     res = engine.generate_batch(batch, args.gen,

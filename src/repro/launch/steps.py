@@ -147,6 +147,42 @@ def make_fat_train_step(model, cfg, policy: A.QuantPolicy,
     return train_step
 
 
+def finetune_thresholds(model, cfg, policy: A.QuantPolicy, params, qparams,
+                        batches, *, epochs: int = 4,
+                        hp: TrainHParams = TrainHParams()):
+    """Train the quantization thresholds by distillation (paper §3 + TQT).
+
+    Runs the existing FAT QAT step — fp teacher vs fake-quant student,
+    RMSE on pre-softmax logits, Adam masked to the trainable qparams
+    leaves — over ``epochs`` passes of a small calibration set.  With
+    ``finalize_calibration(..., train_thresholds=True)`` qparams the
+    trainable set includes the per-head KV ``log2_t`` thresholds (the
+    attention fake-mode hook quantizes the KV stream through them), so a
+    handful of epochs repairs max-abs thresholds that an outlier in the
+    calibration data blew up — exactly the paper's pitch, applied to the
+    int4 cache where the 7-level grid makes threshold quality decisive.
+
+    ``epochs`` is capped at 8: the paper's method converges within a few
+    epochs on a small unlabeled set, and the cap keeps serving bring-up
+    (engine --finetune-thresholds) bounded.  Returns
+    ``(qparams, losses)`` — per-step distill losses, first entry the
+    pre-training loss (tests pin strict decrease against it).
+    """
+    if not 1 <= epochs <= 8:
+        raise ValueError(f"epochs must be in [1, 8], got {epochs}")
+    batches = list(batches)
+    if not batches:
+        raise ValueError("finetune_thresholds needs >= 1 calibration batch")
+    train_step = jax.jit(make_fat_train_step(model, cfg, policy, hp))
+    opt = adam_init(qparams)
+    losses = []
+    for _ in range(epochs):
+        for batch in batches:
+            qparams, opt, metrics = train_step(params, qparams, opt, batch)
+            losses.append(float(metrics["loss"]))
+    return qparams, losses
+
+
 def make_pretrain_step(model, cfg, hp: TrainHParams = TrainHParams()):
     def pretrain_step(params, opt_state: AdamState, batch):
         def loss_fn(params):

@@ -42,12 +42,17 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--finetune-thresholds", action="store_true",
+                    help="fat_qat: also calibrate the per-head KV cache "
+                         "thresholds and train them as log2-domain scale "
+                         "factors (TQT) alongside the activation alphas")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
-    policy = A.QuantPolicy()
+    # training KV thresholds needs the KV observers in the qparams tree
+    policy = A.QuantPolicy(kv_int8=args.finetune_thresholds)
     shape = ShapeSpec("cli", "train", args.seq, args.batch)
     spec = DP.spec_for(cfg, shape)
     hp = ST.TrainHParams(base_lr=args.lr)
@@ -75,7 +80,9 @@ def main():
                 DP.calibration_batches(spec, args.calib_batches)
             ):
                 qparams = calib(params, qparams, b)
-            qparams = A.finalize_calibration(qparams, policy)
+            qparams = A.finalize_calibration(
+                qparams, policy,
+                train_thresholds=args.finetune_thresholds)
             print(f"[train] calibrated {len(qparams)} quant points on "
                   f"{args.calib_batches} unlabeled batches")
         if opt is None:

@@ -44,7 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.cache import (DenseCache, KVCache, KV_LEVELS, RingCache,
-                         dequantize_kv, make_cache, quantize_kv)
+                         dequantize_kv, kv_levels, make_cache, quantize_kv)
 from repro.models.layers import apply_rotary, rotary_angles
 from repro.models.module import Dense, Module
 
@@ -321,21 +321,25 @@ class Attention(Module):
     # -- cache ------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
                    kv_int8: bool = False, layout: str = "ring",
-                   page_size: int = 64, extra_pages: int = 0) -> KVCache:
+                   page_size: int = 64, extra_pages: int = 0,
+                   kv_bits: int = 8) -> KVCache:
         """Build this layer's ``KVCache`` (repro.cache.make_cache picks
         dense / SWA-ring / paged from ``layout`` and the layer's window).
         ``kv_int8`` stores entries as int8 + per-head f32 dequant scales
         (half the bf16 HBM stream — the decode bandwidth win); scales
         start at 1 and are written from the calibrated thresholds during
-        prefill.  Cross-attention memory stays float and dense (computed
-        once per request, not the decode bottleneck)."""
+        prefill.  ``kv_bits=4`` narrows the quantized store to packed
+        int4 nibbles (quarter of bf16).  Cross-attention memory stays
+        float and dense (computed once per request, not the decode
+        bottleneck)."""
         if self.cross:
             return DenseCache.init(batch, max_len, self.n_kv, self.head_dim,
                                    dtype=dtype, quantized=False)
         return make_cache(batch, max_len, self.n_kv, self.head_dim,
                           dtype=dtype, quantized=kv_int8, layout=layout,
                           window=self.window, page_size=page_size,
-                          extra_pages=extra_pages)
+                          extra_pages=extra_pages,
+                          bits=kv_bits if kv_int8 else 8)
 
     def _observe_kv(self, ctx, k, v):
         """Feed post-rope K / raw V into the KV calibration observers
@@ -356,8 +360,29 @@ class Attention(Module):
             "v": calib.update_observer(ent["v"], v, spec, **kw),
         }
 
+    def _fake_quant_kv(self, ctx, k, v):
+        """Trained-threshold fake-quant of the KV stream (paper §3 applied
+        to the cache): fires in fake mode ONLY when finalize_calibration
+        emitted trainable ``log2_t`` leaves, so the static-threshold
+        training path is bit-identical to before.  This is the
+        differentiable stand-in for ``cache.ready`` — the distill loss
+        sees exactly the quantization error serving will pay, and the TQT
+        backward moves the per-head thresholds."""
+        if ctx is None or ctx.mode != "fake":
+            return k, v
+        from repro.core import api as A
+        from repro.core import quant as Q
+
+        ent = ctx.qparams.get(A.kv_path(self.path))
+        if not ent or "log2_t" not in ent.get("k", {}):
+            return k, v
+        spec = ctx.policy.kv_spec()
+        return (Q.fake_quant_log_t(k, ent["k"]["log2_t"], spec),
+                Q.fake_quant_log_t(v, ent["v"]["log2_t"], spec))
+
     def _kv_scales(self, ctx) -> tuple[jax.Array, jax.Array]:
-        """Frozen per-head dequant scales T/127 from calibrated qparams."""
+        """Frozen per-head dequant scales T/levels from calibrated
+        qparams (levels = 127 at kv_bits=8, 7 at kv_bits=4)."""
         from repro.core import api as A
 
         ent = None if ctx is None else ctx.qparams.get(A.kv_path(self.path))
@@ -373,8 +398,9 @@ class Attention(Module):
                 "init_qparams, the calibration pass, then "
                 "finalize_calibration)"
             )
-        k_s = (jnp.maximum(ent["k"]["t_max"], 1e-8) / KV_LEVELS)
-        v_s = (jnp.maximum(ent["v"]["t_max"], 1e-8) / KV_LEVELS)
+        levels = kv_levels(ctx.policy.kv_bits)
+        k_s = (jnp.maximum(ent["k"]["t_max"], 1e-8) / levels)
+        v_s = (jnp.maximum(ent["v"]["t_max"], 1e-8) / levels)
         return k_s.astype(jnp.float32), v_s.astype(jnp.float32)
 
     def _qkv(self, params, x, ctx, kv_src=None):
@@ -414,6 +440,7 @@ class Attention(Module):
             k_pos = q_offset + jnp.arange(k.shape[1])
             q, k = self._rope(q, k, q_pos, k_pos)
             self._observe_kv(ctx, k, v)
+            k, v = self._fake_quant_kv(ctx, k, v)
 
             def windowed(q, k, v):
                 if self.window is not None and s > self.window:
@@ -537,11 +564,12 @@ class Attention(Module):
                 from repro.kernels import ops as kops
 
                 # attend the prompt's own cache-ready stream (identical
-                # tiles to what append just wrote)
+                # tiles to what append just wrote — packed nibbles at
+                # bits=4, hence kv_bits from the cache)
                 o = kops.prefill_attention(
                     q, kq, vq, *cache.scales(), jnp.int32(0),
                     jnp.full((b,), s, jnp.int32), causal=True,
-                    window=self.window,
+                    window=self.window, kv_bits=cache.bits,
                 ).astype(x.dtype)
             elif self.window is not None and s > self.window:
                 o = sliding_window_attention(q, k, v, window=self.window,

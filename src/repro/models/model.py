@@ -92,7 +92,8 @@ class CausalLM(Module):
     # -- serving --------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
                    kv_int8: bool = False, layout: str = "ring",
-                   page_size: int = 64, extra_pages: int = 0):
+                   page_size: int = 64, extra_pages: int = 0,
+                   kv_bits: int = 8):
         """``kv_int8`` allocates the KV cache as int8 + per-head f32 scales
         (see Attention.init_cache) — pair with QuantPolicy(kv_int8=True).
         ``layout`` picks the KV layout per repro.cache.make_cache: "ring"
@@ -100,7 +101,8 @@ class CausalLM(Module):
         (+ ``page_size`` / ``extra_pages`` for the shared-prefix pool)."""
         return self.stack.init_cache(batch, max_len, dtype, kv_int8=kv_int8,
                                      layout=layout, page_size=page_size,
-                                     extra_pages=extra_pages)
+                                     extra_pages=extra_pages,
+                                     kv_bits=kv_bits)
 
     def prefill(self, params, batch, cache, ctx=None):
         x = self.embed_inputs(params, batch, ctx)
@@ -238,11 +240,13 @@ class EncDecLM(Module):
 
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
                    kv_int8: bool = False, layout: str = "ring",
-                   page_size: int = 64, extra_pages: int = 0):
+                   page_size: int = 64, extra_pages: int = 0,
+                   kv_bits: int = 8):
         return self.decoder.init_cache(batch, max_len, dtype,
                                        kv_int8=kv_int8, layout=layout,
                                        page_size=page_size,
-                                       extra_pages=extra_pages)
+                                       extra_pages=extra_pages,
+                                       kv_bits=kv_bits)
 
     def prefill(self, params, batch, cache, ctx=None):
         memory = self.encode(params, batch["frames"], ctx)

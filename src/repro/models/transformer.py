@@ -134,13 +134,15 @@ class Block(Module):
     # -- caches -------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
                    kv_int8: bool = False, layout: str = "ring",
-                   page_size: int = 64, extra_pages: int = 0) -> dict:
+                   page_size: int = 64, extra_pages: int = 0,
+                   kv_bits: int = 8) -> dict:
         c = {}
         if hasattr(self, "attn"):
             c["attn"] = self.attn.init_cache(batch, max_len, dtype,
                                              kv_int8=kv_int8, layout=layout,
                                              page_size=page_size,
-                                             extra_pages=extra_pages)
+                                             extra_pages=extra_pages,
+                                             kv_bits=kv_bits)
         if hasattr(self, "mamba"):
             c["mamba"] = self.mamba.init_cache(batch)
         if self.cross:
@@ -488,9 +490,10 @@ class Stack(Module):
     # -- caches -------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
                    kv_int8: bool = False, layout: str = "ring",
-                   page_size: int = 64, extra_pages: int = 0):
+                   page_size: int = 64, extra_pages: int = 0,
+                   kv_bits: int = 8):
         kw = dict(kv_int8=kv_int8, layout=layout, page_size=page_size,
-                  extra_pages=extra_pages)
+                  extra_pages=extra_pages, kv_bits=kv_bits)
         if self.scanned and self.serve_homogeneous:
             one = self.template.init_cache(batch, max_len, dtype, **kw)
             # scale leaves init to ones, not zeros: a layer whose prefill

@@ -7,9 +7,12 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
+from repro.cache.base import (_safe_scale, dequantize_kv, kv_levels,
+                              quantize_kv)
 from repro.core import quant as Q
 from repro.core.equalization import pair_rescale
 from repro.core.folding import fold_batchnorm
+from repro.core.packing import pack_int4, unpack_int4
 
 F32 = st.floats(min_value=-50.0, max_value=50.0, allow_nan=False,
                 width=32)
@@ -89,6 +92,74 @@ class TestQuantInvariants:
         beyond = np.abs(np.asarray(x)) > t_adj * (1 + 1e-6)
         np.testing.assert_allclose(
             np.abs(np.asarray(y)[beyond]), t_adj, rtol=1e-5)
+
+
+class TestInt4PackingInvariants:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(-8, 7), min_size=1, max_size=65))
+    def test_pack_unpack_roundtrip_lossless(self, vals):
+        """Every int4 value (all 16 nibbles), every length incl. odd —
+        pack then unpack is the identity."""
+        x = jnp.asarray(vals, jnp.int8)
+        p = pack_int4(x)
+        assert p.shape == ((len(vals) + 1) // 2,)
+        np.testing.assert_array_equal(
+            np.asarray(unpack_int4(p, size=len(vals))), np.asarray(x))
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 10000), st.integers(1, 4), st.integers(1, 16))
+    def test_pack_unpack_roundtrip_nd(self, seed, rows, cols):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.integers(-8, 8, size=(rows, cols)), jnp.int8)
+        p = pack_int4(x, axis=-1)
+        np.testing.assert_array_equal(
+            np.asarray(unpack_int4(p, axis=-1, size=cols)), np.asarray(x))
+
+
+class TestKVQuantInvariants:
+    @settings(max_examples=40, deadline=None)
+    @given(arrays(), st.sampled_from([4, 8]))
+    def test_quantize_dequantize_error_bounded_by_step(self, x, bits):
+        """|x - dq(q(x))| <= step/2 per head for any calibrated threshold,
+        at both KV bit widths (step = T / levels; 7 levels at int4)."""
+        x4 = jnp.asarray(x).reshape(1, x.shape[0], 1, x.shape[1])
+        if x4.shape[-1] % 2:
+            x4 = x4[..., :-1]
+        if x4.shape[-1] == 0:
+            return
+        t = jnp.max(jnp.abs(x4))
+        if float(t) == 0.0:
+            return
+        scale = jnp.asarray([t / kv_levels(bits)], jnp.float32)
+        y = dequantize_kv(quantize_kv(x4, scale, bits=bits), scale,
+                          bits=bits)
+        err = float(jnp.max(jnp.abs(x4 - y)))
+        assert err <= float(scale[0]) / 2 + 1e-5
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.floats(min_value=0.0, max_value=1e-12, allow_nan=True,
+                     width=32),
+           st.sampled_from([4, 8]), st.integers(0, 1000))
+    def test_threshold_floor_holds_for_degenerate_calibration(
+            self, bad_scale, bits, seed):
+        """PR 6's zero/NaN threshold guard, extended to both bit widths:
+        a degenerate calibrated scale (0, denormal-tiny, or NaN) clamps
+        to a positive floor and the quantize->dequantize round trip stays
+        finite."""
+        s = _safe_scale(jnp.asarray([bad_scale], jnp.float32))
+        assert bool(jnp.all(s > 0)) and bool(jnp.all(jnp.isfinite(s)))
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(1, 4, 1, 8)), jnp.float32)
+        y = dequantize_kv(quantize_kv(x, s, bits=bits), s, bits=bits)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10000))
+    def test_healthy_scales_pass_through_floor_bit_identically(self, seed):
+        rng = np.random.default_rng(seed)
+        s = jnp.asarray(np.abs(rng.normal(size=(4,))) + 1e-3, jnp.float32)
+        np.testing.assert_array_equal(np.asarray(_safe_scale(s)),
+                                      np.asarray(s))
 
 
 class TestEqualizationInvariance:

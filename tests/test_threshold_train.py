@@ -1,0 +1,260 @@
+"""Trained threshold scale factors (paper §3, TQT log2 parameterization).
+
+Pins three layers of the trained-threshold stack:
+
+  1. the ``custom_vjp`` quantizer's gradient semantics (TQT eq. 6-8:
+     straight-through x-gradient inside the clip band, zero when
+     saturated; threshold gradient = rounding residual inside, clip-edge
+     slope when saturated, both scaled by ln(2)*t for the log2 domain);
+  2. the ``finetune_thresholds`` loop (epoch budget, strict same-batch
+     distill-loss decrease on a fixed-seed toy stack);
+  3. the outlier-recovery accuracy pin: starting from thresholds
+     over-calibrated by 4x (the paper's motivating failure — one outlier
+     batch inflates max-abs calibration), <=8 epochs of §3 training at
+     int4 KV must pull the distill RMSE back to the correctly-calibrated
+     int4 static floor, i.e. within the static max-abs baseline band.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import api as A
+from repro.core import quant as Q
+from repro.core.distill import chunked_sq_err
+from repro.launch import steps as ST
+from repro.models import build_model
+
+SPEC8 = Q.QuantSpec(bits=8, symmetric=True)
+SPEC4 = Q.QuantSpec(bits=4, symmetric=True)
+_LN2 = float(np.log(2.0))
+
+
+# ---------------------------------------------------------------------------
+# 1. custom_vjp quantizer
+# ---------------------------------------------------------------------------
+
+
+class TestTQTForward:
+    def test_matches_static_threshold_quantizer(self):
+        # at log2_t = log2(t_max) the trained quantizer IS the static one
+        x = jnp.asarray(
+            np.random.default_rng(0).normal(size=(64, 16)), jnp.float32)
+        t = Q.max_abs_threshold(x, SPEC8)
+        y_log = Q.fake_quant_log_t(x, jnp.log2(t), SPEC8)
+        y_static = Q.fake_quant_symmetric(x, t, jnp.ones(()), SPEC8)
+        np.testing.assert_allclose(y_log, y_static, atol=1e-6)
+
+    def test_error_bounded_by_step(self):
+        for spec in (SPEC8, SPEC4):
+            x = jnp.asarray(
+                np.random.default_rng(1).normal(size=(256,)), jnp.float32)
+            t = Q.max_abs_threshold(x, spec)
+            y = Q.fake_quant_log_t(x, jnp.log2(t), spec)
+            step = float(t) / spec.levels
+            assert float(jnp.max(jnp.abs(x - y))) <= step / 2 + 1e-6
+
+    def test_per_channel_log2_t(self):
+        # per-head KV layout: (B, H, S, D) with channel_axis=-2 would be S;
+        # the KV spec uses channel_axis=-2 on (heads, d)-major scales — use
+        # a 2D case here: one threshold per row
+        spec = Q.QuantSpec(bits=8, symmetric=True, per_channel=True,
+                           channel_axis=0)
+        x = jnp.asarray(
+            np.random.default_rng(2).normal(size=(4, 32)), jnp.float32)
+        t = jnp.max(jnp.abs(x), axis=1)
+        y = Q.fake_quant_log_t(x, jnp.log2(t), spec)
+        for i in range(4):
+            step = float(t[i]) / spec.levels
+            assert float(jnp.max(jnp.abs(x[i] - y[i]))) <= step / 2 + 1e-6
+
+
+class TestTQTGradient:
+    def test_saturated_threshold_grad_matches_finite_difference(self):
+        # In the saturated branch the forward is y = sign(x) * t — smooth
+        # and linear in t, so central finite differences over log2_t must
+        # match the custom_vjp exactly (no STE surrogate involved there).
+        x = jnp.array([3.0, -5.0, 2.5, -4.0], jnp.float32)
+        l2t = jnp.asarray(0.0, jnp.float32)  # t = 1 -> everything saturated
+        w = jnp.array([1.0, 0.5, -2.0, 1.5], jnp.float32)
+
+        def loss(l):
+            return jnp.sum(w * Q.fake_quant_log_t(x, l, SPEC8))
+
+        g = jax.grad(loss)(l2t)
+        eps = 1e-3
+        fd = (loss(l2t + eps) - loss(l2t - eps)) / (2 * eps)
+        np.testing.assert_allclose(float(g), float(fd), rtol=1e-3)
+
+    def test_inside_threshold_grad_is_rounding_residual(self):
+        # Inside the clip band the TQT surrogate replaces the true
+        # staircase derivative with the rounding residual:
+        #   d y / d log2_t = ln(2) * (y - x)      (eq. 6 of 1903.08066)
+        # Pin the closed form, away from round-to-nearest boundaries.
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.uniform(-0.9, 0.9, size=(128,)), jnp.float32)
+        l2t = jnp.asarray(0.0, jnp.float32)
+        w = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+
+        def loss(l):
+            return jnp.sum(w * Q.fake_quant_log_t(x, l, SPEC8))
+
+        g = jax.grad(loss)(l2t)
+        y = Q.fake_quant_log_t(x, l2t, SPEC8)
+        expected = float(jnp.sum(w * (y - x)) * _LN2)
+        np.testing.assert_allclose(float(g), expected, rtol=1e-4, atol=1e-6)
+
+    def test_x_grad_passthrough_inside_zero_saturated(self):
+        x = jnp.array([0.3, -0.7, 2.0, -3.0], jnp.float32)  # t=1: 2 inside
+        l2t = jnp.asarray(0.0, jnp.float32)
+        g = jax.grad(lambda x: jnp.sum(Q.fake_quant_log_t(x, l2t, SPEC8)))(x)
+        np.testing.assert_allclose(g, jnp.array([1.0, 1.0, 0.0, 0.0]))
+
+    def test_per_channel_grad_shape_and_independence(self):
+        spec = Q.QuantSpec(bits=8, symmetric=True, per_channel=True,
+                           channel_axis=0)
+        x = jnp.asarray(
+            np.random.default_rng(4).normal(size=(3, 16)), jnp.float32)
+        l2t = jnp.zeros((3,), jnp.float32)
+        # only row 1 contributes to the loss -> rows 0/2 get zero grad
+        g = jax.grad(
+            lambda l: jnp.sum(Q.fake_quant_log_t(x, l, spec)[1] * x[1]))(l2t)
+        assert g.shape == (3,)
+        assert float(g[0]) == 0.0 and float(g[2]) == 0.0
+        assert float(jnp.abs(g[1])) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# 2/3. finetune_thresholds on a fixed-seed toy stack
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def toy_stack():
+    cfg = get_config("smollm-135m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batches = [
+        {"tokens": jax.random.randint(
+            jax.random.PRNGKey(k), (2, 32), 0, cfg.vocab)}
+        for k in (1, 5, 9, 13)
+    ]
+    return cfg, model, params, batches
+
+
+def _calibrate(model, cfg, params, batches, policy, inflate=1.0):
+    qp = A.init_qparams(model, params, policy)
+    cal = ST.make_calibrate_step(model, cfg, policy)
+    for b in batches:
+        qp = cal(params, qp, b)
+    qp = A.finalize_calibration(qp, policy, train_thresholds=True)
+    if inflate != 1.0:
+        # simulate outlier over-calibration: every KV threshold too wide
+        qp = {
+            k: ({kk: {"t_max": st["t_max"] * inflate,
+                      "log2_t": st["log2_t"] + jnp.log2(inflate)}
+                 for kk, st in v.items()}
+                if A.is_kv_path(k) else v)
+            for k, v in qp.items()
+        }
+    return qp
+
+
+def _distill_rmse(model, params, batch, policy, qp):
+    h_t, _ = model.hidden(params, batch, None, remat=False)
+    ctx = A.make_ctx("fake", policy, qp)
+    h_s, _ = model.hidden(params, batch, ctx, remat=False)
+    sq, n = chunked_sq_err(h_t, h_s, model.readout_fn(params, None),
+                           model.readout_fn(params, ctx))
+    return float(jnp.sqrt(sq / n))
+
+
+class TestFinetuneLoop:
+    def test_epoch_budget_enforced(self, toy_stack):
+        cfg, model, params, batches = toy_stack
+        policy = A.QuantPolicy(kv_int8=True, kv_bits=4)
+        qp = _calibrate(model, cfg, params, batches[:1], policy)
+        for bad in (0, 9):
+            with pytest.raises(ValueError, match=r"\[1, 8\]"):
+                ST.finetune_thresholds(model, cfg, policy, params, qp,
+                                       batches[:1], epochs=bad)
+        with pytest.raises(ValueError, match="calibration batch"):
+            ST.finetune_thresholds(model, cfg, policy, params, qp, [])
+
+    def test_trainable_mask_and_freeze(self, toy_stack):
+        cfg, model, params, batches = toy_stack
+        policy = A.QuantPolicy(kv_int8=True, kv_bits=4)
+        qp = _calibrate(model, cfg, params, batches[:1], policy, inflate=2.0)
+        kv = [k for k in qp if A.is_kv_path(k)]
+        assert kv, "calibration must produce KV entries"
+        mask = A.trainable_mask(qp)
+        assert all(mask[k]["k"]["log2_t"] for k in kv)
+        assert not any(mask[k]["k"]["t_max"] for k in kv)
+        frozen = A.freeze_thresholds(qp)
+        for k in kv:
+            assert "log2_t" not in frozen[k]["k"]
+            np.testing.assert_allclose(
+                frozen[k]["k"]["t_max"],
+                jnp.exp2(qp[k]["k"]["log2_t"]), rtol=1e-6)
+
+    def test_distill_loss_strictly_decreases(self, toy_stack):
+        # satellite 3: fixed-seed toy stack, <=8 epochs, SAME-batch losses
+        # (the loop interleaves batches, so compare epoch 0 vs last epoch
+        # for batch 0 only)
+        cfg, model, params, batches = toy_stack
+        policy = A.QuantPolicy(kv_int8=True, kv_bits=4)
+        qp = _calibrate(model, cfg, params, batches[:1], policy, inflate=4.0)
+        _, losses = ST.finetune_thresholds(
+            model, cfg, policy, params, qp, batches[:1], epochs=4,
+            hp=ST.TrainHParams(base_lr=0.1, anneal_period=8))
+        assert len(losses) == 4
+        assert losses[-1] < losses[0], losses
+
+
+class TestOutlierRecoveryPin:
+    """The PR's accuracy pin (ISSUE acceptance criterion).
+
+    Thresholds over-calibrated by 4x (outlier batch) at int4 KV lose ~3x
+    distill RMSE vs correct calibration; <=8 epochs of trained thresholds
+    must recover them to the static-calibration baseline band:
+
+      measured (fixed seeds): int4 static clean 0.637, int4 static
+      inflated 1.964, int4 trained 0.674, int8 static inflated 0.183.
+    """
+
+    def test_finetune_recovers_overcalibrated_int4(self, toy_stack):
+        cfg, model, params, batches = toy_stack
+        pol4 = A.QuantPolicy(kv_int8=True, kv_bits=4)
+        pol8 = A.QuantPolicy(kv_int8=True, kv_bits=8)
+        inf = 4.0
+
+        qp4_clean = _calibrate(model, cfg, params, batches, pol4)
+        qp4_bad = _calibrate(model, cfg, params, batches, pol4, inflate=inf)
+        qp8_bad = _calibrate(model, cfg, params, batches, pol8, inflate=inf)
+
+        b0 = batches[0]
+        r4_clean = _distill_rmse(model, params, b0, pol4, qp4_clean)
+        r4_bad = _distill_rmse(model, params, b0, pol4, qp4_bad)
+        r8_bad = _distill_rmse(model, params, b0, pol8, qp8_bad)
+
+        qp4_trained, losses = ST.finetune_thresholds(
+            model, cfg, pol4, params, qp4_bad, batches, epochs=8,
+            hp=ST.TrainHParams(base_lr=0.15, anneal_period=64))
+        r4_trained = _distill_rmse(model, params, b0, pol4, qp4_trained)
+
+        nb = len(batches)
+        # same-batch distill loss strictly decreases over the budget
+        assert losses[-nb] < losses[0], (losses[0], losses[-nb])
+        # training recovers most of what over-calibration lost (>=2.5x)
+        assert r4_trained < r4_bad / 2.5, (r4_trained, r4_bad)
+        # ... landing back at the correctly-calibrated int4 static floor
+        assert r4_trained <= r4_clean * 1.25, (r4_trained, r4_clean)
+        # ... which keeps it within the static max-abs baseline band
+        # (int8-static under the same over-calibration, small multiple)
+        assert r4_trained <= r8_bad * 5.0, (r4_trained, r8_bad)
+        # and the trained thresholds actually moved down toward the bulk
+        kv = [k for k in qp4_trained if A.is_kv_path(k)][0]
+        dlog = float(jnp.mean(qp4_trained[kv]["k"]["log2_t"]
+                              - qp4_bad[kv]["k"]["log2_t"]))
+        assert dlog < -1.0, dlog
