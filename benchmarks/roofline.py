@@ -76,8 +76,10 @@ def summarize(reps):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--dir", default="experiments/dryrun")
-    ap.add_argument("--all-meshes", action="store_true")
+    ap.add_argument("--dir", default="experiments/dryrun",
+                    help="directory of dry-run plan JSON files to read")
+    ap.add_argument("--all-meshes", action="store_true",
+                    help="print every mesh variant, not just the best")
     args = ap.parse_args()
     reps = load_reports(args.dir)
     if not reps:

@@ -256,7 +256,8 @@ def kernels_micro():
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer repeats (smoke-level timing noise)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")

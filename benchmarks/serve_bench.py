@@ -495,10 +495,14 @@ def bench_int4_kv(eng8: Engine, *, requests, prompt_len, gen):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-135m")
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--arch", default="smollm-135m",
+                    help="architecture preset to benchmark")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="synthetic requests per scenario")
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="tokens per synthetic prompt")
+    ap.add_argument("--gen", type=int, default=32,
+                    help="tokens to generate per request")
     ap.add_argument("--quick", action="store_true",
                     help="only the production config (int8 w + int8 kv)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
@@ -512,7 +516,8 @@ def main():
                     help="draft-window length for the speculative scenario")
     ap.add_argument("--spec-ngram", type=int, default=2,
                     help="prompt-lookup n-gram for the speculative scenario")
-    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--out", default="BENCH_serve.json",
+                    help="path for the benchmark JSON report")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)

@@ -27,10 +27,12 @@ from repro.optim.adam import adam_init, restart_boundary, reset_moments
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--steps", type=int, default=200,
+                    help="fine-tuning steps")
     ap.add_argument("--full", action="store_true",
                     help="real 135M config (slow on CPU)")
-    ap.add_argument("--ckpt", default="/tmp/fat_qat_ckpt")
+    ap.add_argument("--ckpt", default="/tmp/fat_qat_ckpt",
+                    help="checkpoint directory")
     args = ap.parse_args()
 
     if args.full:

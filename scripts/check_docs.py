@@ -16,6 +16,11 @@ Checks
    ``--kv-bits {8,4}``, ...) is only documented when its MODES are — a
    new mode without docs fails CI just like a new flag.  Both string and
    integer choices count (``--kv-bits`` is an int enum).
+4. Every analyzer finding code defined in src/repro/analysis/ and
+   scripts/repro_lint.py (string literals shaped ``family.rule``, e.g.
+   ``drift.promote``) appears in docs/serving.md — the "Static analysis
+   & compile budgets" section is the finding-code reference of record,
+   so a new check without docs fails CI.
 
 Run: python scripts/check_docs.py   (from anywhere; paths resolve
 relative to the repo root, which is this script's parent directory).
@@ -108,15 +113,40 @@ def check_flag_reference() -> list[str]:
     return errors
 
 
+_FINDING_CODE = re.compile(
+    r'"((?:drift|budget|pallas|donate|freeze|lint)\.[a-z0-9-]+)"')
+
+
+def finding_codes() -> set[str]:
+    """Every finding code a checker can emit, scraped from the string
+    literals of the analyzer sources (stdlib-only: no import of jax-
+    dependent analysis modules)."""
+    sources = sorted((REPO / "src/repro/analysis").glob("*.py"))
+    sources.append(REPO / "scripts/repro_lint.py")
+    codes: set[str] = set()
+    for src in sources:
+        codes.update(_FINDING_CODE.findall(src.read_text()))
+    return codes
+
+
+def check_finding_code_reference() -> list[str]:
+    doc = (REPO / "docs/serving.md").read_text()
+    return [f"docs/serving.md: analyzer finding code `{code}` is "
+            "undocumented (Static analysis & compile budgets section)"
+            for code in sorted(finding_codes()) if code not in doc]
+
+
 def main() -> int:
-    errors = check_links() + check_flag_reference()
+    errors = (check_links() + check_flag_reference()
+              + check_finding_code_reference())
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if errors:
         return 1
     n_flags = len(serve_flags())
     print(f"check_docs OK: {len(md_files())} markdown files, "
-          f"{n_flags} serve.py flags documented")
+          f"{n_flags} serve.py flags documented, "
+          f"{len(finding_codes())} analyzer finding codes documented")
     return 0
 
 

@@ -1,0 +1,296 @@
+#!/usr/bin/env python
+"""Repo lint: tracer-hostile python and undocumented surface, by AST.
+
+Pure stdlib (the report schema module is loaded by file path, so this
+runs with no jax import).  Four rules, each encoding an invariant the
+engine has already been bitten by or explicitly documents:
+
+``lint.tracer-cast``
+    ``float(x)`` / ``int(x)`` applied to a function parameter that the
+    same function also treats as an array (passes to jnp/lax, calls
+    ``.astype`` on, …).  Under jit that parameter is a tracer and the
+    cast raises ``ConcretizationTypeError`` — but only on the traced
+    path, so the bug ships dormant (optim/adam.py carried exactly this
+    on its non-traced fallback branch).  Host-side casts of genuinely
+    host values (lengths, config ints) don't trip this: the parameter
+    must ALSO flow into array code.
+
+``lint.host-in-scan``
+    ``time.time()`` / ``time.perf_counter()`` / ``random.*`` /
+    ``np.random.*`` inside a function passed to ``lax.scan`` /
+    ``while_loop`` / ``fori_loop`` / ``cond``.  Scanned bodies trace
+    once: a host clock or host RNG there is baked in as a constant —
+    it "works" and silently never varies again.
+
+``lint.jit-method``
+    ``@jax.jit`` (or ``@functools.partial(jax.jit, ...)``) directly on a
+    method.  Each bound method is a fresh callable, so the jit cache
+    keys on the instance — every new object recompiles.  The engine's
+    idiom is jitting closures built per instance (scheduler) or
+    module-level functions.
+
+``lint.undocumented-flag``
+    ``add_argument`` without ``help=``.  The CLIs are the public
+    surface; check_docs.py cross-references flags into README, and a
+    flag with no help string is invisible to ``--help`` users.
+
+Suppress a finding by appending ``# repro-lint: ok`` to the flagged
+line (greppable, reviewable).  Exits 1 on findings, 0 clean; ``--out``
+writes the shared schema-validated JSON report.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import importlib.util
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "_analysis_report", ROOT / "src" / "repro" / "analysis" / "report.py")
+_report = importlib.util.module_from_spec(_spec)
+sys.modules[_spec.name] = _report  # dataclasses resolves types via sys.modules
+_spec.loader.exec_module(_report)
+Finding, make_report, write_report = (_report.Finding, _report.make_report,
+                                      _report.write_report)
+
+SUPPRESS = "repro-lint: ok"
+_ARRAY_MODULES = {"jnp", "jax", "lax"}  # host numpy is never traced
+_LOOP_PRIMS = {"scan", "while_loop", "fori_loop", "cond", "switch"}
+_HOST_TIME = {"time", "perf_counter", "monotonic", "process_time"}
+
+
+def _suppressed(lines: list[str], lineno: int) -> bool:
+    return 0 < lineno <= len(lines) and SUPPRESS in lines[lineno - 1]
+
+
+def _dotted(node) -> str:
+    """'jax.lax.scan' for an Attribute/Name chain, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _finding(code, rel, node, msg):
+    return Finding(analyzer="lint", code=code, location=f"{rel}:{node.lineno}",
+                   message=msg)
+
+
+# ---------------------------------------------------------------------------
+# rule passes (one module at a time)
+# ---------------------------------------------------------------------------
+
+def _tracer_cast(tree, rel, lines) -> list:
+    out = []
+    for fn in (n for n in ast.walk(tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))):
+        if fn.name.startswith("__") and fn.name.endswith("__"):
+            continue  # dunders (constructors etc.) are host-side code
+        params = {a.arg for a in fn.args.posonlyargs + fn.args.args
+                  + fn.args.kwonlyargs} - {"self", "cls"}
+        if not params:
+            continue
+        arrayish: set = set()
+        casts: list = []
+        conversion_casts: set = set()  # casts fed straight INTO jax calls
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            # p.astype(...) / p.dtype-bearing method => p is an array here
+            if (isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id in params
+                    and node.func.attr in ("astype", "reshape", "sum",
+                                           "mean", "block_until_ready")):
+                arrayish.add(node.func.value.id)
+            # jnp.foo(..., p, ...) => p flows into array code
+            root = _dotted(node.func).split(".")[0]
+            if root in _ARRAY_MODULES:
+                for arg in list(node.args) + [kw.value for kw in
+                                              node.keywords]:
+                    for name in ast.walk(arg):
+                        if (isinstance(name, ast.Name)
+                                and name.id in params):
+                            arrayish.add(name.id)
+                    # int(p) passed directly INTO jax (fold_in(k, int(rid)))
+                    # is an explicit host->device handoff, not a tracer
+                    # readback — the cast runs before tracing sees it
+                    for sub in ast.walk(arg):
+                        if (isinstance(sub, ast.Call)
+                                and isinstance(sub.func, ast.Name)
+                                and sub.func.id in ("float", "int")):
+                            conversion_casts.add(id(sub))
+            # float(p) / int(p)
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in ("float", "int")
+                    and len(node.args) == 1
+                    and isinstance(node.args[0], ast.Name)
+                    and node.args[0].id in params):
+                casts.append((node, node.func.id, node.args[0].id))
+        for node, cast, pname in casts:
+            if (pname in arrayish and id(node) not in conversion_casts
+                    and not _suppressed(lines, node.lineno)):
+                out.append(_finding(
+                    "lint.tracer-cast", rel, node,
+                    f"{fn.name}: {cast}({pname}) on a parameter this "
+                    "function also treats as an array — under jit the "
+                    "parameter is a tracer and the cast raises; use "
+                    f"jnp.asarray({pname}, ...) instead"))
+    return out
+
+
+def _host_in_scan(tree, rel, lines) -> list:
+    out = []
+    # names of local defs handed to lax control-flow primitives, plus
+    # lambdas passed inline
+    scanned_names: set = set()
+    scanned_lambdas: list = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        leaf = _dotted(node.func).split(".")[-1]
+        if leaf not in _LOOP_PRIMS:
+            continue
+        for arg in node.args:
+            if isinstance(arg, ast.Name):
+                scanned_names.add(arg.id)
+            elif isinstance(arg, ast.Lambda):
+                scanned_lambdas.append(arg)
+
+    def hits(body_node, where):
+        for sub in ast.walk(body_node):
+            if not isinstance(sub, ast.Call):
+                continue
+            dotted = _dotted(sub.func)
+            parts = dotted.split(".")
+            bad = (
+                (parts[0] == "time" and parts[-1] in _HOST_TIME)
+                or (parts[0] == "random" and len(parts) > 1)
+                or (len(parts) >= 2 and parts[0] in ("np", "numpy")
+                    and parts[1] == "random")
+            )
+            if bad and not _suppressed(lines, sub.lineno):
+                out.append(_finding(
+                    "lint.host-in-scan", rel, sub,
+                    f"{where}: '{dotted}' inside a lax-scanned/looped "
+                    "body — traced once, then frozen as a constant; "
+                    "thread time/randomness in as scan inputs"))
+
+    for node in ast.walk(tree):
+        if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and node.name in scanned_names):
+            hits(node, node.name)
+    for lam in scanned_lambdas:
+        hits(lam, "<lambda>")
+    return out
+
+
+def _jit_method(tree, rel, lines) -> list:
+    out = []
+    for cls in (n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)):
+        for meth in cls.body:
+            if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            args = meth.args.posonlyargs + meth.args.args
+            if not args or args[0].arg not in ("self", "cls"):
+                continue
+            for dec in meth.decorator_list:
+                is_jit = _dotted(dec).endswith("jit") or (
+                    isinstance(dec, ast.Call)
+                    and _dotted(dec.func).endswith("partial")
+                    and dec.args
+                    and _dotted(dec.args[0]).endswith("jit"))
+                if is_jit and not _suppressed(lines, dec.lineno):
+                    out.append(_finding(
+                        "lint.jit-method", rel, dec,
+                        f"{cls.name}.{meth.name}: @jit on a method keys "
+                        "the compile cache on the bound instance — every "
+                        "object recompiles; jit a per-instance closure "
+                        "in __init__ or a module-level function"))
+    return out
+
+
+def _undocumented_flag(tree, rel, lines) -> list:
+    out = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument"):
+            continue
+        if any(kw.arg == "help" for kw in node.keywords):
+            continue
+        if _suppressed(lines, node.lineno):
+            continue
+        flag = (node.args[0].value
+                if node.args and isinstance(node.args[0], ast.Constant)
+                else "?")
+        out.append(_finding(
+            "lint.undocumented-flag", rel, node,
+            f"add_argument({flag!r}) without help= — CLI flags are the "
+            "public surface; document or suppress"))
+    return out
+
+
+_RULES = (_tracer_cast, _host_in_scan, _jit_method, _undocumented_flag)
+
+
+def lint_paths(paths) -> list:
+    findings = []
+    for path in paths:
+        path = Path(path)
+        files = sorted(path.rglob("*.py")) if path.is_dir() else [path]
+        for f in files:
+            src = f.read_text()
+            try:
+                tree = ast.parse(src)
+            except SyntaxError as e:
+                findings.append(Finding(
+                    analyzer="lint", code="lint.syntax",
+                    location=f"{f}:{e.lineno or 0}",
+                    message=f"unparseable python: {e.msg}"))
+                continue
+            lines = src.splitlines()
+            try:
+                rel = str(f.relative_to(ROOT))
+            except ValueError:
+                rel = str(f)
+            for rule in _RULES:
+                findings += rule(tree, rel, lines)
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_lint",
+        description="AST lint for tracer-hostile python and undocumented "
+                    "CLI surface.")
+    ap.add_argument("paths", nargs="*",
+                    default=["src", "tests", "scripts", "benchmarks",
+                             "examples"],
+                    help="files or directories to lint (default: the repo)")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON findings report here")
+    args = ap.parse_args(argv)
+
+    paths = [ROOT / p if not Path(p).is_absolute() else Path(p)
+             for p in args.paths]
+    findings = lint_paths(paths)
+    if args.out:
+        write_report(args.out, make_report(
+            findings, tool="repro_lint",
+            entry_points=[str(p) for p in args.paths]))
+    for f in findings:
+        print(f"{f.location}: {f.code}: {f.message}")
+    print(f"repro_lint: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

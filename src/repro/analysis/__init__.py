@@ -1,0 +1,45 @@
+"""Static analysis over the serving engine's traced graphs.
+
+The engine accumulated implicit invariants PR by PR — bf16-only residual
+streams with bounded f32 islands, one compiled executable per scheduler
+piece, Pallas launch contracts (BlockSpec divisibility, scalar-prefetch
+arity, the dp=D/2 int4 packing rule, interpret threading), frozen-
+threshold serving params, alias-free cache donation.  Each was enforced
+by prose plus whichever test happened to trip over a violation.  This
+package turns them into machine-checked contracts over jaxprs of every
+serving entry point, wired as a first-class CI lane
+(``python -m repro.analysis``) that emits one schema-validated JSON
+report and fails on any finding.
+
+Modules:
+
+- ``report``           Finding record + report schema (stdlib-only)
+- ``jaxprs``           shared recursive jaxpr walk + source attribution
+- ``dtype_drift``      f32-leak / raw-cast / float-collective checks
+- ``budgets``          retrace budgets + real-compile counting
+- ``pallas_contracts`` kernel launch + source contracts
+- ``donation``         buffer aliasing + TQT freeze contract
+- ``entrypoints``      which graphs constitute the serving surface
+
+The repo-wide AST lint (tracer-hostile python, undocumented flags) lives
+in ``scripts/repro_lint.py`` and shares the report schema.
+"""
+from repro.analysis.budgets import (SCHEDULER_BUDGETS, CompileWatch,
+                                    check_executable_budgets, compile_count)
+from repro.analysis.donation import (check_duplicate_donation,
+                                     check_frozen_qparams,
+                                     check_no_fake_quant)
+from repro.analysis.dtype_drift import (DEFAULT_ALLOWLIST, AllowRule,
+                                        check_dtype_drift)
+from repro.analysis.pallas_contracts import (check_kernel_sources,
+                                             check_pallas_jaxpr)
+from repro.analysis.report import (Finding, make_report, validate_report,
+                                   write_report)
+
+__all__ = [
+    "AllowRule", "CompileWatch", "DEFAULT_ALLOWLIST", "Finding",
+    "SCHEDULER_BUDGETS", "check_dtype_drift", "check_duplicate_donation",
+    "check_executable_budgets", "check_frozen_qparams",
+    "check_kernel_sources", "check_no_fake_quant", "check_pallas_jaxpr",
+    "compile_count", "make_report", "validate_report", "write_report",
+]

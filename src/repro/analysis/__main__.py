@@ -1,0 +1,61 @@
+"""CI driver: ``python -m repro.analysis [--out report.json]``.
+
+Runs every analyzer over every serving entry point
+(analysis.entrypoints.run_analysis), writes the schema-validated JSON
+report, prints a summary, and exits:
+
+- 0  clean (entry points traced, zero findings)
+- 1  findings (each printed with code, entry point, location)
+- 2  zero entry points analyzed — the sweep itself broke; mirrors the
+     property lane's zero-collection guard (an empty analysis must never
+     read as green)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.analysis.entrypoints import run_analysis
+from repro.analysis.report import make_report, write_report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static contract checks over the serving engine's "
+                    "traced entry points.")
+    ap.add_argument("--out", default="analysis_report.json",
+                    help="path for the JSON report artifact")
+    ap.add_argument("--arch", default="smollm-135m",
+                    help="architecture preset to assemble (smoke shapes)")
+    ap.add_argument("--no-scheduler", action="store_true",
+                    help="skip the live scheduler budget session (trace-"
+                         "only analysis; faster, no compiles)")
+    args = ap.parse_args(argv)
+
+    findings, names = run_analysis(args.arch,
+                                   with_scheduler=not args.no_scheduler)
+    report = make_report(findings, tool="repro.analysis",
+                         entry_points=names,
+                         backend=jax.default_backend())
+    write_report(args.out, report)
+    print(f"analyzed {len(names)} entry points "
+          f"(backend={report['backend']}); "
+          f"{report['counts']['error']} error(s), "
+          f"{report['counts']['warning']} warning(s) -> {args.out}")
+    for f in findings:
+        where = f.entry_point or "repo"
+        loc = f" [{f.location}]" if f.location else ""
+        print(f"  {f.severity.upper()} {f.code} ({where}){loc}: "
+              f"{f.message}")
+    if not names:
+        print("FATAL: zero entry points analyzed — the sweep is broken, "
+              "refusing to report green", file=sys.stderr)
+        return 2
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,157 @@
+"""Compile-budget / retrace detector.
+
+The scheduler's no-retrace contract has been prose (scheduler docstrings,
+docs/serving.md) and per-test assertions since PR 3; this module turns
+it into one declarative table plus two enforcement surfaces:
+
+**Declared budgets** (``SCHEDULER_BUDGETS``) — every jitted scheduler
+piece with the (min, max) number of traced variants it may accumulate
+over an arbitrary serving session.  The steady-state pieces pin to
+exactly 1 (shapes are static by construction: block-table rows, masks,
+nan-step vectors are all *data*); ``resume`` and the paged-layout pieces
+are 0-or-1 because they trace lazily on first use.
+``check_executable_budgets`` diffs a live ``executable_counts()`` dict
+against the table — over budget is a retrace (a shape or python value
+leaked into trace inputs), under budget means a piece never ran, and a
+piece missing from the table is itself a finding: new jitted pieces must
+declare a budget to ship.
+
+**CompileWatch** — counts real XLA compiles via the
+``/jax/core/compile/backend_compile_duration`` monitoring event (fires
+once per backend compile, not per cache hit).  JAX has no listener
+*unregistration* API, so one module-level listener registers on first
+use and stays; each ``CompileWatch`` reads counter snapshots.  This
+catches what trace counters cannot: cache-key churn below the trace
+layer (new avals from weak types, donation-signature drift).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Mapping, Optional
+
+from repro.analysis.report import Finding
+
+# piece -> (min, max) traced-variant budget across one scheduler lifetime
+SCHEDULER_BUDGETS: dict = {
+    "prefill": (1, 1),
+    "decode": (1, 1),
+    "insert": (1, 1),
+    "resume": (0, 1),      # traces on first preemption re-admission
+    "set_row": (0, 1),     # paged layout only
+    "copy_page": (0, 1),   # paged layout only
+}
+
+
+def check_executable_budgets(counts: Mapping[str, int],
+                             budgets: Optional[Mapping] = None, *,
+                             entry_point: str = "",
+                             require_all_ran: bool = False) -> list[Finding]:
+    """Diff live ``SlotScheduler.executable_counts()`` against declared
+    budgets.  With ``require_all_ran`` each piece must also have traced
+    at least its declared minimum (use after a session that exercised
+    everything; leave off for partial sessions)."""
+    if budgets is None:
+        budgets = SCHEDULER_BUDGETS
+    findings: list[Finding] = []
+    for piece, n in sorted(counts.items()):
+        if piece not in budgets:
+            findings.append(Finding(
+                analyzer="budgets", code="budget.undeclared",
+                entry_point=entry_point,
+                message=f"jitted piece '{piece}' has no declared budget in "
+                        "analysis.budgets.SCHEDULER_BUDGETS — new pieces "
+                        "declare their traced-variant budget to ship"))
+            continue
+        lo, hi = budgets[piece]
+        if n > hi:
+            findings.append(Finding(
+                analyzer="budgets", code="budget.retrace",
+                entry_point=entry_point,
+                message=f"'{piece}' traced {n}x against a budget of "
+                        f"{hi}: a shape or python value is leaking into "
+                        "its trace inputs (the no-retrace contract says "
+                        "admission patterns, masks and fault plans are "
+                        "data, never trace keys)"))
+        elif require_all_ran and n < lo:
+            findings.append(Finding(
+                analyzer="budgets", code="budget.never-traced",
+                entry_point=entry_point,
+                message=f"'{piece}' traced {n}x but its budget floor is "
+                        f"{lo}: the session claimed to exercise it and "
+                        "it never compiled"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# real-compile counting
+# ---------------------------------------------------------------------------
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_lock = threading.Lock()
+_compiles = 0
+_registered = False
+
+
+def _on_event(event: str, duration: float, **kw) -> None:
+    global _compiles
+    if _COMPILE_EVENT in event:
+        with _lock:
+            _compiles += 1
+
+
+def _ensure_listener() -> None:
+    """Register the module-level listener exactly once.  jax.monitoring
+    has no unregister-one API (only clear-all), so the listener is
+    permanent and watchers read counter snapshots."""
+    global _registered
+    with _lock:
+        if _registered:
+            return
+        import jax.monitoring
+        jax.monitoring.register_event_duration_secs_listener(_on_event)
+        _registered = True
+
+
+def compile_count() -> int:
+    """Total backend compiles observed since the listener registered."""
+    _ensure_listener()
+    with _lock:
+        return _compiles
+
+
+class CompileWatch:
+    """Context manager counting real XLA compiles in its scope::
+
+        with CompileWatch() as w:
+            scheduler.step(...)
+        findings = w.check(max_compiles=0, what="steady-state decode")
+
+    ``w.count`` is the number of backend compiles that happened inside
+    the block — 0 on a warm path, one per executable on a cold one.
+    """
+
+    def __init__(self):
+        self._start = 0
+        self.count = 0
+
+    def __enter__(self):
+        _ensure_listener()
+        self._start = compile_count()
+        return self
+
+    def __exit__(self, *exc):
+        self.count = compile_count() - self._start
+        return False
+
+    def check(self, *, max_compiles: int, what: str,
+              entry_point: str = "") -> list[Finding]:
+        if self.count <= max_compiles:
+            return []
+        return [Finding(
+            analyzer="budgets", code="budget.compile",
+            entry_point=entry_point,
+            message=f"{what}: {self.count} backend compile(s) against a "
+                    f"budget of {max_compiles} — compilation happened "
+                    "below the trace layer (cache-key churn: weak types, "
+                    "donation drift, or a cold path on what should be a "
+                    "warm one)")]

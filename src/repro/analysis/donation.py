@@ -1,0 +1,142 @@
+"""Donation/aliasing and freeze-contract checker.
+
+Two families of invariants, both about buffers the serving loop is
+allowed to destroy or must never touch:
+
+**Donation** — ``generate_batch`` and the slot scheduler donate the KV
+cache into every step (``donate_argnums``), which is only sound if each
+donated buffer appears exactly once in the donated pytree.  A duplicated
+buffer (two pytree leaves backed by the same device allocation — easy to
+create with ``tree_map(lambda x: x, ...)`` shortcuts or a cache layout
+that shares a pool across views) means XLA either refuses the aliasing
+or, worse, one leaf reads the other's overwritten bytes.
+
+``donate.duplicate-buffer``
+    Two or more leaves of a donated pytree share a device buffer.
+
+**Freeze (TQT contract)** — after ``core.api.freeze_thresholds`` the
+serving qparams are static: no trained ``log2_t`` leaves survive, the
+trainable mask is all-False, and the serving graph contains no
+``fake_quant`` custom_vjp applications (fake-quant is the QAT training
+construct; serving quantizes for real).  A violated freeze means the
+engine is silently carrying — and potentially updating or donating —
+parameters that training still claims.
+
+``freeze.log2_t-leaf``
+    A ``log2_t`` leaf is reachable in the serving qparams.
+
+``freeze.trainable-mask``
+    ``core.api.trainable_mask`` marks some serving-qparams leaf
+    trainable.
+
+``freeze.fake-quant-eqn``
+    The traced serving graph applies a fake-quant custom_vjp.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+import jax
+
+from repro.analysis.jaxprs import eqn_function_names, eqn_location, iter_eqns
+from repro.analysis.report import Finding
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def _buffer_id(leaf):
+    """A stable identity for the device allocation behind a leaf; None
+    for non-array leaves (python scalars in a config pytree)."""
+    try:
+        return leaf.unsafe_buffer_pointer()
+    except Exception:
+        return None
+
+
+def check_duplicate_donation(tree, *, entry_point: str = "",
+                             what: str = "donated pytree") -> list[Finding]:
+    """Flag leaves of ``tree`` that share a device buffer.  ``tree`` is
+    the pytree that will be donated (e.g. the cache passed under
+    ``donate_argnums``)."""
+    groups: dict = defaultdict(list)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        bid = _buffer_id(leaf)
+        if bid is not None:
+            groups[bid].append(_path_str(path))
+    findings = []
+    for bid, paths in sorted(groups.items()):
+        if len(paths) > 1:
+            findings.append(Finding(
+                analyzer="donation", code="donate.duplicate-buffer",
+                entry_point=entry_point,
+                message=f"{what}: leaves {paths} share one device buffer "
+                        f"(ptr={bid:#x}) — donating it aliases the same "
+                        "allocation to multiple outputs; deep-copy the "
+                        "shared leaf or restructure the pytree"))
+    return findings
+
+
+def check_frozen_qparams(qparams, *, entry_point: str = "") -> list[Finding]:
+    """The post-``freeze_thresholds`` contract: nothing trainable left."""
+    from repro.core import api as A
+
+    findings: list[Finding] = []
+    log2_paths = [
+        _path_str(path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(qparams)[0]
+        if "log2_t" in _path_str(path)
+    ]
+    if log2_paths:
+        findings.append(Finding(
+            analyzer="donation", code="freeze.log2_t-leaf",
+            entry_point=entry_point,
+            message=f"serving qparams still carry trained log2_t leaves "
+                    f"({log2_paths[:4]}{'...' if len(log2_paths) > 4 else ''})"
+                    " — freeze_thresholds was skipped; the engine would "
+                    "serve off the raw training parameterization"))
+    # scope to KV entries: activation/weight alphas are FAT-trained scale
+    # factors that legitimately ride in serving qparams as static data —
+    # the freeze contract is about the TQT KV thresholds specifically
+    mask = A.trainable_mask(qparams)
+    kv_mask = {p: e for p, e in mask.items() if A.is_kv_path(p)}
+    live = [
+        _path_str(path)
+        for path, m in jax.tree_util.tree_flatten_with_path(kv_mask)[0]
+        if m
+    ]
+    if live:
+        findings.append(Finding(
+            analyzer="donation", code="freeze.trainable-mask",
+            entry_point=entry_point,
+            message=f"trainable_mask marks {len(live)} KV serving-qparams "
+                    f"leaf(s) trainable (e.g. {live[0]}): frozen KV "
+                    "thresholds must be invisible to the optimizer"))
+    return findings
+
+
+def check_no_fake_quant(jaxpr, *, entry_point: str = "") -> list[Finding]:
+    """No fake-quant custom_vjp applications in a serving graph."""
+    findings = []
+    for eqn in iter_eqns(jaxpr):
+        if not eqn.primitive.name.startswith("custom_vjp_call"):
+            continue
+        # the custom_vjp eqn itself binds from jax internals, so its own
+        # traceback may carry no user frame — the primal jaxpr's eqns were
+        # traced inside the decorated function and name it reliably
+        names = list(eqn_function_names(eqn))
+        inner = eqn.params.get("fun_jaxpr")
+        inner_eqns = getattr(getattr(inner, "jaxpr", inner), "eqns", ())
+        for ie in list(inner_eqns)[:8]:
+            names += eqn_function_names(ie)
+        if any("fake_quant" in n for n in names):
+            findings.append(Finding(
+                analyzer="donation", code="freeze.fake-quant-eqn",
+                entry_point=entry_point, location=eqn_location(eqn),
+                message="serving graph applies a fake_quant custom_vjp "
+                        f"(via {next(n for n in names if 'fake_quant' in n)})"
+                        ": fake-quant is the QAT construct — serving "
+                        "quantizes for real, so its presence means an "
+                        "unfrozen threshold leaked into the hot path"))
+    return findings

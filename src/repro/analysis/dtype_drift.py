@@ -1,0 +1,207 @@
+"""Dtype-drift checker: no f32 leaks into the quantized serving graph.
+
+The engine's numerics contract (docs/serving.md) is that the serving
+graph computes in the model dtype (bf16) with *explicitly bounded* f32
+islands — softmax statistics, dequant scales, the optimizer — and that
+every int8/int4 value is produced by a real quantizer (round + clip
+against a calibrated threshold), never by a bare cast.  PR 4 shipped a
+violation of the first rule (the quantized jnp attention path returned
+f32 into the bf16 residual stream, breaking layer-scanned stacks), and
+the fix was a one-line cast that nothing machine-checked.  This pass
+makes that class of bug a CI failure:
+
+``drift.promote``
+    A binary elementwise op whose output is a *wider* float than one of
+    its float operands — the signature of an implicit promotion (bf16
+    residual + f32 attention output -> f32 residual).  Entering f32 via
+    an explicit ``convert_element_type`` is sanctioned (that is how the
+    softmax/scale islands are written); silently widening through
+    arithmetic is drift.
+
+``drift.raw-int-cast``
+    A float -> int8 ``convert_element_type`` with no ``round`` in its
+    ancestry: a value entered the quantized domain without passing
+    through a quantizer.  The sanctioned pattern is
+    ``clip(round(x / scale)).astype(int8)``.
+
+``drift.collective``
+    A cross-replica collective moving floating-point payload.  The
+    engine's sharding story (dist/collectives.py) is that the
+    interconnect moves *quantized* bytes: int8 payloads, int32
+    accumulators.  A raw f32 psum is the regression this catches; the
+    one sanctioned float collective — the single-scalar shared-threshold
+    ``pmax`` of ``compressed_psum`` — is a declarative
+    :class:`AllowRule`, so the analyzer documents the contract instead
+    of special-casing the module.
+
+Allowlist rules match on (finding code, producing primitive, traceback
+function scope, element count) — declarative and reviewable, with the
+"why" carried in the rule itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.analysis.jaxprs import (ancestor_prims, blocks, eqn_function_names,
+                                   eqn_location, producer_map, var_dtype,
+                                   var_shape)
+from repro.analysis.report import Finding
+
+# elementwise binary primitives where implicit promotion can smuggle a
+# wide dtype into a narrow stream
+_BINARY_ELEMENTWISE = ("add", "sub", "mul", "div", "max", "min", "rem",
+                       "pow", "atan2")
+_COLLECTIVES = ("psum", "pmax", "pmin", "ppermute", "all_gather",
+                "all_to_all", "psum_scatter")
+_FLOAT_WIDTH = {"bfloat16": 1, "float16": 1, "float32": 2, "float64": 3}
+# quantizer evidence: some rounding op must sit upstream of an int8 cast
+_ROUND_PRIMS = {"round", "round_nearest_even", "nearbyint"}
+
+
+@dataclasses.dataclass(frozen=True)
+class AllowRule:
+    """One declarative exemption.  ``scope`` substring-matches any
+    function name on the equation's traceback; ``primitive`` pins the
+    producing op; ``max_elems`` bounds the value size (a one-scalar
+    exemption cannot silently grow into a tensor-sized hole).  ``note``
+    is the documented contract — it is surfaced in reports, so an
+    allowlist entry IS documentation."""
+    code: str
+    note: str
+    primitive: Optional[str] = None
+    scope: Optional[str] = None
+    max_elems: Optional[int] = None
+
+    def matches(self, code: str, eqn, n_elems: int) -> bool:
+        if code != self.code:
+            return False
+        if self.primitive is not None and eqn.primitive.name != self.primitive:
+            return False
+        if self.max_elems is not None and n_elems > self.max_elems:
+            return False
+        if self.scope is not None:
+            names = eqn_function_names(eqn)
+            if not any(self.scope in n for n in names):
+                return False
+        return True
+
+
+DEFAULT_ALLOWLIST: tuple[AllowRule, ...] = (
+    # dist/collectives.py::compressed_psum — the int8-compressed gradient
+    # reduction shares ONE max-abs threshold across participants via an
+    # f32 scalar pmax (paper eq. 2 applied to the wire).  The payload
+    # psum itself is int32 (integer accumulator contract, stated in the
+    # module) and passes the float-collective check by construction.
+    AllowRule(
+        code="drift.collective", primitive="pmax",
+        scope="compressed_psum", max_elems=1,
+        note="compressed_psum shared-scale scalar: one f32 pmax "
+             "establishes the common int8 threshold; payload bytes stay "
+             "int8/int32 (dist/collectives.py contract)"),
+    # Sanctioned f32 islands for implicit promotion, scoped to the code
+    # that owns them.  Softmax statistics and the Adam moment math are
+    # *written* with explicit converts today (so these rules are
+    # currently dormant), but the islands are part of the documented
+    # numerics contract — keeping them declarative here means a future
+    # refactor that leans on promotion inside these scopes changes an
+    # allowlist line, not the analyzer.
+    AllowRule(code="drift.promote", scope="softmax",
+              note="softmax statistics island: max/exp/normalize runs f32 "
+                   "regardless of stream dtype"),
+    AllowRule(code="drift.promote", scope="adam_update",
+              note="optimizer island: moments and updates are f32 over "
+                   "bf16 params by design"),
+)
+
+
+def _numel(shape) -> int:
+    return math.prod(shape) if shape else 1
+
+
+def _allowed(allowlist: Sequence[AllowRule], code: str, eqn,
+             n_elems: int) -> bool:
+    return any(r.matches(code, eqn, n_elems) for r in allowlist)
+
+
+def check_dtype_drift(jaxpr, *, entry_point: str = "",
+                      allowlist: Sequence[AllowRule] = DEFAULT_ALLOWLIST,
+                      ) -> list[Finding]:
+    """Run all three drift checks over every block of ``jaxpr`` (a
+    ClosedJaxpr/Jaxpr, typically from ``jax.make_jaxpr`` of a serving
+    entry point)."""
+    findings: list[Finding] = []
+    for block in blocks(jaxpr):
+        producers = None  # built lazily, only when an int8 cast appears
+        for eqn in block.eqns:
+            name = eqn.primitive.name
+            if name in _BINARY_ELEMENTWISE:
+                out = eqn.outvars[0]
+                out_dt = var_dtype(out)
+                out_w = _FLOAT_WIDTH.get(str(out_dt))
+                if out_w is None:
+                    continue
+                narrow = [str(var_dtype(v)) for v in eqn.invars
+                          if _FLOAT_WIDTH.get(str(var_dtype(v)), out_w)
+                          < out_w]
+                if not narrow:
+                    continue
+                n = _numel(var_shape(out))
+                if _allowed(allowlist, "drift.promote", eqn, n):
+                    continue
+                findings.append(Finding(
+                    analyzer="dtype_drift", code="drift.promote",
+                    entry_point=entry_point, location=eqn_location(eqn),
+                    message=f"'{name}' implicitly promotes {narrow[0]} to "
+                            f"{out_dt} (shape {var_shape(out)}): a wide "
+                            "value entered the narrow stream through "
+                            "arithmetic instead of an explicit convert — "
+                            "cast the wide operand back to the stream "
+                            "dtype (the PR-4 residual leak pattern)"))
+            elif name == "convert_element_type":
+                new_dt = eqn.params.get("new_dtype")
+                if new_dt not in (jnp.int8, jnp.uint8):
+                    continue
+                src = eqn.invars[0]
+                src_dt = str(var_dtype(src))
+                if src_dt not in _FLOAT_WIDTH:
+                    continue  # int->int repacks are not quantization
+                if producers is None:
+                    producers = producer_map(block)
+                if _ROUND_PRIMS & ancestor_prims(src, producers):
+                    continue
+                n = _numel(var_shape(src))
+                if _allowed(allowlist, "drift.raw-int-cast", eqn, n):
+                    continue
+                findings.append(Finding(
+                    analyzer="dtype_drift", code="drift.raw-int-cast",
+                    entry_point=entry_point, location=eqn_location(eqn),
+                    message=f"{src_dt} value (shape {var_shape(src)}) cast "
+                            "straight to int8 with no round() upstream: "
+                            "values enter the quantized domain only "
+                            "through a quantizer "
+                            "(clip(round(x/scale)).astype(int8))"))
+            elif name in _COLLECTIVES:
+                for v in eqn.invars:
+                    dt = str(var_dtype(v))
+                    if dt not in _FLOAT_WIDTH:
+                        continue
+                    n = _numel(var_shape(v))
+                    if _allowed(allowlist, "drift.collective", eqn, n):
+                        continue
+                    findings.append(Finding(
+                        analyzer="dtype_drift", code="drift.collective",
+                        entry_point=entry_point,
+                        location=eqn_location(eqn),
+                        message=f"collective '{name}' moves {dt} payload "
+                                f"(shape {var_shape(v)}, {n} elems): the "
+                                "interconnect contract is quantized bytes "
+                                "— compress the payload "
+                                "(dist/collectives.py::compressed_psum) "
+                                "or add a scoped AllowRule stating why "
+                                "this collective must stay float"))
+                    break  # one finding per collective eqn
+    return findings

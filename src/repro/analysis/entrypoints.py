@@ -1,0 +1,234 @@
+"""The serving entry points, traced for static analysis.
+
+The analyzers in this package work on jaxprs; this module owns the one
+place that says *which* graphs constitute "the serving surface" and at
+what shapes they are traced.  Smoke shapes (B=2, S=32, chunk=8 — the
+same grid the tier-1 tests pin) are enough: every invariant the
+analyzers check (dtype flow, BlockSpec divisibility, prefetch arity,
+freeze state) is shape-generic, so a violation at smoke shapes is the
+violation.
+
+Entry points per variant:
+
+- ``prefill``             dense one-shot prefill
+- ``chunked_prefill``     the scan-over-chunks ragged-prompt prefill
+- ``decode_loop``         single-stream whole-generation scan
+- ``decode_block``        continuous-batching slot decode block
+- ``resume``              preemption re-admission (chunked prefill at
+                          the resume buffer — a distinct trace shape)
+- ``speculative_verify``  the windowed verify step of prompt-lookup
+                          speculative decoding
+
+``build_entry_points`` assembles a real converted engine (calibrate →
+finalize → int8 conversion, exactly ``engine.prepare_int8``) and traces
+each entry with ``jax.make_jaxpr`` — tracing only, no compiles, so a
+full three-variant sweep stays cheap.  ``run_analysis`` is the CI
+driver: every analyzer over every entry point of the default variant
+sweep (int8+pallas, int8+jnp, int4+pallas), plus the repo-level source
+and budget checks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import budgets as BU
+from repro.analysis import donation as DO
+from repro.analysis import dtype_drift as DD
+from repro.analysis import pallas_contracts as PC
+from repro.analysis.report import Finding
+
+# the tier-1 smoke grid (tests/test_scheduler.py pins the same shapes)
+B, S, CHUNK, CACHE, GEN = 2, 32, 8, 64, 4
+
+
+@dataclasses.dataclass
+class EntryPoint:
+    """One traced serving graph plus the metadata the analyzers need."""
+    name: str
+    jaxpr: object               # ClosedJaxpr from jax.make_jaxpr
+    hidden_dtype: str           # cfg.dtype — the residual-stream dtype
+    d_model: int
+    kv_bits: int                # 8, or 4 (packed nibbles)
+    uses_pallas: bool           # policy routed through the fused kernels
+    expect_interpret: bool      # kernels.ops backend selection
+
+
+def _assemble(arch: str, *, use_pallas: bool, kv_bits: int):
+    from repro.configs import get_config
+    from repro.core import api as A
+    from repro.launch.engine import prepare_int8
+    from repro.models import build_model
+
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    policy = A.QuantPolicy(kv_int8=True, kv_bits=kv_bits,
+                           use_pallas=use_pallas)
+    serve_params, qp = prepare_int8(model, cfg, policy, params,
+                                    [{"tokens": toks}])
+    cache = model.init_cache(B, CACHE, cfg.dtype, kv_int8=True,
+                             kv_bits=kv_bits)
+    return cfg, model, policy, serve_params, qp, toks, cache
+
+
+def build_entry_points(arch: str = "smollm-135m", *,
+                       use_pallas: bool = True, kv_bits: int = 8,
+                       mode: str = "int8",
+                       include: Optional[Sequence[str]] = None,
+                       ) -> list[EntryPoint]:
+    """Trace the serving surface of one engine variant.  ``include``
+    restricts to a subset of entry names (None = all)."""
+    from repro.kernels import ops
+    from repro.launch import steps as ST
+    from repro.launch import strategies as STR
+
+    cfg, model, policy, serve_params, qp, toks, cache = _assemble(
+        arch, use_pallas=use_pallas, kv_bits=kv_bits)
+    expect_interpret = ops._interpret()
+    meta = dict(hidden_dtype=str(cfg.dtype), d_model=cfg.d_model,
+                kv_bits=kv_bits, uses_pallas=use_pallas,
+                expect_interpret=expect_interpret)
+
+    lengths = jnp.asarray([S, S - CHUNK], jnp.int32)
+    tok0 = jnp.zeros((B,), jnp.int32)
+    pos0 = jnp.full((B,), S, jnp.int32)
+    active0 = jnp.ones((B,), bool)
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": toks}
+
+    def trace(fn, *args):
+        return jax.make_jaxpr(fn)(*args)
+
+    builders = {
+        "prefill": lambda: trace(
+            ST.make_prefill_step(model, cfg, policy, mode),
+            serve_params, qp, batch, cache),
+        "chunked_prefill": lambda: trace(
+            ST.make_prefill_step(model, cfg, policy, mode,
+                                 prefill_chunk=CHUNK),
+            serve_params, qp, batch, cache, lengths),
+        "decode_loop": lambda: trace(
+            ST.make_decode_loop(model, cfg, policy, mode, n_steps=GEN),
+            serve_params, qp, tok0, cache, jnp.int32(S)),
+        "decode_block": lambda: trace(
+            ST.make_slot_decode_loop(model, cfg, policy, mode, n_steps=3),
+            serve_params, qp, tok0, cache, pos0, active0, key),
+        # preemption re-admission: the same chunked-prefill maker traced
+        # at the resume buffer (prompt + generated so far, re-padded) —
+        # the scheduler's 'resume' piece, a genuinely distinct shape
+        "resume": lambda: trace(
+            ST.make_prefill_step(model, cfg, policy, mode,
+                                 prefill_chunk=CHUNK),
+            serve_params, qp,
+            {"tokens": jnp.zeros((B, S + CHUNK), jnp.int32)}, cache,
+            jnp.asarray([S + GEN, S - 1], jnp.int32)),
+        "speculative_verify": lambda: trace(
+            STR.SpeculativeStrategy(model, cfg, policy, mode).verify,
+            serve_params, qp, tok0, jnp.zeros((B, 4), jnp.int32),
+            cache, pos0, active0),
+    }
+    out = []
+    for name, build in builders.items():
+        if include is not None and name not in include:
+            continue
+        out.append(EntryPoint(name=name, jaxpr=build(), **meta))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+def analyze_entry_points(eps: Sequence[EntryPoint]) -> list[Finding]:
+    """All jaxpr-level analyzers over each traced entry point."""
+    findings: list[Finding] = []
+    for ep in eps:
+        findings += DD.check_dtype_drift(ep.jaxpr, entry_point=ep.name)
+        findings += PC.check_pallas_jaxpr(
+            ep.jaxpr, entry_point=ep.name,
+            expect_interpret=ep.expect_interpret)
+        findings += DO.check_no_fake_quant(ep.jaxpr, entry_point=ep.name)
+    return findings
+
+
+def _scheduler_session_findings(arch: str) -> list[Finding]:
+    """Run a real mixed-admission scheduler session at smoke shapes and
+    hold its executable counts to the declared budgets; then re-run the
+    same traffic and require ZERO fresh backend compiles (the warm-path
+    compile budget)."""
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import api as A
+    from repro.launch import steps as ST
+    from repro.launch.scheduler import Request, SlotScheduler
+    from repro.models import build_model
+
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    policy = A.QuantPolicy(kv_int8=True)
+    qp = A.init_qparams(model, params, policy)
+    qp = ST.make_calibrate_step(model, cfg, policy)(params, qp,
+                                                    {"tokens": toks})
+    qp = A.finalize_calibration(qp, policy)
+
+    def reqs():
+        # ragged lengths on purpose: the no-retrace contract is exactly
+        # that these are data, not trace keys
+        return [Request(rid=r, tokens=np.asarray(toks[r % B, :n]),
+                        max_gen=GEN) for r, n in enumerate([S, S - 12, 9])]
+
+    sched = SlotScheduler(model, cfg, policy, params, qp, mode="none",
+                          max_slots=2, prompt_cap=S, gen_cap=GEN + 2,
+                          prefill_chunk=CHUNK, block_steps=3)
+    list(sched.run(reqs()))
+    findings = BU.check_executable_budgets(sched.executable_counts(),
+                                           entry_point="scheduler_session")
+    with BU.CompileWatch() as w:
+        list(sched.run(reqs()))
+    findings += w.check(max_compiles=0,
+                        what="repeat of an identical scheduler session",
+                        entry_point="scheduler_session")
+    findings += BU.check_executable_budgets(sched.executable_counts(),
+                                            entry_point="scheduler_session")
+    return findings
+
+
+def run_analysis(arch: str = "smollm-135m", *,
+                 with_scheduler: bool = True) -> tuple[list[Finding],
+                                                       list[str]]:
+    """The full CI sweep.  Returns (findings, entry point names)."""
+    variants = (
+        dict(use_pallas=True, kv_bits=8),
+        dict(use_pallas=False, kv_bits=8),   # the jnp fallback path
+        dict(use_pallas=True, kv_bits=4),    # packed-nibble KV
+    )
+    findings: list[Finding] = []
+    names: list[str] = []
+    for v in variants:
+        eps = build_entry_points(arch, **v)
+        tag = f"pallas={v['use_pallas']},kv{v['kv_bits']}"
+        names += [f"{ep.name}[{tag}]" for ep in eps]
+        findings += analyze_entry_points(eps)
+
+    # repo-level: kernel source contracts + freeze state of a converted
+    # engine + donated-cache aliasing
+    findings += PC.check_kernel_sources()
+    cfg, model, policy, serve_params, qp, toks, cache = _assemble(
+        "smollm-135m", use_pallas=True, kv_bits=8)
+    findings += DO.check_frozen_qparams(qp, entry_point="served_qparams")
+    findings += DO.check_duplicate_donation(cache, entry_point="cache",
+                                            what="donated KV cache")
+    names += ["served_qparams", "cache"]
+
+    if with_scheduler:
+        findings += _scheduler_session_findings(arch)
+        names += ["scheduler_session"]
+    return findings, names

@@ -1,0 +1,137 @@
+"""The analysis report: one schema for every analyzer's findings.
+
+Every checker in ``repro.analysis`` — and the source lint in
+``scripts/repro_lint.py`` — emits :class:`Finding` records; the CI lane
+serializes them into one JSON artifact and fails on any ``error``
+finding (or on an empty entry-point set, mirroring the property lane's
+zero-collection guard).  The schema is validated in-process before the
+file is written, so a malformed report is itself a failure, never a
+silently-green artifact.
+
+Report schema (version 1)::
+
+    {
+      "schema_version": 1,
+      "tool": "repro.analysis" | "repro_lint",
+      "backend": "cpu" | "tpu" | ...,
+      "entry_points": ["prefill", "decode_block", ...],
+      "n_entry_points": 7,
+      "counts": {"error": 0, "warning": 0},
+      "findings": [
+        {"analyzer": "dtype_drift", "code": "drift.promote",
+         "severity": "error", "entry_point": "prefill",
+         "message": "...", "location": "models/attention.py:531"},
+        ...
+      ]
+    }
+
+``validate_report`` is pure structural checking (stdlib only — the CI
+lane and the docs lane import it without jax).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable, Sequence
+
+SCHEMA_VERSION = 1
+SEVERITIES = ("error", "warning")
+ANALYZER_NAMES = ("dtype_drift", "budgets", "pallas_contracts", "donation",
+                  "lint")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer verdict.  ``code`` is the stable machine-readable
+    rule id (``drift.promote``, ``budget.retrace``, ...); ``message`` is
+    the human explanation with enough context to fix the violation
+    without re-running the pass."""
+    analyzer: str
+    code: str
+    message: str
+    entry_point: str = ""      # "" for repo-level (lint, budgets-decl)
+    location: str = ""         # file:line or jaxpr source hint, best effort
+    severity: str = "error"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def make_report(findings: Iterable[Finding], *, tool: str,
+                entry_points: Sequence[str] = (),
+                backend: str = "") -> dict:
+    findings = list(findings)
+    counts = {s: 0 for s in SEVERITIES}
+    for f in findings:
+        counts[f.severity] += 1
+    report = {
+        "schema_version": SCHEMA_VERSION,
+        "tool": tool,
+        "backend": backend,
+        "entry_points": list(entry_points),
+        "n_entry_points": len(entry_points),
+        "counts": counts,
+        "findings": [f.to_dict() for f in findings],
+    }
+    errors = validate_report(report)
+    if errors:  # a checker bug, not a checked-code bug — fail loudly
+        raise ValueError("analysis report failed its own schema: "
+                         + "; ".join(errors))
+    return report
+
+
+def validate_report(obj) -> list[str]:
+    """Structural schema check; returns [] when valid.  Kept dependency-
+    free so CI can validate the artifact without installing anything."""
+    errors = []
+    if not isinstance(obj, dict):
+        return [f"report must be a dict, got {type(obj).__name__}"]
+    if obj.get("schema_version") != SCHEMA_VERSION:
+        errors.append(f"schema_version must be {SCHEMA_VERSION}, got "
+                      f"{obj.get('schema_version')!r}")
+    if not isinstance(obj.get("tool"), str) or not obj.get("tool"):
+        errors.append("tool must be a non-empty string")
+    eps = obj.get("entry_points")
+    if not isinstance(eps, list) or not all(isinstance(e, str) for e in eps):
+        errors.append("entry_points must be a list of strings")
+    elif obj.get("n_entry_points") != len(eps):
+        errors.append("n_entry_points does not match entry_points length")
+    counts = obj.get("counts")
+    if (not isinstance(counts, dict)
+            or set(counts) != set(SEVERITIES)
+            or not all(isinstance(v, int) and v >= 0
+                       for v in counts.values())):
+        errors.append(f"counts must map exactly {SEVERITIES} to ints >= 0")
+    findings = obj.get("findings")
+    if not isinstance(findings, list):
+        return errors + ["findings must be a list"]
+    tally = {s: 0 for s in SEVERITIES}
+    for i, f in enumerate(findings):
+        if not isinstance(f, dict):
+            errors.append(f"findings[{i}] must be a dict")
+            continue
+        for key in ("analyzer", "code", "message", "entry_point",
+                    "location", "severity"):
+            if not isinstance(f.get(key), str):
+                errors.append(f"findings[{i}].{key} must be a string")
+        if f.get("severity") not in SEVERITIES:
+            errors.append(f"findings[{i}].severity must be one of "
+                          f"{SEVERITIES}, got {f.get('severity')!r}")
+        else:
+            tally[f["severity"]] += 1
+        for key in ("analyzer", "code", "message"):
+            if isinstance(f.get(key), str) and not f[key]:
+                errors.append(f"findings[{i}].{key} must be non-empty")
+    if isinstance(counts, dict) and not errors and tally != counts:
+        errors.append(f"counts {counts} do not match findings tally {tally}")
+    return errors
+
+
+def write_report(path: str, report: dict) -> None:
+    errors = validate_report(report)
+    if errors:
+        raise ValueError("refusing to write invalid report: "
+                         + "; ".join(errors))
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")

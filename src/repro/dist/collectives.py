@@ -6,6 +6,16 @@ the substrate still all-reduces full weight gradients — quantizing the
 payload to int8 with a shared max-abs threshold (paper eq. 2) quarters the
 DCN/ICI bytes of the data-parallel reduction at one-quantization-step
 error.
+
+Interconnect dtype contract (machine-checked): the static analyzer's
+``drift.collective`` rule (repro.analysis.dtype_drift) fails CI on any
+collective moving floating-point payload.  This module is the reason
+that rule can be strict — every tensor-sized transfer here is integer —
+and its single sanctioned exception: the one-scalar f32 ``pmax`` that
+establishes the shared threshold, declared as the ``compressed_psum``
+:class:`~repro.analysis.dtype_drift.AllowRule` in
+``DEFAULT_ALLOWLIST`` (scope-matched to this function, capped at one
+element so the exemption cannot grow into a tensor-sized hole).
 """
 from __future__ import annotations
 
@@ -22,9 +32,14 @@ def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
     Returns the dequantized mean; error is bounded by step/2 per element.
     """
     xf = x.astype(jnp.float32)
+    # the ONE float collective in the engine: a single f32 scalar (see
+    # module docstring / analysis allowlist) — keep it scalar; widening
+    # it would trip drift.collective in CI, by design
     t = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis_name)
     s = jnp.maximum(t, 1e-8) / 127.0
     q = jnp.clip(jnp.round(xf / s), -127, 127).astype(jnp.int8)
+    # integer-accumulator contract: the payload psum stays int32 —
+    # dequantization happens once, after the reduce, never on the wire
     acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
     n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
     return (acc.astype(jnp.float32) * s / n.astype(jnp.float32)).astype(x.dtype)

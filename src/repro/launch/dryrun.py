@@ -295,12 +295,18 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default=None)
-    ap.add_argument("--shape", default=None)
-    ap.add_argument("--all", action="store_true")
-    ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--both-meshes", action="store_true")
-    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--arch", default=None,
+                    help="architecture preset to plan (configs.get_config)")
+    ap.add_argument("--shape", default=None,
+                    help="explicit shape spec name (overrides --arch)")
+    ap.add_argument("--all", action="store_true",
+                    help="plan every registered architecture")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="include the multi-pod mesh variants")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="plan both the serving and training meshes")
+    ap.add_argument("--out", default="experiments/dryrun",
+                    help="directory for the emitted plan JSON files")
     args = ap.parse_args()
 
     os.makedirs(args.out, exist_ok=True)

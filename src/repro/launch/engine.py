@@ -234,6 +234,53 @@ class Engine:
         return sum(1 for l in jax.tree.leaves(self.serve_params)
                    if l.dtype == jnp.int8)
 
+    def analyze(self, *, batch: int = 2, prompt_len: int = 32,
+                cache_len: int = 64):
+        """Static contract checks over THIS engine's serving graphs.
+
+        Traces the engine's own prefill and decode entry points (its
+        params, its policy, its cache layout — not the generic smoke
+        assembly in repro.analysis.entrypoints) and runs the jaxpr
+        analyzers plus the freeze/donation checks on the live state.
+        Returns a list of findings; empty means every contract holds.
+        Tracing only — no compiles, so this is cheap enough to run at
+        startup or in a deploy gate.
+        """
+        from repro.analysis import (check_dtype_drift,
+                                    check_duplicate_donation,
+                                    check_frozen_qparams,
+                                    check_no_fake_quant,
+                                    check_pallas_jaxpr)
+        from repro.kernels import ops as _ops
+
+        expect_interpret = _ops._interpret()
+        cache = self.init_cache(batch, cache_len)
+        toks = jnp.zeros((batch, prompt_len), jnp.int32)
+        entries = {
+            "prefill": (ST.make_prefill_step(self.model, self.cfg,
+                                             self.policy, self.mode),
+                        (self.serve_params, self.qparams,
+                         {"tokens": toks}, cache)),
+            "decode_loop": (ST.make_decode_loop(self.model, self.cfg,
+                                                self.policy, self.mode,
+                                                n_steps=4),
+                            (self.serve_params, self.qparams,
+                             jnp.zeros((batch,), jnp.int32), cache,
+                             jnp.int32(prompt_len))),
+        }
+        findings = []
+        for name, (fn, args) in entries.items():
+            jx = jax.make_jaxpr(fn)(*args)
+            findings += check_dtype_drift(jx, entry_point=name)
+            findings += check_pallas_jaxpr(jx, entry_point=name,
+                                           expect_interpret=expect_interpret)
+            findings += check_no_fake_quant(jx, entry_point=name)
+        findings += check_frozen_qparams(self.qparams,
+                                         entry_point="qparams")
+        findings += check_duplicate_donation(cache, entry_point="cache",
+                                             what="donated KV cache")
+        return findings
+
     def init_cache(self, batch: int, max_len: int, **kw):
         """Engine-configured cache: layout/page_size/kv_int8/kv_bits
         applied."""

@@ -477,6 +477,17 @@ class SlotScheduler:
         ``resume`` counts preemption re-admissions."""
         return dict(self._call_counts)
 
+    def check_budgets(self):
+        """The no-retrace contract as findings: this scheduler's live
+        trace counts against the declared per-piece budgets
+        (repro.analysis.budgets.SCHEDULER_BUDGETS).  Empty list == within
+        budget; the analysis CI lane runs this after a real mixed-
+        admission session, and operators can call it on a production
+        scheduler at any point."""
+        from repro.analysis.budgets import check_executable_budgets
+        return check_executable_budgets(self.executable_counts(),
+                                        entry_point="scheduler")
+
     def prefix_stats(self) -> dict:
         """Prefix-sharing counters (paged layout; empty dict for dense)."""
         return self._prefix.stats() if self._prefix is not None else {}

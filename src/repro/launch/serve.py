@@ -201,11 +201,16 @@ def run_continuous(args, engine: Engine):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-135m")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--arch", default="smollm-135m",
+                    help="architecture preset to serve")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="number of synthetic requests to serve")
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="tokens per synthetic prompt")
+    ap.add_argument("--gen", type=int, default=16,
+                    help="tokens to generate per request")
     ap.add_argument("--fp", action="store_true",
                     help="serve in bf16 instead of int8 (baseline)")
     ap.add_argument("--no-kv-int8", action="store_true",

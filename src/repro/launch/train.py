@@ -30,23 +30,34 @@ from repro.optim.adam import adam_init
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--arch", default="smollm-135m",
+                    help="architecture preset to train")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-friendly)")
     ap.add_argument("--mode", default="fat_qat",
-                    choices=["fat_qat", "pretrain"])
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--calib-batches", type=int, default=4)
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=50)
-    ap.add_argument("--lr", type=float, default=1e-3)
+                    choices=["fat_qat", "pretrain"],
+                    help="fat_qat: calibrate + train threshold scale "
+                         "factors; pretrain: plain LM training")
+    ap.add_argument("--steps", type=int, default=100,
+                    help="training steps")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="global batch size")
+    ap.add_argument("--seq", type=int, default=128,
+                    help="sequence length")
+    ap.add_argument("--calib-batches", type=int, default=4,
+                    help="batches for threshold calibration (paper s3.1)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (None disables saving)")
+    ap.add_argument("--ckpt-every", type=int, default=50,
+                    help="steps between checkpoints")
+    ap.add_argument("--lr", type=float, default=1e-3,
+                    help="peak learning rate")
     ap.add_argument("--finetune-thresholds", action="store_true",
                     help="fat_qat: also calibrate the per-head KV cache "
                          "thresholds and train them as log2-domain scale "
                          "factors (TQT) alongside the activation alphas")
-    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="steps between loss prints")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)

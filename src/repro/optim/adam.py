@@ -35,7 +35,11 @@ def cosine_restarts(step, base_lr: float, period: int, t_mult: float = 1.0,
     Phase resets every ``period`` steps (period optionally growing by
     t_mult).  Implemented in jnp so it jits inside the train step.
     """
-    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    # uniform host/traced handling: python ints, numpy scalars, and
+    # tracers all take the same path (float(step) on the fallback branch
+    # raised ConcretizationTypeError the first time a caller jitted over
+    # a non-array step)
+    step = jnp.asarray(step, jnp.float32)
     if t_mult == 1.0:
         phase = jnp.mod(step, period) / period
     else:
