@@ -446,6 +446,60 @@ def bench_crash_recovery(engine: Engine, *, prompt_len, gen,
     }
 
 
+def bench_sharded_decode(arch, *, requests, prompt_len, gen):
+    """Sharded serving scenario: tp=2 vs tp=1 on a host-local mesh.
+
+    Both engines are built from the SAME seed at a shard-divisible head
+    grid (the smoke preset's 3 heads can't split), so ``tokens_match``
+    is the tensor-parallel exactness claim — int32 row epilogues make
+    tp=2 bit-identical, not merely close.  The timing columns are
+    dispatch proxies (on CPU the mesh is emulated host-local devices;
+    real interconnect wins need hardware), and the byte columns come
+    from the compiled HLO via ``dry_run_report``: total collective
+    bytes per executable plus the integer-all-reduce verdict CI gates
+    on.  Returns None below 2 devices (the bench-smoke lane sets
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``)."""
+    if jax.device_count() < 2:
+        return None
+    from repro.shard.engine import ShardedEngine
+
+    cfg = get_config(arch, smoke=True)
+    cfg = cfg.replace(n_heads=4, n_kv_heads=2, head_dim=cfg.head_dim)
+    kw = dict(cfg=cfg, smoke=True, cache_layout="dense", use_pallas=False)
+    base = Engine.from_checkpoint(arch, **kw)
+    tp2 = ShardedEngine.from_checkpoint(arch, tp=2, **kw)
+
+    shape = ShapeSpec("bench", "train", prompt_len, requests)
+    spec = DP.spec_for(cfg, shape)
+    batch = DP.make_batch(spec, 12345)
+    batch.pop("labels", None)
+
+    def run(eng):
+        eng.generate_batch(batch, gen, prompt_len=prompt_len)  # compile
+        return eng.generate_batch(batch, gen, prompt_len=prompt_len)
+
+    r1, r2 = run(base), run(tp2)
+    hlo = tp2.dry_run_report(batch=requests, prompt_len=prompt_len)
+    ex = hlo["executables"]
+    return {
+        "requests": requests,
+        "prompt_len": prompt_len,
+        "gen": gen,
+        "tp": 2,
+        "tokens_match": bool(np.array_equal(np.asarray(r1.tokens),
+                                            np.asarray(r2.tokens))),
+        "prefill_ms_tp1": r1.prefill_s * 1e3,
+        "prefill_ms_tp2": r2.prefill_s * 1e3,
+        "decode_ms_per_tok_tp1": r1.decode_s / max(gen - 1, 1) * 1e3,
+        "decode_ms_per_tok_tp2": r2.decode_s / max(gen - 1, 1) * 1e3,
+        "prefill_collective_bytes": ex["prefill"]["collective_bytes"],
+        "decode_collective_bytes": ex["decode"]["collective_bytes"],
+        "decode_all_reduce_bytes": float(sum(
+            b for _, b in ex["decode"]["all_reduce_payloads"])),
+        "int8_all_reduces_ok": bool(hlo["int8_all_reduces_ok"]),
+    }
+
+
 def bench_int4_kv(eng8: Engine, *, requests, prompt_len, gen):
     """int4 packed KV cache vs int8: exact byte halving of the quantized
     KV payload, plus serving throughput of the packed lane.
@@ -674,6 +728,24 @@ def main():
           f"{i4['cache_bytes_int8']} B ({i4['cache_bytes_ratio']:.1f}x) | "
           f"{i4['gen_tokens_per_s_int4']:.0f} vs int8 "
           f"{i4['gen_tokens_per_s_int8']:.0f} gen tok/s")
+
+    # sharded decode: tp=2 vs tp=1 bit parity + the compiled-HLO
+    # collective audit (needs >= 2 devices; the CI lane forces 4)
+    sh = bench_sharded_decode(args.arch, requests=args.requests,
+                              prompt_len=args.prompt_len, gen=args.gen)
+    report["sharded_decode"] = sh
+    if sh is None:
+        print("sharded decode: skipped (single device — set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    else:
+        print(f"sharded decode: tp={sh['tp']} | tokens_match="
+              f"{sh['tokens_match']} | decode "
+              f"{sh['decode_ms_per_tok_tp2']:.2f} vs tp1 "
+              f"{sh['decode_ms_per_tok_tp1']:.2f} ms/tok | collectives "
+              f"prefill {sh['prefill_collective_bytes']:.0f} B / decode "
+              f"{sh['decode_collective_bytes']:.0f} B (all-reduce "
+              f"{sh['decode_all_reduce_bytes']:.0f} B) | "
+              f"int8_all_reduces_ok={sh['int8_all_reduces_ok']}")
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)

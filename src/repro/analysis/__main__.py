@@ -13,9 +13,15 @@ report, prints a summary, and exits:
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
-import jax
+# the sharded entry points need a multi-device host; harmless default —
+# an explicit XLA_FLAGS (CI lanes, TPU runs) always wins
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+import jax  # noqa: E402
 
 from repro.analysis.entrypoints import run_analysis
 from repro.analysis.report import make_report, write_report

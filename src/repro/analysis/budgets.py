@@ -39,6 +39,16 @@ SCHEDULER_BUDGETS: dict = {
     "resume": (0, 1),      # traces on first preemption re-admission
     "set_row": (0, 1),     # paged layout only
     "copy_page": (0, 1),   # paged layout only
+    # the same pieces over a ShardedModel (analysis.entrypoints reports
+    # them under a sharded_ prefix): shard_map wraps per trace, so a
+    # per-SHARD retrace — specs or mesh leaking into trace keys — would
+    # blow these exactly like a shape leak blows the unsharded ones
+    "sharded_prefill": (1, 1),
+    "sharded_decode": (1, 1),
+    "sharded_insert": (1, 1),
+    "sharded_resume": (0, 1),
+    "sharded_set_row": (0, 1),
+    "sharded_copy_page": (0, 1),
 }
 
 

@@ -102,6 +102,18 @@ DEFAULT_ALLOWLIST: tuple[AllowRule, ...] = (
         note="compressed_psum shared-scale scalar: one f32 pmax "
              "establishes the common int8 threshold; payload bytes stay "
              "int8/int32 (dist/collectives.py contract)"),
+    # repro.shard.partial_softmax::sp_partial_combine — sequence-parallel
+    # flash-decode merges per-shard (m, l, acc) partials with f32
+    # all_gathers.  These are GATHERS, not reductions (the HLO-level
+    # integer-all-reduce assertion is untouched), and the payload is the
+    # per-token partial state — KV*G*(D+2) floats per slot, orders of
+    # magnitude below the S-sized K/V stream sharding avoids moving.
+    AllowRule(
+        code="drift.collective", primitive="all_gather",
+        scope="sp_partial_combine",
+        note="sequence-parallel partial-softmax merge: f32 (m, l, acc) "
+             "flash partials gather across shards; exactness is the "
+             "online-softmax identity (repro.shard.partial_softmax)"),
     # Sanctioned f32 islands for implicit promotion, scoped to the code
     # that owns them.  Softmax statistics and the Adam moment math are
     # *written* with explicit converts today (so these rules are

@@ -140,6 +140,78 @@ def build_entry_points(arch: str = "smollm-135m", *,
     return out
 
 
+def build_sharded_entry_points(arch: str = "smollm-135m", *, tp: int = 2,
+                               kv_bits: int = 8, mode: str = "int8",
+                               include: Optional[Sequence[str]] = None,
+                               ) -> list[EntryPoint]:
+    """Trace the serving surface through a tensor-parallel
+    :class:`~repro.shard.model.ShardedModel` over a tp-way host-local
+    mesh, so the drift checkers see REAL collectives (the row-epilogue
+    psums, inside shard_map subjaxprs) instead of an unsharded graph
+    where ``drift.collective`` is vacuously green.
+
+    Needs ``jax.device_count() >= tp`` (CI sets
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``); returns []
+    on smaller hosts so the sweep degrades instead of erroring.  The
+    smoke config's 3 heads are rounded to a tp-divisible head grid —
+    the analyzers are shape-generic, so the exact head count is
+    immaterial.
+    """
+    if jax.device_count() < tp:
+        return []
+    from repro.configs import get_config
+    from repro.core import api as A
+    from repro.kernels import ops
+    from repro.launch import steps as ST
+    from repro.launch.engine import prepare_int8
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import build_model
+    from repro.shard.model import ShardedModel
+
+    cfg = get_config(arch, smoke=True)
+    cfg = cfg.replace(n_heads=2 * tp, n_kv_heads=tp, head_dim=cfg.head_dim)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    policy = A.QuantPolicy(kv_int8=True, kv_bits=kv_bits, use_pallas=False)
+    serve_params, qp = prepare_int8(model, cfg, policy, params,
+                                    [{"tokens": toks}])
+    sharded = ShardedModel(model, cfg, make_serving_mesh(tp), tp=tp)
+    cache = sharded.init_cache(B, CACHE, cfg.dtype, kv_int8=True,
+                               kv_bits=kv_bits)
+    meta = dict(hidden_dtype=str(cfg.dtype), d_model=cfg.d_model,
+                kv_bits=kv_bits, uses_pallas=False,
+                expect_interpret=ops._interpret())
+    lengths = jnp.asarray([S, S - CHUNK], jnp.int32)
+    tok0 = jnp.zeros((B,), jnp.int32)
+    pos0 = jnp.full((B,), S, jnp.int32)
+    active0 = jnp.ones((B,), bool)
+    batch = {"tokens": toks}
+
+    def trace(fn, *args):
+        return jax.make_jaxpr(fn)(*args)
+
+    builders = {
+        "sharded_prefill": lambda: trace(
+            ST.make_prefill_step(sharded, cfg, policy, mode),
+            serve_params, qp, batch, cache),
+        "sharded_chunked_prefill": lambda: trace(
+            ST.make_prefill_step(sharded, cfg, policy, mode,
+                                 prefill_chunk=CHUNK),
+            serve_params, qp, batch, cache, lengths),
+        "sharded_decode_block": lambda: trace(
+            ST.make_slot_decode_loop(sharded, cfg, policy, mode, n_steps=3),
+            serve_params, qp, tok0, cache, pos0, active0,
+            jax.random.PRNGKey(0)),
+    }
+    out = []
+    for name, build in builders.items():
+        if include is not None and name not in include:
+            continue
+        out.append(EntryPoint(name=name, jaxpr=build(), **meta))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # drivers
 # ---------------------------------------------------------------------------
@@ -201,6 +273,60 @@ def _scheduler_session_findings(arch: str) -> list[Finding]:
     return findings
 
 
+def _sharded_scheduler_session_findings(arch: str, *,
+                                        tp: int = 2) -> list[Finding]:
+    """The scheduler-budget session over a tp-way ShardedModel: the
+    no-retrace contract must survive sharding (shard_map wrapping is
+    per-trace, so a per-shard retrace would show up as count > 1).
+    Counts report under ``sharded_*`` keys so the budget table keeps
+    the sharded executables as first-class declared pieces."""
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import api as A
+    from repro.launch.engine import prepare_int8
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.scheduler import Request, SlotScheduler
+    from repro.models import build_model
+    from repro.shard.model import ShardedModel
+
+    cfg = get_config(arch, smoke=True)
+    cfg = cfg.replace(n_heads=2 * tp, n_kv_heads=tp, head_dim=cfg.head_dim)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    policy = A.QuantPolicy(kv_int8=True, use_pallas=False)
+    serve_params, qp = prepare_int8(model, cfg, policy, params,
+                                    [{"tokens": toks}])
+    sharded = ShardedModel(model, cfg, make_serving_mesh(tp), tp=tp)
+
+    def reqs():
+        return [Request(rid=r, tokens=np.asarray(toks[r % B, :n]),
+                        max_gen=GEN) for r, n in enumerate([S, S - 12, 9])]
+
+    sched = SlotScheduler(sharded, cfg, policy, serve_params, qp,
+                          mode="int8", max_slots=2, prompt_cap=S,
+                          gen_cap=GEN + 2, prefill_chunk=CHUNK,
+                          block_steps=3)
+    list(sched.run(reqs()))
+
+    def prefixed():
+        return {f"sharded_{k}": v
+                for k, v in sched.executable_counts().items()}
+
+    findings = BU.check_executable_budgets(
+        prefixed(), entry_point="sharded_scheduler_session")
+    with BU.CompileWatch() as w:
+        list(sched.run(reqs()))
+    findings += w.check(max_compiles=0,
+                        what="repeat of an identical sharded scheduler "
+                             "session",
+                        entry_point="sharded_scheduler_session")
+    findings += BU.check_executable_budgets(
+        prefixed(), entry_point="sharded_scheduler_session")
+    return findings
+
+
 def run_analysis(arch: str = "smollm-135m", *,
                  with_scheduler: bool = True) -> tuple[list[Finding],
                                                        list[str]]:
@@ -218,6 +344,12 @@ def run_analysis(arch: str = "smollm-135m", *,
         names += [f"{ep.name}[{tag}]" for ep in eps]
         findings += analyze_entry_points(eps)
 
+    # sharded surface: real collectives under shard_map (empty on
+    # single-device hosts — the sharded CI lane sets XLA_FLAGS)
+    sharded_eps = build_sharded_entry_points(arch)
+    names += [f"{ep.name}[tp2]" for ep in sharded_eps]
+    findings += analyze_entry_points(sharded_eps)
+
     # repo-level: kernel source contracts + freeze state of a converted
     # engine + donated-cache aliasing
     findings += PC.check_kernel_sources()
@@ -231,4 +363,7 @@ def run_analysis(arch: str = "smollm-135m", *,
     if with_scheduler:
         findings += _scheduler_session_findings(arch)
         names += ["scheduler_session"]
+        if jax.device_count() >= 2:
+            findings += _sharded_scheduler_session_findings(arch)
+            names += ["sharded_scheduler_session"]
     return findings, names

@@ -350,6 +350,14 @@ def _fq_weight(w, wstate, spec: Q.QuantSpec):
 def dense_forward(layer, params: dict, x: jax.Array, ctx: Optional[QuantCtx]):
     """All four modes for a Dense layer."""
     b = params.get("b")
+    if _tp_reduce_axis(layer) is not None and (
+            ctx is None or ctx.mode != "int8" or not ctx.enabled(layer)):
+        # the float paths have no integer accumulator to reduce exactly —
+        # a silent skip here would return per-shard partial products
+        raise ValueError(
+            f"{layer.path}: tensor-parallel serving requires mode='int8' "
+            "with this layer quantized (the row epilogue reduces int32 "
+            "accumulators; see repro.shard)")
     if ctx is None or not ctx.enabled(layer):
         y = x @ params["w"]
     elif ctx.mode == "calibrate":
@@ -376,6 +384,7 @@ def dense_forward(layer, params: dict, x: jax.Array, ctx: Optional[QuantCtx]):
             ctx.qparams[layer.path]["act"],
             ctx.policy.act_spec(layer.act_unsigned),
             use_pallas=ctx.policy.use_pallas,
+            reduce_axis=_tp_reduce_axis(layer),
         )
         b = params.get("b_q")
         if b is not None:
@@ -426,19 +435,50 @@ def expert_dense_forward(layer, params: dict, x: jax.Array, ctx: Optional[QuantC
     raise ValueError(ctx.mode)
 
 
-def _int8_matmul(x, w_q, w_scale, astate, aspec, *, use_pallas=False):
+def _tp_reduce_axis(layer):
+    """Mesh axis a row-parallel layer must psum over, or None.
+
+    Only consults the trace-time shard context (repro.shard.context) —
+    the unsharded engine never pays an import or a branch.  Row-parallel
+    roles are identified by the layer's logical input axis: 'heads'
+    (attention wo) and 'mlp' (ffn down/fc2) are the projections whose
+    contraction dimension is split across tensor-parallel shards.
+    """
+    try:
+        from repro.shard.context import tp_shard_info
+    except ImportError:
+        return None
+    info = tp_shard_info()
+    if info is None:
+        return None
+    axes = getattr(layer, "logical_axes", None)
+    if axes and axes[0] in ("heads", "mlp"):
+        return info.axis
+    return None
+
+
+def _int8_matmul(x, w_q, w_scale, astate, aspec, *, use_pallas=False,
+                 reduce_axis=None):
     """int8 x int8 -> int32 -> dequant.  Static activation threshold.
 
     The XLA path (dot_general with int32 accumulation) maps onto the MXU's
     native int8 pipeline on TPU; the Pallas kernel (kernels/quant_matmul)
     additionally fuses the per-channel dequant epilogue and is selected on
     real hardware via policy.use_pallas.
+
+    ``reduce_axis`` (tensor-parallel row epilogue) psums the int32
+    accumulators over that mesh axis BEFORE the single dequant: integer
+    addition is exact, so the sharded product is bit-identical to the
+    unsharded one and the wire carries int32, never f32
+    (dist/collectives.py::compressed_psum's integer fast path).  The
+    fused Pallas path cannot host a mid-kernel collective, so a reduced
+    matmul always takes the XLA path.
     """
     t_adj = jnp.maximum(
         Q.adjusted_threshold(astate["t_max"], astate["alpha"], aspec), 1e-8
     )
     s_x = aspec.levels / t_adj
-    if use_pallas and jnp.ndim(s_x) == 0:
+    if use_pallas and reduce_axis is None and jnp.ndim(s_x) == 0:
         # raw activations + act_scale: the kernel's fused VPU quantize does
         # the round/clip in VMEM (quantizing here first would round twice
         # and stream an extra tensor through HBM)
@@ -459,6 +499,10 @@ def _int8_matmul(x, w_q, w_scale, astate, aspec, *, use_pallas=False):
         (((x_int.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32,
     )
+    if reduce_axis is not None:
+        from repro.dist.collectives import compressed_psum
+
+        acc = compressed_psum(acc, reduce_axis, mean=False)
     scale = (w_scale / s_x).astype(jnp.float32)
     return (acc.astype(jnp.float32) * scale).astype(x.dtype)
 

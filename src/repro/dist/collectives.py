@@ -1,11 +1,18 @@
 """Compressed cross-replica collectives.
 
-``compressed_psum`` applies the paper's int8 machinery to the *gradient*
-stream: FAT's trainable state is tiny (threshold alphas), but pretraining
-the substrate still all-reduces full weight gradients — quantizing the
-payload to int8 with a shared max-abs threshold (paper eq. 2) quarters the
-DCN/ICI bytes of the data-parallel reduction at one-quantization-step
-error.
+``compressed_psum`` applies the paper's int8 machinery to every tensor
+the engine reduces across chips.  Two regimes share one entry point:
+
+  * **float payloads** (the gradient stream): FAT's trainable state is
+    tiny (threshold alphas), but pretraining the substrate still
+    all-reduces full weight gradients — quantizing the payload to int8
+    with a shared max-abs threshold (paper eq. 2) quarters the DCN/ICI
+    bytes of the data-parallel reduction at one-quantization-step error.
+  * **integer payloads** (the serving stream): tensor-parallel row
+    epilogues reduce the int8 matmul's *int32 accumulators*
+    (core/api.py::_int8_matmul).  Integer addition is exact, so the
+    fast path psums the payload as-is — bit-identical to the unsharded
+    matmul AND integer-on-the-wire, with no threshold pmax at all.
 
 Interconnect dtype contract (machine-checked): the static analyzer's
 ``drift.collective`` rule (repro.analysis.dtype_drift) fails CI on any
@@ -23,15 +30,35 @@ import jax
 import jax.numpy as jnp
 
 
-def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
-    """Mean-reduce ``x`` over ``axis_name`` with an int8-compressed payload.
+def compressed_psum(x: jax.Array, axis_name: str, *,
+                    mean: bool = True) -> jax.Array:
+    """Reduce ``x`` over ``axis_name`` with an integer wire payload.
 
-    The threshold is the max|x| across the axis (so every participant uses
-    the same scale — a pmax of one scalar), the payload is int8, and the
-    accumulation runs in int32 (no overflow below 2**24 participants).
-    Returns the dequantized mean; error is bounded by step/2 per element.
+    Integer inputs take the exact fast path: the payload rides the wire
+    as int32 and the int32 *sum* is returned (dequantization is the
+    caller's job — the tensor-parallel epilogue divides by nothing, it
+    applies the weight scale once after the reduce).  ``mean=True`` is
+    rejected there because an integer mean would truncate.
+
+    Float inputs quantize to int8 first: the threshold is the max|x|
+    across the axis (so every participant uses the same scale — a pmax
+    of one scalar), the payload is int8, and the accumulation runs in
+    int32 (no overflow below 2**24 participants).  Returns the
+    dequantized mean (``mean=True``, the gradient contract) or sum;
+    error is bounded by step/2 per element.  A zero or non-finite
+    max-abs falls back to the 1e-8 threshold floor, and NaN payload
+    elements quantize as 0 — a poisoned shard can never corrupt the
+    shared scale or the other shards' contributions.
     """
-    xf = x.astype(jnp.float32)
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        if mean:
+            raise ValueError(
+                "integer payloads reduce exactly; a mean would truncate — "
+                "pass mean=False and rescale after the reduce")
+        return jax.lax.psum(x.astype(jnp.int32), axis_name)
+    # NaN floor: squash poison BEFORE the shared-threshold pmax so one
+    # shard's NaN cannot widen every shard's quantization step to NaN
+    xf = jnp.nan_to_num(x.astype(jnp.float32), nan=0.0)
     # the ONE float collective in the engine: a single f32 scalar (see
     # module docstring / analysis allowlist) — keep it scalar; widening
     # it would trip drift.collective in CI, by design
@@ -41,5 +68,8 @@ def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
     # integer-accumulator contract: the payload psum stays int32 —
     # dequantization happens once, after the reduce, never on the wire
     acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
-    n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
-    return (acc.astype(jnp.float32) * s / n.astype(jnp.float32)).astype(x.dtype)
+    out = acc.astype(jnp.float32) * s
+    if mean:
+        n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+        out = out / n.astype(jnp.float32)
+    return out.astype(x.dtype)

@@ -46,16 +46,35 @@ def _active_mesh():
     return None
 
 
+def _in_manual_context() -> bool:
+    """True inside a ``shard_map`` body (mesh axes are manual there —
+    ``with_sharding_constraint`` over those axes is at best a no-op and
+    at worst a hard error, so the constraint must stand down)."""
+    try:
+        from jax._src.core import get_axis_env
+
+        return bool(get_axis_env().axis_sizes)
+    except Exception:
+        return False
+
+
 def constrain_activation(x: jax.Array, *, carry: bool = False) -> jax.Array:
     """Pin an activation's sharding; identity when no mesh/rules are active.
 
     Only rank-2/3 float batch-major tensors are constrained — anything else
     (scalars, threshold vectors, integer token ids of other ranks) passes
-    through untouched.
+    through untouched.  Inside a traced context with no rules installed,
+    or inside a ``shard_map`` body (manual axes), this is an explicit
+    no-op — model code must be callable under any tracer without the
+    process-global install ever having happened.
     """
     rules = _RULES
+    if rules is None or not hasattr(x, "ndim"):
+        return x
+    if _in_manual_context():
+        return x
     mesh = _active_mesh()
-    if rules is None or mesh is None or not hasattr(x, "ndim"):
+    if mesh is None:
         return x
     if x.ndim == 2:  # (B, S) token ids
         spec = P(rules.act_batch, None)

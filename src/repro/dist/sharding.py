@@ -65,6 +65,148 @@ def qparam_specs(model, params_a, qparams_a, rules: ShardingRules):
     return jax.tree.map(lambda _: P(), qparams_a)
 
 
+# --------------------------------------------------------------------------
+# Tensor-parallel (Megatron-style) specs for the sharded serving engine
+# --------------------------------------------------------------------------
+#
+# ``param_specs`` above is shape-driven (good enough for the dry-run's
+# placement hillclimb) but serving TP needs ROLE-aware placement: a
+# row-parallel projection shards its *input* axis and must replicate its
+# per-output-channel scale, which shape alone cannot tell apart from a
+# column-parallel scale of the same length.  Roles come from the param
+# tree's own dict keys, the same path-classified idiom as ``cache_specs``.
+
+# column-parallel: output features split across shards (no epilogue)
+TP_COL_KEYS = frozenset({"wq", "wk", "wv", "gate", "up", "fc1"})
+# row-parallel: input features split; int32 psum epilogue after the dot
+TP_ROW_KEYS = frozenset({"wo", "down", "fc2"})
+
+
+def _path_keys(path) -> list:
+    return [getattr(p, "key", getattr(p, "name", None)) for p in path]
+
+
+def tp_param_specs(params_a, *, tp: int, axis: str = "model"):
+    """PartitionSpec tree for tensor-parallel serving params.
+
+    Column-parallel weights shard the last (output) axis; their
+    per-channel scales/biases follow.  Row-parallel weights shard the
+    second-to-last (input) axis; their scales/biases replicate (the
+    output axis is whole on every shard after the psum epilogue).
+    Everything else — embeddings, norms, scalar scales — replicates.
+    Leading scan-stack axes are counted from the end so stacked (L, in,
+    out) params place identically to unstacked ones.  Indivisible
+    sharded axes raise: silent replication would desynchronize the
+    local-config model's shapes.
+    """
+    from jax.tree_util import tree_map_with_path
+
+    def spec(path, leaf):
+        keys = _path_keys(path)
+        role = next((k for k in reversed(keys[:-1])
+                     if k in TP_COL_KEYS or k in TP_ROW_KEYS), None)
+        if role is None or tp <= 1:
+            return P()
+        name = keys[-1]
+        shp = leaf.shape
+        if role in TP_ROW_KEYS:
+            if name in ("w", "w_q"):
+                if shp[-2] % tp:
+                    raise ValueError(
+                        f"{'/'.join(map(str, keys))}: input axis {shp[-2]} "
+                        f"not divisible by tp={tp}")
+                return P(*((None,) * (len(shp) - 2) + (axis, None)))
+            return P()  # w_scale/bias span the whole output axis
+        if name in ("w", "w_q"):
+            if shp[-1] % tp:
+                raise ValueError(
+                    f"{'/'.join(map(str, keys))}: output axis {shp[-1]} "
+                    f"not divisible by tp={tp}")
+            return P(*((None,) * (len(shp) - 1) + (axis,)))
+        if len(shp) >= 1 and shp[-1] > 1 and shp[-1] % tp == 0:
+            # per-output-channel companions: w_scale, b, b_q, b_scale
+            return P(*((None,) * (len(shp) - 1) + (axis,)))
+        return P()  # scalar scales
+
+    return tree_map_with_path(spec, params_a)
+
+
+def tp_qparam_specs(qparams_a, *, tp: int, n_kv: int, axis: str = "model"):
+    """Threshold state under TP: activation thresholds are per-tensor
+    scalars (replicate — the frozen §2 scale must be IDENTICAL on every
+    shard for local-quantize == slice-of-global-quantize), but the
+    per-KV-head cache thresholds split with their heads so each shard's
+    ``_kv_scales`` sees exactly its local heads."""
+    from jax.tree_util import tree_map_with_path
+
+    from repro.core.api import is_kv_path
+
+    def spec(path, leaf):
+        keys = _path_keys(path)
+        shp = getattr(leaf, "shape", ())
+        if (tp > 1 and keys and isinstance(keys[0], str)
+                and is_kv_path(keys[0]) and len(shp) >= 1
+                and shp[-1] == n_kv and n_kv % tp == 0):
+            return P(*((None,) * (len(shp) - 1) + (axis,)))
+        return P()
+
+    return tree_map_with_path(spec, qparams_a)
+
+
+def tp_cache_specs(cache_a, *, tp: int, axis: str = "model"):
+    """KV cache under TP: the KV-head axis (axis -2 of every 4-d k/v
+    leaf — dense (B, S, KV, D), ring (B, W, KV, D) and paged pools
+    (T, ps, KV, D) alike) splits with the heads, as do the per-head
+    (KV,) dequant scale vectors.  Block tables and positions replicate.
+    """
+    from jax.tree_util import tree_map_with_path
+
+    def spec(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1] if keys else None
+        shp = leaf.shape
+        if tp <= 1:
+            return P()
+        if name in ("k", "v") and len(shp) >= 4:
+            if shp[-2] % tp:
+                raise ValueError(
+                    f"cache {name}: KV-head axis {shp[-2]} not divisible "
+                    f"by tp={tp}")
+            return P(*((None,) * (len(shp) - 2) + (axis, None)))
+        if name in ("k_scale", "v_scale") and len(shp) >= 1 \
+                and shp[-1] % tp == 0:
+            return P(*((None,) * (len(shp) - 1) + (axis,)))
+        return P()
+
+    return tree_map_with_path(spec, cache_a)
+
+
+def sp_cache_specs(cache_a, *, sp: int, axis: str = "model"):
+    """KV cache under sequence parallelism: delegate to ``cache_specs``'s
+    'seq' layout (the S axis of each k/v leaf splits over the model
+    axis); scales and positions replicate.  A thin wrapper so the
+    serving engine and the dry-run hillclimb share one classification.
+    """
+    from jax.tree_util import tree_map_with_path
+
+    def check(path, leaf):
+        keys = _path_keys(path)
+        if keys and keys[-1] in ("k", "v") and len(leaf.shape) >= 4:
+            s_axis = len(leaf.shape) - 3  # KV tail is (B, S, KV, D)
+            if leaf.shape[s_axis] % sp:
+                raise ValueError(
+                    f"cache {keys[-1]}: sequence axis {leaf.shape[s_axis]} "
+                    f"not divisible by sp={sp}")
+        return leaf
+
+    tree_map_with_path(check, cache_a)
+    # act_batch=None: on the 1-axis serving mesh an indivisible leaf has
+    # already raised above, so the 'batch' fallback must stay unsharded
+    rules = ShardingRules(act_batch=None, tensor=axis,
+                          kv_cache_layout="seq", model_axis_size=sp)
+    return cache_specs(cache_a, rules, sp)
+
+
 def batch_specs(batch_a, rules: ShardingRules):
     """Batch inputs shard the leading batch dim over the data axis."""
 

@@ -77,13 +77,11 @@ from repro.kernels.tpu_compat import tpu_compiler_params
 NEG_INF = -1e30
 
 
-def _kernel(tab_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, o_ref,
-            acc_ref, m_ref, l_ref, *, n_s: int, block_s: int, dim: int,
-            kv_bits: int):
-    # tab_ref is the scalar-prefetch block table: consumed by the K/V
-    # index maps (page steering), never by the compute body
-    del tab_ref
-    si = pl.program_id(2)
+def _flash_step(q_ref, k_ref, v_ref, ks_ref, pos_ref, acc_ref, m_ref,
+                l_ref, si, *, block_s: int, dim: int, kv_bits: int):
+    """One online-softmax tile update (shared by the normalized kernel
+    and the sequence-parallel partials kernel — same math up to, but not
+    including, the epilogue)."""
 
     @pl.when(si == 0)
     def _init():
@@ -130,11 +128,43 @@ def _kernel(tab_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, o_ref,
     )
     m_ref[...] = m_new
 
+
+def _kernel(tab_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, n_s: int, block_s: int, dim: int,
+            kv_bits: int):
+    # tab_ref is the scalar-prefetch block table: consumed by the K/V
+    # index maps (page steering), never by the compute body
+    del tab_ref
+    si = pl.program_id(2)
+    _flash_step(q_ref, k_ref, v_ref, ks_ref, pos_ref, acc_ref, m_ref,
+                l_ref, si, block_s=block_s, dim=dim, kv_bits=kv_bits)
+
     @pl.when(si == n_s - 1)
     def _epilogue():
         # value dequant folds once into the epilogue (linear in v)
         o = acc_ref[...] * vs_ref[0, 0] / jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def _partials_kernel(tab_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref,
+                     oa_ref, om_ref, ol_ref, acc_ref, m_ref, l_ref, *,
+                     n_s: int, block_s: int, dim: int, kv_bits: int):
+    """Sequence-parallel epilogue: emit the raw flash state (unnormalized
+    accumulator — value-dequantized, since v_scale is linear in v — plus
+    running max and normalizer) instead of normalizing.  One shard of a
+    sequence-split cache runs this over its LOCAL tiles; the cross-shard
+    merge (repro.shard.partial_softmax.sp_partial_combine) produces the
+    exact unsharded softmax from the gathered (m, l, acc) triples."""
+    del tab_ref
+    si = pl.program_id(2)
+    _flash_step(q_ref, k_ref, v_ref, ks_ref, pos_ref, acc_ref, m_ref,
+                l_ref, si, block_s=block_s, dim=dim, kv_bits=kv_bits)
+
+    @pl.when(si == n_s - 1)
+    def _epilogue():
+        oa_ref[0, 0] = (acc_ref[...] * vs_ref[0, 0]).astype(oa_ref.dtype)
+        om_ref[0, 0] = m_ref[...].astype(om_ref.dtype)
+        ol_ref[0, 0] = l_ref[...].astype(ol_ref.dtype)
 
 
 @functools.partial(
@@ -269,3 +299,119 @@ def _scratch(g, d):
         pltpu.VMEM((g, 1), jnp.float32),  # running max
         pltpu.VMEM((g, 1), jnp.float32),  # running normalizer
     ]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "kv_bits"))
+def decode_attention_partials_tiles(
+    q: jax.Array,          # (B, KV, G, D) float — one query token, GQA view
+    k_pool: jax.Array,     # (pages, block_s, KV, D) int8/float
+    v_pool: jax.Array,     # (pages, block_s, KV, D)
+    block_tab: jax.Array,  # (B, n_blocks) int32
+    k_scale: jax.Array,    # (KV,) f32
+    v_scale: jax.Array,    # (KV,) f32
+    cur_pos: jax.Array,    # int32 valid-slot count: scalar or per-slot (B,)
+    *,
+    interpret: bool = False,
+    kv_bits: int = 8,
+):
+    """Partial-softmax variant of ``decode_attention_tiles`` for the
+    sequence-parallel engine: same grid, same block specs, same online-
+    softmax body, but the epilogue emits the raw flash state —
+    (acc, m, l) with acc UNNORMALIZED (already v-dequantized) — so a
+    shard holding a slice of the S axis can hand its partials to the
+    cross-shard tree merge.  ``cur_pos`` here counts the valid slots IN
+    THIS POOL (the caller clips the global count to its local slice);
+    a shard with nothing visible returns (0, NEG_INF, 0) — the merge
+    identity.  Returns ((B, KV, G, D) f32, (B, KV, G) f32, (B, KV, G)
+    f32).  The single-shard invariant ``acc / max(l, eps) ==
+    decode_attention_tiles(...)`` is pinned in tests/test_sharded.py."""
+    b, kvh, g, d = q.shape
+    dp = k_pool.shape[-1]
+    assert dp * (2 if kv_bits == 4 else 1) == d
+    bs = k_pool.shape[1]
+    n_s = block_tab.shape[1]
+
+    kernel = functools.partial(_partials_kernel, n_s=n_s, block_s=bs,
+                               dim=d, kv_bits=kv_bits)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, h, si, tab: (bi, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dp),
+                         lambda bi, h, si, tab: (tab[bi, si], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, dp),
+                         lambda bi, h, si, tab: (tab[bi, si], 0, h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, si, tab: (h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, si, tab: (h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, si, tab: (bi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bi, h, si, tab: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1),
+                         lambda bi, h, si, tab: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1),
+                         lambda bi, h, si, tab: (bi, h, 0, 0)),
+        ],
+        scratch_shapes=_scratch(g, d),
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kvh, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, g, 1), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(
+        block_tab.astype(jnp.int32),
+        q,
+        k_pool,
+        v_pool,
+        k_scale.reshape(kvh, 1).astype(jnp.float32),
+        v_scale.reshape(kvh, 1).astype(jnp.float32),
+        jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32).reshape(-1),
+                         (b,)).reshape(b, 1),
+    )
+    return acc, m[..., 0], l[..., 0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_s", "interpret", "kv_bits"))
+def decode_attention_partials(
+    q: jax.Array,        # (B, KV, G, D)
+    k_cache: jax.Array,  # (B, S_local, KV, D) — ONE shard's cache slice
+    v_cache: jax.Array,
+    k_scale: jax.Array,  # (KV,) f32
+    v_scale: jax.Array,
+    cur_pos: jax.Array,  # int32 LOCAL valid-slot count: scalar or (B,)
+    *,
+    block_s: int = 128,
+    interpret: bool = False,
+    kv_bits: int = 8,
+):
+    """Dense entry point for the partials kernel (identity block table
+    over the shard-local cache slice — same degenerate-table trick as
+    ``decode_attention_int8``)."""
+    b, kvh, g, d = q.shape
+    d = k_cache.shape[-1]
+    s = k_cache.shape[1]
+    bs = max(8, min(block_s, s) // 8 * 8)
+    while bs > 8 and s % bs:
+        bs -= 8
+    s_pad = -(-s // bs) * bs
+    if s_pad != s:
+        pad = [(0, 0), (0, s_pad - s), (0, 0), (0, 0)]
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+    n_s = s_pad // bs
+    k_pool = k_cache.reshape(b * n_s, bs, kvh, d)
+    v_pool = v_cache.reshape(b * n_s, bs, kvh, d)
+    tab = jnp.arange(b * n_s, dtype=jnp.int32).reshape(b, n_s)
+    return decode_attention_partials_tiles(
+        q, k_pool, v_pool, tab, k_scale, v_scale, cur_pos,
+        interpret=interpret, kv_bits=kv_bits)

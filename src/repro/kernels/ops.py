@@ -79,6 +79,32 @@ def decode_attention_view(q, view, k_scale, v_scale, cur_pos, **kw):
         interpret=_interpret(), kv_bits=view.bits, **kw)
 
 
+def decode_attention_partials(q, k_cache, v_cache, k_scale, v_scale,
+                              cur_pos, **kw):
+    """Partial-softmax flash-decode over ONE shard's dense cache slice
+    (sequence-parallel serving).  Same inputs as ``decode_attention`` but
+    ``cur_pos`` counts the LOCAL visible slots and the return is the raw
+    flash state ``(acc, m, l)`` — acc (B, KV, G, D) unnormalized (value-
+    dequantized), m/l (B, KV, G) — for the cross-shard merge in
+    ``repro.shard.partial_softmax.sp_partial_combine``."""
+    return _da.decode_attention_partials(
+        q, k_cache, v_cache, k_scale, v_scale, cur_pos,
+        interpret=_interpret(), **kw)
+
+
+def decode_attention_partials_view(q, view, k_scale, v_scale, cur_pos,
+                                   **kw):
+    """Partials variant of ``decode_attention_view``: same dense-vs-paged
+    (and ``view.bits``) routing, raw ``(acc, m, l)`` flash state out."""
+    if view.block_table is None:
+        return _da.decode_attention_partials(
+            q, view.k, view.v, k_scale, v_scale, cur_pos,
+            interpret=_interpret(), kv_bits=view.bits, **kw)
+    return _da.decode_attention_partials_tiles(
+        q, view.k, view.v, view.block_table, k_scale, v_scale, cur_pos,
+        interpret=_interpret(), kv_bits=view.bits, **kw)
+
+
 def prefill_attention(q, k, v, k_scale, v_scale, q_start, kv_len, **kw):
     """Fused flash-prefill over an int8 (or unit-scale float) KV stream.
 

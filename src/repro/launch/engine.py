@@ -171,6 +171,7 @@ class Engine:
     # -- assembly ----------------------------------------------------------
     @classmethod
     def from_checkpoint(cls, arch: str = "smollm-135m", *,
+                        cfg=None,
                         checkpoint_dir: Optional[str] = None,
                         smoke: bool = True, fp: bool = False,
                         kv_int8: bool = True, kv_bits: int = 8,
@@ -194,9 +195,13 @@ class Engine:
         overrides the default data-pipeline calibration stream
         (``n_calib`` batches of (calib_batch, calib_len) tokens).
         Remaining ``engine_kw`` go to ``Engine.__init__`` (cache_layout,
-        page_size, temperature, ...).
+        page_size, temperature, ...).  ``cfg`` overrides the registry
+        lookup with an explicit :class:`ModelConfig` (e.g. a
+        ``cfg.replace(...)`` variant with shard-divisible head counts
+        for the sharded engine); ``arch``/``smoke`` are ignored then.
         """
-        cfg = get_config(arch, smoke=smoke)
+        if cfg is None:
+            cfg = get_config(arch, smoke=smoke)
         model = build_model(cfg)
         use_pallas = (jax.default_backend() == "tpu" if use_pallas is None
                       else use_pallas)

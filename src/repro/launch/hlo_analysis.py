@@ -221,3 +221,66 @@ def analyze(hlo: str, entry_hint: str | None = None) -> HloCosts:
                 if pm:
                     costs.cpu_upcast_artifact_bytes += out_bytes
     return costs
+
+
+# ---------------------------------------------------------------------------
+# Interconnect dtype contract (sharded serving)
+# ---------------------------------------------------------------------------
+#
+# The sharded engine's exactness story (docs/serving.md "Sharded serving")
+# rests on every ALL-REDUCE moving integer bytes: tensor-parallel epilogues
+# psum the int8 matmul's int32 accumulators (exact integer addition), and
+# the one sanctioned float collective is compressed_psum's scalar f32 pmax
+# threshold.  These helpers prove that property on the post-optimization
+# HLO — the same text the roofline parser reads — so the contract holds
+# after every fusion/SPMD rewrite, not just in the jaxpr.
+
+_INT_DTYPES = frozenset({"s8", "u8", "s16", "u16", "s32", "u32", "s64",
+                         "u64", "pred"})
+_AR_SPLIT = re.compile(r"=\s*(.*?)\s*(?:all-reduce|all-reduce-start)\(")
+
+
+def all_reduce_payloads(hlo: str) -> List[tuple]:
+    """Every all-reduce payload in the module as (dtype, elems) tuples.
+
+    Tuple-result all-reduces (variadic reduction) contribute one entry
+    per element; `all-reduce-done` lines repeat the `-start` shape and
+    are skipped so a payload is never double-counted.
+    """
+    out = []
+    for line in hlo.splitlines():
+        s = line.strip()
+        if ("all-reduce(" not in s and "all-reduce-start(" not in s) \
+                or "all-reduce-done" in s:
+            continue
+        m = _AR_SPLIT.search(s)
+        if not m:
+            continue
+        for dtype, dims in _SHAPE_RE.findall(m.group(1)):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            out.append((dtype, n))
+    return out
+
+
+def check_integer_all_reduces(hlo: str, *, allow_f32_scalars: int = 1):
+    """(ok, findings): every all-reduce payload must be integer-typed,
+    excepting up to ``allow_f32_scalars`` SCALAR f32 payloads (the
+    compressed_psum shared-threshold pmax).  A float tensor payload is
+    always a violation — that is exactly the hole the drift.collective
+    rule exists to keep closed."""
+    findings = []
+    scalars_seen = 0
+    for dtype, elems in all_reduce_payloads(hlo):
+        if dtype in _INT_DTYPES:
+            continue
+        if elems <= 1 and scalars_seen < allow_f32_scalars:
+            scalars_seen += 1
+            continue
+        findings.append(
+            f"all-reduce moves {dtype}[{elems}] — serving-path reduces "
+            "must carry integer payloads (route them through "
+            "dist/collectives.py::compressed_psum)")
+    return (not findings), findings

@@ -32,6 +32,24 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes, devices=devs[:n])
 
 
+def make_serving_mesh(n: int, *, axis: str = "model"):
+    """1-axis mesh over the first ``n`` local devices for the sharded
+    serving engine (repro.shard): tensor-parallel OR sequence-parallel
+    shards both live on one ``model`` axis.  On a single-host CPU run
+    the devices come from ``XLA_FLAGS=--xla_force_host_platform_device_
+    count=N`` (the `sharded` CI lane sets 4)."""
+    from repro.dist.compat import make_mesh
+
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"serving mesh ({axis}={n}) needs {n} devices, found "
+            f"{len(devs)} — set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n} before any jax import, or lower --tp/--sp"
+        )
+    return make_mesh((n,), (axis,), devices=devs[:n])
+
+
 def make_host_mesh():
     """Single-device mesh for CPU examples/tests (same axis names)."""
     from repro.dist.compat import make_mesh

@@ -76,6 +76,15 @@ Usage:
          --strict (exit non-zero when any request retires non-'ok' —
              lets chaos CI and scripts gate on degraded runs)
          --ckpt-dir DIR (restore trained params instead of random init)
+         --tp N / --sp N (sharded serving over N devices: tensor-
+             parallel projections with int32 psum epilogues / sequence-
+             parallel KV with exact partial-softmax merge — mutually
+             exclusive, both token-identical to the unsharded engine;
+             docs/serving.md "Sharded serving")
+         --mesh {auto,dryrun} (auto = build the serving mesh and serve;
+             dryrun = compile the sharded executables, print the HLO
+             collective audit — every serving-path all-reduce must carry
+             integer payload bytes — and exit, 1 if the audit fails)
 
 Every request retires with a terminal ``Completion.status`` (ok |
 rejected | timeout | preempted | shed | failed — docs/serving.md
@@ -315,7 +324,29 @@ def main():
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained params from a launch/train.py "
                          "checkpoint directory (default: random init)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shard count: projections split "
+                         "across N devices, row epilogues all-reduce int32 "
+                         "accumulators (requires int8 mode; token-identical "
+                         "to --tp 1)")
+    ap.add_argument("--sp", type=int, default=1,
+                    help="sequence-parallel shard count: the KV cache's "
+                         "sequence axis splits across N devices, decode "
+                         "merges per-shard flash partials exactly (dense/"
+                         "ring cache layouts; token-identical to --sp 1)")
+    ap.add_argument("--mesh", default="auto", choices=["auto", "dryrun"],
+                    help="sharded-serving mesh mode: auto = build "
+                         "make_serving_mesh(max(tp, sp)) and serve; dryrun "
+                         "= compile the sharded prefill/decode executables, "
+                         "print the HLO collective audit (int8-on-the-wire "
+                         "assertion) and exit without serving")
     args = ap.parse_args()
+    if (args.tp > 1 or args.sp > 1) and args.fp:
+        ap.error("--tp/--sp shard the int8 engine (--fp has no integer "
+                 "accumulators to reduce exactly)")
+    if args.mesh == "dryrun" and args.tp <= 1 and args.sp <= 1:
+        ap.error("--mesh dryrun audits the sharded executables — give it "
+                 "--tp N or --sp N")
     if (args.journal or args.snapshot_dir or args.restore
             or args.strict) and not args.max_slots:
         ap.error("--journal/--snapshot-dir/--restore/--strict need "
@@ -338,8 +369,17 @@ def main():
 
     use_pallas = (jax.default_backend() == "tpu" if args.pallas is None
                   else args.pallas)
-    engine = Engine.from_checkpoint(
+    sharded = args.tp > 1 or args.sp > 1
+    engine_cls = Engine
+    shard_kw = {}
+    if sharded:
+        from repro.shard.engine import ShardedEngine
+
+        engine_cls = ShardedEngine
+        shard_kw = dict(tp=args.tp, sp=args.sp)
+    engine = engine_cls.from_checkpoint(
         args.arch, checkpoint_dir=args.ckpt_dir, smoke=args.smoke,
+        **shard_kw,
         fp=args.fp, kv_int8=not args.no_kv_int8, kv_bits=args.kv_bits,
         finetune_thresholds=args.finetune_thresholds, use_pallas=use_pallas,
         calib_batch=args.requests, calib_len=args.prompt_len,
@@ -354,6 +394,18 @@ def main():
     if not args.fp:
         print(f"[serve] converted: {engine.n_int8_weights()} int8 weight "
               "tensors resident")
+    if sharded:
+        print(f"[serve] sharded serving: tp={args.tp} sp={args.sp} over "
+              f"{max(args.tp, args.sp)} devices")
+        if args.mesh == "dryrun":
+            import json
+
+            report = engine.dry_run_report(batch=args.requests,
+                                           prompt_len=args.prompt_len)
+            print(json.dumps(report, indent=2, default=str))
+            verdict = report["int8_all_reduces_ok"]
+            print(f"[serve] dryrun: int8_all_reduces_ok={verdict}")
+            raise SystemExit(0 if verdict else 1)
 
     if args.max_slots:
         return run_continuous(args, engine)

@@ -51,6 +51,18 @@ from repro.models.module import Dense, Module
 NEG_INF = -1e30
 
 
+def _sp_info():
+    """Trace-time sequence-parallel context (repro.shard.context), or
+    None on the unsharded path.  Imported lazily: repro.shard layers on
+    top of the model stack, so a module-level import would be a cycle —
+    and the unsharded engine should not pay for it at all."""
+    try:
+        from repro.shard.context import sp_shard_info
+    except ImportError:
+        return None
+    return sp_shard_info()
+
+
 def _gqa_scores(q, k):
     """q: (B,Sq,KV,G,D)  k: (B,Sk,KV,D) -> (B,KV,G,Sq,Sk)."""
     return jnp.einsum("bqkgd,bskd->bkgqs", q, k)
@@ -518,6 +530,10 @@ class Attention(Module):
         # quantize once: the same tiles are appended AND (kernel path)
         # attended — no bf16 K/V re-materialization between the two
         kq, vq = cache.ready(k, v)
+        sp = _sp_info()
+        if sp is not None:
+            return self._sp_prefill(params, x, cache, ctx, q, k, v, kq, vq,
+                                    chunked, q_offset, kv_limit, sp)
         use_kernel = (ctx is not None and ctx.policy.use_pallas
                       and self.causal)
 
@@ -582,6 +598,48 @@ class Attention(Module):
         o = o.reshape(b, s, self.n_heads * self.head_dim)
         return self.wo(params["wo"], o, ctx), new_cache
 
+    def _sp_prefill(self, params, x, cache, ctx, q, k, v, kq, vq, chunked,
+                    q_offset, kv_limit, sp):
+        """Sequence-parallel prefill: each shard keeps the cache rows it
+        owns (repro.shard.seq_cache owner writes — drop-mode scatters,
+        never clamping slices).  One-shot chunks attend their own K/V
+        stream directly (no gather needed — the prompt IS the visible
+        sequence); chunked prefill all-gathers the int8 tiles and
+        attends the bit-identical global view."""
+        from repro.shard import seq_cache
+
+        b, s, _ = x.shape
+        if cache.layout != "dense":
+            raise ValueError(
+                f"{self.path}: sequence-parallel serving shards the dense "
+                f"cache's S axis — layout {cache.layout!r} unsupported")
+        if chunked:
+            new_cache = seq_cache.owner_append(cache, kq, vq, q_offset,
+                                               sp.axis)
+            # inside shard_map ``capacity`` is the LOCAL slice length —
+            # the gathered view below spans sp * capacity rows
+            cap = cache.capacity * sp.sp
+            limit = cap if kv_limit is None else min(kv_limit, cap)
+            k_eff, v_eff = seq_cache.gathered_dense(new_cache, sp.axis,
+                                                    limit)
+            o = flash_attention(q, k_eff, v_eff, causal=True,
+                                q_chunk=self.q_chunk,
+                                kv_chunk=self.kv_chunk,
+                                q_offset=q_offset,
+                                window=self.window).astype(x.dtype)
+        else:
+            new_cache = seq_cache.owner_append(cache, kq, vq, 0, sp.axis)
+            if self.window is not None and s > self.window:
+                o = sliding_window_attention(q, k, v, window=self.window,
+                                             q_chunk=self.q_chunk)
+            else:
+                o = flash_attention(q, k, v, causal=self.causal,
+                                    q_chunk=self.q_chunk,
+                                    kv_chunk=self.kv_chunk,
+                                    window=self.window)
+        o = o.reshape(b, s, self.n_heads * self.head_dim)
+        return self.wo(params["wo"], o, ctx), new_cache
+
     def decode(self, params, x, cache: KVCache, cur_pos, ctx=None, *,
                memory=None, slot_mask=None):
         """Single-token decode. x: (B,1,d); cur_pos: tokens already cached
@@ -616,6 +674,10 @@ class Attention(Module):
                 "needs absolute slots (a dense cache or paged layout); the "
                 "SWA ring buffer drops them — size the cache >= max_len or "
                 "decode with a scalar position")
+        sp = _sp_info()
+        if sp is not None:
+            return self._sp_decode(params, x, cache, cur_pos, ctx, q, k, v,
+                                   per_slot, slot_mask, sp)
         if per_slot:
             pos_vec = jnp.broadcast_to(
                 jnp.asarray(cur_pos, jnp.int32).reshape(-1), (b,))
@@ -674,6 +736,61 @@ class Attention(Module):
         o = o.reshape(b, s, self.n_heads * self.head_dim)
         return self.wo(params["wo"], o, ctx), upd
 
+    def _sp_decode(self, params, x, cache, cur_pos, ctx, q, k, v, per_slot,
+                   slot_mask, sp):
+        """Sequence-parallel flash-decode: the owning shard writes the new
+        token's K/V (drop-mode scatter), every shard scores its LOCAL
+        visible keys into (m, l, acc) flash partials, and
+        ``sp_partial_combine`` merges them into the exact unsharded
+        softmax (repro.shard.partial_softmax) — the wire carries the
+        tiny partial state, never the S-sized K/V stream."""
+        from repro.shard import partial_softmax as PS
+        from repro.shard import seq_cache
+
+        b, s, _ = x.shape
+        if cache.layout != "dense":
+            raise ValueError(
+                f"{self.path}: sequence-parallel serving shards the dense "
+                f"cache's S axis — layout {cache.layout!r} unsupported")
+        if self.window is not None:
+            raise ValueError(
+                f"{self.path}: sliding-window decode is local by "
+                "construction — run SWA layers unsharded (sp=1)")
+        if per_slot:
+            pos_vec = jnp.broadcast_to(
+                jnp.asarray(cur_pos, jnp.int32).reshape(-1), (b,))
+            q, k = self._rope(q, k, pos_vec[:, None], pos_vec[:, None])
+            kq, vq = cache.ready(k, v)
+            upd = seq_cache.owner_append_slots(cache, kq, vq, pos_vec,
+                                               sp.axis, active=slot_mask)
+            valid = pos_vec + 1
+            if slot_mask is not None:
+                valid = jnp.where(slot_mask, valid, 0)
+        else:
+            pos = jnp.full((s,), 0) + cur_pos
+            q, k = self._rope(q, k, pos, pos)
+            kq, vq = cache.ready(k, v)
+            upd = seq_cache.owner_append(cache, kq, vq, cur_pos, sp.axis)
+            valid = jnp.broadcast_to(
+                jnp.asarray(cur_pos, jnp.int32) + 1, (b,))
+        shard_idx, s_local = seq_cache.shard_slice_info(upd, sp.axis)
+        valid_local = jnp.clip(valid - shard_idx * s_local, 0, s_local)
+        use_kernel = (cache.quantized and ctx is not None
+                      and ctx.policy.use_pallas)
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            acc, m, l = kops.decode_attention_partials_view(
+                q[:, 0], upd.kernel_view(), *upd.scales(), valid_local)
+            m, l, acc = m[..., None], l[..., None], acc[..., None, :]
+        else:
+            k_eff, v_eff = upd.dequantize(upd.k, upd.v)
+            m, l, acc = PS.local_decode_partials(q, k_eff, v_eff,
+                                                 valid_local)
+        o = PS.sp_partial_combine(m, l, acc, sp.axis).astype(x.dtype)
+        o = o.reshape(b, s, self.n_heads * self.head_dim)
+        return self.wo(params["wo"], o, ctx), upd
+
     def verify(self, params, x, cache: KVCache, cur_pos, ctx=None, *,
                slot_mask=None):
         """Speculative-verify pass: s draft-window tokens per slot, each
@@ -710,6 +827,26 @@ class Attention(Module):
         positions = pos_vec[:, None] + jnp.arange(s)            # (B, s)
         q, k = self._rope(q, k, positions, positions)
         kq, vq = cache.ready(k, v)
+        sp = _sp_info()
+        if sp is not None:
+            from repro.shard import seq_cache
+
+            if cache.layout != "dense":
+                raise ValueError(
+                    f"{self.path}: sequence-parallel serving shards the "
+                    f"dense cache's S axis — layout {cache.layout!r} "
+                    "unsupported")
+            upd = seq_cache.owner_append_slots(cache, kq, vq, pos_vec,
+                                               sp.axis, active=slot_mask)
+            # a verify window is a short per-slot chunked prefill: gather
+            # the int8 tiles (integer on the wire) and attend globally
+            k_eff, v_eff = seq_cache.gathered_dense(upd, sp.axis)
+            pos_eff = (pos_vec if slot_mask is None
+                       else jnp.where(slot_mask, pos_vec, -1))
+            o = verify_attention(q, k_eff, v_eff, pos_eff,
+                                 window=self.window).astype(x.dtype)
+            o = o.reshape(b, s, self.n_heads * self.head_dim)
+            return self.wo(params["wo"], o, ctx), upd
         upd = cache.append_slots(kq, vq, pos_vec, active=slot_mask)
 
         use_kernel = (

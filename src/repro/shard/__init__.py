@@ -1,0 +1,25 @@
+"""Sharded serving: tensor + sequence-parallel engine over int8 collectives.
+
+The subsystem wires the Engine to a device mesh (docs/serving.md
+"Sharded serving"):
+
+  * ``ShardedModel`` — wraps the CausalLM method surface in
+    ``dist/compat.py::shard_map`` so every step maker, decode strategy
+    and the slot scheduler run UNCHANGED on the sharded path.
+  * tensor parallelism (tp) — Megatron-style head/ffn split; row
+    epilogues psum int32 accumulators through ``compressed_psum``
+    (bit-exact AND integer-on-the-wire).
+  * sequence parallelism (sp) — the KV cache's S axis splits across
+    shards; decode merges per-shard flash partials (m, l, acc) into the
+    exact unsharded softmax (``partial_softmax.sp_partial_combine``).
+  * ``ShardedEngine`` — the Engine facade with --tp/--sp/--mesh knobs.
+"""
+from repro.shard.context import (ShardContext, current_shard, shard_scope,
+                                 sp_shard_info, tp_shard_info)
+from repro.shard.engine import ShardedEngine
+from repro.shard.model import ShardedModel
+
+__all__ = [
+    "ShardContext", "ShardedEngine", "ShardedModel", "current_shard",
+    "shard_scope", "sp_shard_info", "tp_shard_info",
+]

@@ -1,0 +1,75 @@
+"""Trace-time shard context for the sharded serving engine.
+
+``ShardedModel`` traces the (local-config) model INSIDE a ``shard_map``
+body; the layers deep in that trace — ``core/api.py::dense_forward``'s
+row-parallel epilogue, ``models/attention.py``'s sequence-parallel cache
+writes — need to know the parallelism layout without threading a new
+argument through every Module signature.  This module is that side
+channel: a process-global, trace-time-only context installed around the
+``shard_map`` body by ``ShardedModel`` and consulted lazily by the
+hooks.  It holds ONLY static trace facts (axis name, shard counts) —
+never tracers — so installing it is free and forgetting to clear it
+cannot leak device state.
+
+Outside any ``shard_scope`` every query returns None and all hooks are
+inert: the unsharded engine's traces are bit-identical to before the
+subsystem existed.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardContext:
+    """Static parallelism facts for the trace under construction.
+
+    ``axis`` is the mesh axis name both tp and sp shard over (they are
+    mutually exclusive on the 1-axis serving mesh); ``tp``/``sp`` are
+    the shard counts (1 = off).
+    """
+
+    axis: str = "model"
+    tp: int = 1
+    sp: int = 1
+
+    def __post_init__(self):
+        if self.tp > 1 and self.sp > 1:
+            raise ValueError(
+                "tp and sp share the one 'model' mesh axis — run one of "
+                "them per engine (tp*sp composition needs a 2-axis mesh)")
+
+
+_CURRENT: Optional[ShardContext] = None
+
+
+def current_shard() -> Optional[ShardContext]:
+    """The installed context, or None (the unsharded default)."""
+    return _CURRENT
+
+
+@contextlib.contextmanager
+def shard_scope(ctx: ShardContext):
+    """Install ``ctx`` for the duration of a trace (re-entrant; restores
+    the previous context on exit even when tracing raises)."""
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = ctx
+    try:
+        yield ctx
+    finally:
+        _CURRENT = prev
+
+
+def tp_shard_info() -> Optional[ShardContext]:
+    """The context iff tensor parallelism is active (tp > 1)."""
+    c = _CURRENT
+    return c if c is not None and c.tp > 1 else None
+
+
+def sp_shard_info() -> Optional[ShardContext]:
+    """The context iff sequence parallelism is active (sp > 1)."""
+    c = _CURRENT
+    return c if c is not None and c.sp > 1 else None

@@ -1,0 +1,128 @@
+"""``ShardedEngine`` — the sharded-serving facade.
+
+An :class:`~repro.launch.engine.Engine` whose model is a
+:class:`~repro.shard.model.ShardedModel` over a one-axis device mesh
+(launch/mesh.py::make_serving_mesh).  Everything above the model surface
+— continuous batching, speculative decode, chunked prefill, journaling,
+snapshot/restore — is inherited UNCHANGED: the scheduler and strategies
+call the same four serving entry points, which now run under shard_map.
+
+    eng = ShardedEngine.from_checkpoint(arch="smollm-135m", smoke=True,
+                                        tp=2, cache_layout="dense")
+    out = eng.generate_batch(batch, gen=16)     # token-identical to tp=1
+
+Construction knobs on top of Engine's:
+
+``tp`` / ``sp``
+    Tensor-parallel / sequence-parallel shard counts (mutually
+    exclusive — they share the one mesh axis).  ``tp > 1`` requires
+    ``mode == 'int8'`` (the row epilogues reduce int32 accumulators);
+    ``sp > 1`` requires a dense-compatible cache layout (the S axis of
+    a paged pool has no contiguous shard slices).
+``mesh``
+    An explicit mesh (tests reuse one); default builds
+    ``make_serving_mesh(max(tp, sp))`` over host-local devices — on
+    CPU, ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+``dry_run_report`` compiles the sharded prefill + decode executables
+and proves the interconnect dtype contract on their post-optimization
+HLO: every serving-path all-reduce carries integer payload bytes
+(launch/hlo_analysis.py::check_integer_all_reduces, one sanctioned
+scalar f32 pmax), alongside the roofline's collective-byte counts.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.engine import Engine
+from repro.shard.model import ShardedModel
+
+
+class ShardedEngine(Engine):
+    """Engine over a tensor- or sequence-parallel mesh; see module
+    docstring.  With ``tp == sp == 1`` this is exactly an Engine (no
+    mesh, no shard_map) — the dry-run/degenerate mode."""
+
+    def __init__(self, model, cfg, policy, serve_params, qparams, *,
+                 tp: int = 1, sp: int = 1, mesh=None,
+                 mesh_axis: str = "model", **engine_kw):
+        if tp < 1 or sp < 1:
+            raise ValueError(f"tp/sp must be >= 1, got tp={tp} sp={sp}")
+        mode = engine_kw.get("mode", "int8")
+        if tp > 1 and mode != "int8":
+            raise ValueError(
+                f"tensor-parallel serving requires mode='int8' (got "
+                f"{mode!r}): the row epilogues reduce int32 accumulators "
+                "— float weights have nothing exact to psum")
+        if sp > 1 and engine_kw.get("cache_layout", "ring") == "paged":
+            raise ValueError(
+                "sequence-parallel serving shards the dense cache's S "
+                "axis — the paged pool has no contiguous shard slices "
+                "(use cache_layout='dense' or 'ring')")
+        n = max(tp, sp)
+        if mesh is None and n > 1:
+            from repro.launch.mesh import make_serving_mesh
+
+            mesh = make_serving_mesh(n, axis=mesh_axis)
+        self.tp, self.sp = tp, sp
+        self.mesh, self.mesh_axis = mesh, mesh_axis
+        if n > 1:
+            # ShardedModel validates exclusivity, divisibility, mesh size
+            model = ShardedModel(model, cfg, mesh, tp=tp, sp=sp,
+                                 axis=mesh_axis)
+        super().__init__(model, cfg, policy, serve_params, qparams,
+                         **engine_kw)
+
+    # -- interconnect dtype contract ---------------------------------------
+    def dry_run_report(self, *, batch: int = 2, prompt_len: int = 32,
+                       cache_len: Optional[int] = None) -> dict:
+        """Compile this engine's prefill + decode executables and audit
+        their post-optimization HLO.
+
+        Returns, per executable: the roofline's ``collective_bytes`` /
+        ``collective_by_kind``, the all-reduce payload list, and the
+        integer-all-reduce verdict.  Top-level ``int8_all_reduces_ok``
+        is the AND over executables — the assertion the ``sharded`` CI
+        lane enforces.  Compiles on the engine's mesh (host-local
+        devices), so this doubles as the pre-deploy smoke that the
+        sharded executables build at all.
+        """
+        from repro.launch import hlo_analysis as H
+        from repro.launch import steps as ST
+
+        if cache_len is None:
+            cache_len = self._cache_len(prompt_len, 32)
+        cache = self.init_cache(batch, cache_len)
+        toks = jnp.zeros((batch, prompt_len), jnp.int32)
+        prefill = jax.jit(ST.make_prefill_step(
+            self.model, self.cfg, self.policy, self.mode))
+        decode = jax.jit(ST.make_serve_step(
+            self.model, self.cfg, self.policy, self.mode))
+        entries = {
+            "prefill": (prefill, (self.serve_params, self.qparams,
+                                  {"tokens": toks}, cache)),
+            "decode": (decode, (self.serve_params, self.qparams,
+                                jnp.zeros((batch, 1), jnp.int32), cache,
+                                jnp.int32(prompt_len))),
+        }
+        report = {"tp": self.tp, "sp": self.sp, "executables": {}}
+        all_ok = True
+        for name, (fn, args) in entries.items():
+            hlo = fn.lower(*args).compile().as_text()
+            costs = H.analyze(hlo)
+            ok, findings = H.check_integer_all_reduces(hlo)
+            all_ok &= ok
+            report["executables"][name] = {
+                "collective_bytes": costs.collective_bytes,
+                "collective_by_kind": {
+                    k: v for k, v in costs.collective_by_kind.items()
+                    if v > 0},
+                "all_reduce_payloads": H.all_reduce_payloads(hlo),
+                "int8_all_reduces_ok": ok,
+                "findings": findings,
+            }
+        report["int8_all_reduces_ok"] = all_ok
+        return report

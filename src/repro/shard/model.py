@@ -1,0 +1,219 @@
+"""``ShardedModel`` — the serving model surface mapped over a device mesh.
+
+Wraps the global (unsharded) model and re-exposes exactly the four
+serving entry points the steps/scheduler/strategies layer calls —
+``prefill`` / ``prefill_chunk`` / ``decode_step`` / ``verify_step`` —
+each run through ``shard_map`` over the one-axis serving mesh
+(launch/mesh.py).  Everything else (``init_cache``, ``readout_fn``,
+``fold_plan``, ...) delegates to the wrapped model untouched, so the
+engine, the scheduler, continuous batching, speculative decode and
+recovery drive a ShardedModel exactly like the model it wraps.
+
+Two parallelism modes, mutually exclusive (they share the one mesh axis;
+``ShardContext`` enforces it):
+
+Tensor parallel (``tp > 1``)
+    The *inner* model is rebuilt with a LOCAL config —
+    ``n_heads/tp``, ``n_kv_heads/tp``, ``d_ff/tp`` — so inside
+    ``shard_map`` every trace sees ordinary local shapes and zero model
+    code changes.  Params shard by role (dist/sharding.py:
+    column-parallel projections split their output axis, row-parallel
+    ones their input axis), the KV cache splits its head axis, and the
+    per-KV-head threshold leaves follow their heads.  The only
+    collectives are the row-parallel int32 psum epilogues that
+    ``core.api._tp_reduce_axis`` routes through
+    ``dist.collectives.compressed_psum`` — integer payloads on the
+    interconnect, bit-identical to the unsharded product (integer
+    addition is exact, and the frozen per-tensor §2 activation scales
+    make each shard's local quantize a slice of the global one).
+    Requires ``mode == 'int8'`` (the float paths have no integer
+    accumulator to reduce exactly; ``dense_forward`` enforces this).
+
+Sequence parallel (``sp > 1``)
+    The inner model IS the global model; only the dense cache's S axis
+    splits (dist/sharding.py::sp_cache_specs).  The attention SP
+    branches (models/attention.py) write owner-shard rows, emit local
+    flash partials, and merge them exactly
+    (repro.shard.partial_softmax); chunked prefill / verify all-gather
+    the int8 tiles.  No all-reduce exists on this path at all, so the
+    HLO integer-all-reduce assertion stays trivially strict.
+
+``qparams`` travel as an EXPLICIT shard_map operand (a ctx built
+outside would smuggle outer-trace tracers into the inner trace); the
+inner ctx is rebuilt from the local leaves via ``core.api.make_ctx``.
+The ``ShardContext`` is installed with ``shard_scope`` only while the
+inner function traces — outside these four methods the process is
+bit-identical to the unsharded build.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.dist import compat
+from repro.dist.sharding import (P, sp_cache_specs, tp_cache_specs,
+                                 tp_param_specs, tp_qparam_specs)
+from repro.shard.context import ShardContext, shard_scope
+
+
+def _replicate(tree):
+    return jax.tree.map(lambda _: P(), tree)
+
+
+class ShardedModel:
+    """Serving-surface wrapper; see module docstring.
+
+    ``model``/``cfg`` are the GLOBAL model and config (caches, readout
+    and introspection keep global shapes); the mesh must expose
+    ``axis`` with size ``tp * sp``.
+    """
+
+    def __init__(self, model, cfg, mesh, *, tp: int = 1, sp: int = 1,
+                 axis: str = "model"):
+        # validates tp/sp exclusivity and positivity
+        self._shard_ctx = ShardContext(axis=axis, tp=tp, sp=sp)
+        n = max(tp, sp)
+        if axis not in mesh.shape:
+            raise ValueError(f"mesh has no {axis!r} axis (axes: "
+                             f"{tuple(mesh.shape)})")
+        if mesh.shape[axis] != n:
+            raise ValueError(
+                f"mesh axis {axis!r} has size {mesh.shape[axis]}, "
+                f"expected {n} (tp={tp}, sp={sp})")
+        if tp > 1:
+            for field, dim in (("n_heads", cfg.n_heads),
+                               ("n_kv_heads", cfg.n_kv_heads),
+                               ("d_ff", cfg.d_ff)):
+                if dim % tp:
+                    raise ValueError(
+                        f"cfg.{field}={dim} not divisible by tp={tp}")
+        self._model = model
+        self.cfg = cfg
+        self.mesh = mesh
+        self.tp, self.sp, self.axis = tp, sp, axis
+        if tp > 1:
+            from repro.models import build_model
+
+            # the local-config trick: inside shard_map every param/cache
+            # leaf arrives pre-sliced, so a model built at the LOCAL
+            # head/ff widths traces with ordinary dense shapes — same
+            # module paths (cfg.name is unchanged), same qparams keys
+            self._inner = build_model(cfg.replace(
+                n_heads=cfg.n_heads // tp,
+                n_kv_heads=cfg.n_kv_heads // tp,
+                d_ff=cfg.d_ff // tp,
+                head_dim=cfg.head_dim))
+        else:
+            self._inner = model
+
+    # -- spec builders (shape-driven, so they run at trace time) -----------
+    def _param_specs(self, params):
+        if self.tp > 1:
+            return tp_param_specs(params, tp=self.tp, axis=self.axis)
+        return _replicate(params)
+
+    def _qparam_specs(self, qparams):
+        if self.tp > 1:
+            return tp_qparam_specs(qparams, tp=self.tp,
+                                   n_kv=self.cfg.n_kv_heads,
+                                   axis=self.axis)
+        return _replicate(qparams)
+
+    def _cache_specs(self, cache):
+        if self.tp > 1:
+            return tp_cache_specs(cache, tp=self.tp, axis=self.axis)
+        if self.sp > 1:
+            return sp_cache_specs(cache, sp=self.sp, axis=self.axis)
+        return _replicate(cache)
+
+    def _inner_ctx(self, ctx, qparams):
+        if ctx is None:
+            return None
+        from repro.core import api as A
+
+        return A.make_ctx(ctx.mode, ctx.policy, qparams)
+
+    def _mapped(self, method: str, ctx, params, cache, pos_args,
+                kw_arrays=(), **static_kw):
+        """Build + invoke the shard_map'd form of one serving method.
+
+        Every array operand travels EXPLICITLY through shard_map (a
+        closure over outer-trace tracers would leak across the manual
+        boundary): ``pos_args`` are the replicated positional operands
+        (batch/tokens, positions), ``kw_arrays`` is a sequence of
+        (name, array-or-None) keyword operands — None entries fall back
+        to the method's default and never become operands.
+        ``static_kw`` holds trace-time constants (``kv_limit``).
+        Outputs are (replicated activations/logits, sharded cache).
+        shard_map traces eagerly at call time, so constructing the
+        wrapper per call costs one trace the surrounding jit caches.
+        """
+        qparams = {} if ctx is None else ctx.qparams
+        shard_ctx = self._shard_ctx
+        inner_model = self._inner
+        mode_policy = None if ctx is None else (ctx.mode, ctx.policy)
+        kw_names = [k for k, v in kw_arrays if v is not None]
+        kw_vals = [v for _, v in kw_arrays if v is not None]
+        n_pos = len(pos_args)
+
+        def inner(params, qparams, cache, *arrs):
+            ictx = None
+            if mode_policy is not None:
+                from repro.core import api as A
+
+                ictx = A.make_ctx(mode_policy[0], mode_policy[1], qparams)
+            kw = dict(zip(kw_names, arrs[n_pos:]), **static_kw)
+            with shard_scope(shard_ctx):
+                return getattr(inner_model, method)(
+                    params, arrs[0], cache, *arrs[1:n_pos], ictx, **kw)
+
+        cache_specs = self._cache_specs(cache)
+        operands = tuple(pos_args) + tuple(kw_vals)
+        fn = compat.shard_map(
+            inner, mesh=self.mesh,
+            in_specs=(self._param_specs(params),
+                      self._qparam_specs(qparams),
+                      cache_specs,
+                      *(_replicate(a) for a in operands)),
+            out_specs=(P(), cache_specs))
+        return fn(params, qparams, cache, *operands)
+
+    # -- the four serving entry points -------------------------------------
+    def prefill(self, params, batch, cache, ctx=None):
+        return self._mapped("prefill", ctx, params, cache, (batch,))
+
+    def prefill_chunk(self, params, tokens, cache, q_offset, ctx=None, *,
+                      lengths=None, kv_limit=None):
+        return self._mapped("prefill_chunk", ctx, params, cache,
+                            (tokens, q_offset),
+                            kw_arrays=(("lengths", lengths),),
+                            kv_limit=kv_limit)
+
+    def decode_step(self, params, tokens, cache, cur_pos, ctx=None, *,
+                    slot_mask=None):
+        return self._mapped("decode_step", ctx, params, cache,
+                            (tokens, cur_pos),
+                            kw_arrays=(("slot_mask", slot_mask),))
+
+    def verify_step(self, params, tokens, cache, cur_pos, ctx=None, *,
+                    slot_mask=None):
+        return self._mapped("verify_step", ctx, params, cache,
+                            (tokens, cur_pos),
+                            kw_arrays=(("slot_mask", slot_mask),))
+
+    # -- cache construction -------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, *args, **kw):
+        """Global-shape cache, with the S axis rounded up to a shard
+        multiple under sequence parallelism (sp_cache_specs rejects
+        indivisible lengths; extra rows sit beyond every valid count).
+        Rounding HERE keeps the scheduler's batch cache and its batch-1
+        slot templates consistent — both size through this method."""
+        if self.sp > 1:
+            max_len = -(-max_len // self.sp) * self.sp
+        return self._model.init_cache(batch, max_len, *args, **kw)
+
+    # -- everything else is the global model -------------------------------
+    def __getattr__(self, name):
+        # only reached for attributes not set on self: init_cache,
+        # readout_fn, fold_plan, hidden, embed, stack, ... — all global-
+        # shape operations that run OUTSIDE the mesh
+        return getattr(self._model, name)

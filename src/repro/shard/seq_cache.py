@@ -1,0 +1,82 @@
+"""Owner-shard KV-cache writes for sequence parallelism.
+
+Under sp > 1 each shard holds rows [i*S_local, (i+1)*S_local) of the
+dense cache's S axis.  Appends arrive with GLOBAL positions (prefill
+chunk offsets, per-slot decode positions), so each shard must keep the
+rows it owns and drop the rest — and it must drop them EXACTLY:
+``dynamic_update_slice`` clamps out-of-range starts, which would smear a
+neighbor's rows over this shard's boundary.  Every write here therefore
+goes through ``.at[...].set(mode="drop")`` with an explicit
+out-of-bounds sentinel index (S_local): a row the shard does not own is
+routed to the sentinel and dropped, bit-exact, whether it is a prefill
+chunk straddling a shard boundary, a decode token, or an inactive
+scheduler slot.
+
+Reads that need the whole sequence (chunked prefill, speculative
+verify) gather the int8 tiles with ``all_gather`` — integer payload on
+the wire, and a gather (not an all-reduce), so both dtype contracts
+(jaxpr drift.collective, HLO integer-all-reduce) hold without new
+exemptions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def shard_slice_info(cache, axis_name: str):
+    """(shard_index, s_local) for this shard's cache slice (trace-time
+    shapes are already local inside shard_map)."""
+    return jax.lax.axis_index(axis_name), cache.k.shape[-3]
+
+
+def owner_append(cache, kq, vq, start, axis_name: str):
+    """Append ``s`` cache-ready rows at global position ``start``
+    (scalar; prefill chunks).  Each shard keeps its own rows."""
+    idx, s_local = shard_slice_info(cache, axis_name)
+    s = kq.shape[1]
+    local = start + jnp.arange(s, dtype=jnp.int32) - idx * s_local
+    local = jnp.where((local >= 0) & (local < s_local), local, s_local)
+    k = cache.k.at[:, local].set(kq, mode="drop")
+    v = cache.v.at[:, local].set(vq, mode="drop")
+    return dataclasses.replace(cache, k=k, v=v)
+
+
+def owner_append_slots(cache, kq, vq, pos_vec, axis_name: str, *,
+                       active=None):
+    """Per-slot append: slot b writes its ``s`` rows at global positions
+    ``pos_vec[b] + [0, s)`` (decode s=1, speculative-verify windows).
+    Inactive slots write nothing (their indices route to the drop
+    sentinel), matching ``KVCache.append_slots``'s cache-neutral
+    contract."""
+    idx, s_local = shard_slice_info(cache, axis_name)
+    b, s = kq.shape[0], kq.shape[1]
+    pos = jnp.asarray(pos_vec, jnp.int32).reshape(-1)
+    local = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None] \
+        - idx * s_local                                           # (B, s)
+    oob = (local < 0) | (local >= s_local)
+    if active is not None:
+        oob = oob | ~active[:, None]
+    local = jnp.where(oob, s_local, local)
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    k = cache.k.at[rows, local].set(kq, mode="drop")
+    v = cache.v.at[rows, local].set(vq, mode="drop")
+    return dataclasses.replace(cache, k=k, v=v)
+
+
+def gathered_dense(cache, axis_name: str, limit: int | None = None):
+    """The GLOBAL dequantized (k, v) view of a sequence-sharded cache.
+
+    All-gathers the stored int8 tiles along the S axis (tiled=True
+    concatenates in shard order — exactly the unsharded layout) and
+    dequantizes with the replicated per-head scales, so the result is
+    bit-identical to the unsharded cache's ``dense_view``.  ``limit``
+    truncates AFTER the gather (a static bound; chunked prefill passes
+    the padded prompt length)."""
+    kg = jax.lax.all_gather(cache.k, axis_name, axis=1, tiled=True)
+    vg = jax.lax.all_gather(cache.v, axis_name, axis=1, tiled=True)
+    if limit is not None:
+        kg, vg = kg[:, :limit], vg[:, :limit]
+    return cache.dequantize(kg, vg)

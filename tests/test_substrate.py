@@ -175,3 +175,196 @@ class TestCompressedCollective:
         step = float(jnp.max(jnp.abs(x))) / 127
         np.testing.assert_allclose(np.asarray(got), np.asarray(x),
                                    atol=step / 2 + 1e-7)
+
+
+class TestCompressedPsumParity:
+    """compressed_psum vs plain jax.lax.psum across shard counts.
+
+    The {2, 4}-way cases need a multi-device host
+    (XLA_FLAGS=--xla_force_host_platform_device_count=4 — the CI
+    ``sharded`` lane); on a single-device run they skip rather than
+    fake the mesh.
+    """
+
+    def _reduce(self, fn, n, x):
+        from repro.dist.compat import make_mesh, shard_map
+
+        mesh = make_mesh((n,), ("d",))
+        P = jax.sharding.PartitionSpec
+        return shard_map(fn, mesh=mesh, in_specs=(P("d"),),
+                         out_specs=P())(x)
+
+    @pytest.mark.parametrize("n", [1, 2, 4])
+    def test_float_sum_parity_vs_plain_psum(self, n):
+        """Quantized-wire sum within n * step/2 of the exact psum: each
+        shard contributes at most half a quantization step of error, and
+        the shared-threshold pmax guarantees every shard uses the SAME
+        step (so the bound is additive, not multiplicative)."""
+        from repro.dist.collectives import compressed_psum
+
+        if jax.device_count() < n:
+            pytest.skip(f"needs {n} devices")
+        x = jnp.asarray(np.random.default_rng(n).normal(size=(n, 64)),
+                        jnp.float32)
+        exact = self._reduce(lambda x: jax.lax.psum(x, "d"), n, x)
+        got = self._reduce(
+            lambda x: compressed_psum(x, "d", mean=False), n, x)
+        step = float(jnp.max(jnp.abs(x))) / 127
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exact),
+                                   atol=n * step / 2 + 1e-7)
+
+    @pytest.mark.parametrize("n", [1, 2])
+    def test_zero_payload_reduces_to_exact_zero(self, n):
+        """All-zero input hits the 1e-8 threshold floor: every quantized
+        payload is 0 and the output is EXACTLY zero (no floor leakage)."""
+        from repro.dist.collectives import compressed_psum
+
+        if jax.device_count() < n:
+            pytest.skip(f"needs {n} devices")
+        x = jnp.zeros((n, 8), jnp.float32)
+        got = self._reduce(
+            lambda x: compressed_psum(x, "d", mean=False), n, x)
+        assert np.all(np.asarray(got) == 0.0)
+
+    def test_nan_shard_cannot_poison_the_reduction(self):
+        """One shard's NaN payload quantizes as 0 and its NaNs stay out
+        of the shared-threshold pmax: the reduction returns the OTHER
+        shard's contribution, finite, within one quantization step."""
+        from repro.dist.collectives import compressed_psum
+
+        if jax.device_count() < 2:
+            pytest.skip("needs 2 devices")
+        good = np.random.default_rng(7).normal(size=(1, 16))
+        x = jnp.asarray(np.concatenate(
+            [good, np.full((1, 16), np.nan)]), jnp.float32)
+        got = np.asarray(self._reduce(
+            lambda x: compressed_psum(x, "d", mean=False), 2, x))
+        assert np.all(np.isfinite(got))
+        step = float(np.max(np.abs(good))) / 127
+        np.testing.assert_allclose(got, good, atol=step + 1e-7)
+
+    def test_integer_fast_path_is_bit_exact(self):
+        """int32 accumulators ride the wire as-is: the reduce is integer
+        addition, bit-identical to the unsharded sum."""
+        from repro.dist.collectives import compressed_psum
+
+        n = min(2, jax.device_count())
+        x = jnp.asarray(np.random.default_rng(3).integers(
+            -(2**20), 2**20, size=(n, 32)), jnp.int32)
+        got = self._reduce(
+            lambda x: compressed_psum(x, "d", mean=False), n, x)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(x).sum(0, keepdims=True))
+        assert got.dtype == jnp.int32
+
+    def test_integer_mean_rejected(self):
+        """mean=True over an integer payload would truncate — refused."""
+        from repro.dist.collectives import compressed_psum
+
+        with pytest.raises(ValueError, match="integer payloads"):
+            compressed_psum(jnp.zeros((4,), jnp.int32), "d", mean=True)
+
+
+class TestShardingSpecs:
+    """cache_specs 'seq' layout + divisibility guards (pure spec-tree
+    logic: no mesh, no devices)."""
+
+    def _cache(self, S):
+        return {"k": jnp.zeros((2, S, 2, 8), jnp.int8),
+                "v": jnp.zeros((2, S, 2, 8), jnp.int8),
+                "k_scale": jnp.zeros((2,), jnp.float32),
+                "pos": jnp.zeros((2,), jnp.int32)}
+
+    def test_seq_layout_shards_kv_sequence_axis(self):
+        from repro.dist.sharding import P, ShardingRules, cache_specs
+
+        rules = ShardingRules(kv_cache_layout="seq", model_axis_size=4)
+        specs = cache_specs(self._cache(32), rules, 4)
+        assert specs["k"] == P(None, "model", None, None)
+        assert specs["v"] == P(None, "model", None, None)
+        assert specs["k_scale"] == P()
+        assert specs["pos"] == P()
+
+    def test_seq_layout_indivisible_falls_back_to_batch(self):
+        """S % model_size != 0: the 'seq' knob degrades to the batch
+        layout instead of emitting an unshardable spec."""
+        from repro.dist.sharding import P, ShardingRules, cache_specs
+
+        rules = ShardingRules(kv_cache_layout="seq", model_axis_size=4)
+        specs = cache_specs(self._cache(30), rules, 4)
+        assert specs["k"] == P("data", None, None, None)
+
+    def test_sp_cache_specs_rejects_indivisible_sequence(self):
+        """The serving wrapper REFUSES indivisible S outright — a silent
+        batch-layout fallback would break the SP attention contract."""
+        from repro.dist.sharding import sp_cache_specs
+
+        with pytest.raises(ValueError, match="not divisible by sp"):
+            sp_cache_specs(self._cache(30), sp=4)
+
+    def test_sp_cache_specs_seq_layout(self):
+        from repro.dist.sharding import P, sp_cache_specs
+
+        specs = sp_cache_specs(self._cache(32), sp=4)
+        assert specs["k"] == P(None, "model", None, None)
+        assert specs["k_scale"] == P()
+
+    def test_multipod_batch_axis_and_divisibility(self):
+        """multipod(): batch rides ('pod', 'data'); the model-axis
+        divisibility guard still replicates indivisible params."""
+        from repro.dist.sharding import (P, ShardingRules, batch_specs,
+                                         multipod, param_specs)
+
+        rules = multipod(ShardingRules(model_axis_size=16))
+        assert rules.act_batch == ("pod", "data")
+        bspec = batch_specs({"tokens": jnp.zeros((4, 8), jnp.int32)}, rules)
+        assert bspec["tokens"] == P(("pod", "data"), None)
+        pspec = param_specs(None, {"w": jnp.zeros((8, 32)),
+                                   "odd": jnp.zeros((8, 30))}, rules)
+        assert pspec["w"] == P(None, "model")
+        assert pspec["odd"] == P()   # 30 % 16 != 0 -> replicate
+
+
+class TestConstrainActivation:
+    """constrain_activation must be a no-op — never a raise — in traced
+    contexts without installed rules and inside shard_map bodies."""
+
+    def test_traced_without_rules_is_identity(self):
+        from repro.dist import constraints
+
+        prev = constraints.installed()
+        constraints.install(None)
+        try:
+            @jax.jit
+            def f(x):
+                return constraints.constrain_activation(x, carry=True)
+
+            x = jnp.ones((2, 4, 8), jnp.float32)
+            np.testing.assert_array_equal(np.asarray(f(x)), np.asarray(x))
+        finally:
+            constraints.install(prev)
+
+    def test_inside_shard_map_stands_down(self):
+        """Rules installed + manual mesh axes: the constraint detects the
+        shard_map body and passes through instead of erroring on
+        already-manual axes."""
+        from repro.dist import constraints
+        from repro.dist.compat import make_mesh, shard_map
+        from repro.dist.sharding import ShardingRules
+
+        prev = constraints.installed()
+        constraints.install(ShardingRules(act_batch="d", act_seq="d",
+                                          tensor="d", model_axis_size=1))
+        try:
+            mesh = make_mesh((1,), ("d",))
+            P = jax.sharding.PartitionSpec
+
+            def body(x):
+                return constraints.constrain_activation(x, carry=True)
+
+            f = jax.jit(shard_map(body, mesh=mesh, in_specs=(P(),),
+                                  out_specs=P()))
+            x = jnp.ones((2, 4, 8), jnp.float32)
+            np.testing.assert_array_equal(np.asarray(f(x)), np.asarray(x))
+        finally:
+            constraints.install(prev)
